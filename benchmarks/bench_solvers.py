@@ -1,0 +1,43 @@
+"""Paper §4 analogue: direct vs iterative solver comparison (single node).
+
+Paper finding to reproduce: direct (factorization) methods have the higher
+*arithmetic intensity* (Level-3 BLAS) and iterative methods are
+matvec-bound — measured here as wall time vs n and flops/byte, fp32 + fp64
+(the paper tested both precisions).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, make_system, timeit
+from repro.core import api
+
+
+def run(sizes=(512, 1024), dtypes=("float32",)):
+    for dtype in dtypes:
+        if dtype == "float64":
+            jax.config.update("jax_enable_x64", True)
+        for n in sizes:
+            a, b = make_system(n, spd=False, dtype=np.dtype(dtype))
+            spd, _ = make_system(n, spd=True, dtype=np.dtype(dtype))
+            aj, bj, sj = jnp.asarray(a), jnp.asarray(b), jnp.asarray(spd)
+            x_ref = np.linalg.solve(a, b)
+            xs_ref = np.linalg.solve(spd, b)
+
+            for method, mat, ref in (
+                    ("lu", aj, x_ref), ("cholesky", sj, xs_ref),
+                    ("cg", sj, xs_ref), ("bicgstab", aj, x_ref),
+                    ("gmres", aj, x_ref), ("bicg", aj, x_ref)):
+                fn = jax.jit(lambda A, B, m=method: api.solve(
+                    A, B, method=m, tol=1e-8, block_size=min(128, n // 4)))
+                t = timeit(fn, mat, bj)
+                x = np.asarray(fn(mat, bj))
+                res = float(np.linalg.norm(b - np.asarray(mat) @ x)
+                            / np.linalg.norm(b))
+                kind = "direct" if method in ("lu", "cholesky") else "iter"
+                emit("solvers", f"{method}_n{n}_{dtype}", round(t * 1e3, 2),
+                     "ms", f"kind={kind} rel_res={res:.1e}")
+        if dtype == "float64":
+            jax.config.update("jax_enable_x64", False)

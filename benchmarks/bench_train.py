@@ -1,0 +1,53 @@
+"""LM-stack benchmark: measured train-step throughput (reduced configs,
+CPU) + modeled full-config per-step time on the v5e mesh from the dry-run
+artifacts (if present in experiments/dryrun)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+import jax
+
+from benchmarks.common import emit, timeit
+from repro.configs import get_config
+from repro.configs.base import ShapeConfig
+from repro.launch.mesh import solver_mesh
+from repro.models import registry
+from repro.train import sharding as sh
+from repro.train import steps as S
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+
+def run(archs=("qwen3-1.7b", "mamba2-780m")):
+    mesh = solver_mesh()
+    shape = ShapeConfig("bench", 128, 8, "train")
+    for arch in archs:
+        cfg = get_config(arch, reduced=True)
+        step_fn, sspecs, bspecs, opt = S.make_train_step(
+            cfg, mesh, shape, donate=False)
+        state = S.init_train_state(cfg, opt, jax.random.key(0))
+        state = jax.device_put(state, sh.shardings_of(sspecs, mesh))
+        batch = jax.device_put(
+            registry.make_batch(cfg, shape.global_batch, shape.seq_len),
+            sh.shardings_of(bspecs, mesh))
+        t = timeit(lambda s, b: step_fn(s, b)[1]["loss"], state, batch)
+        tok = shape.global_batch * shape.seq_len
+        emit("train", f"{arch}_reduced_step", round(t * 1e3, 1), "ms",
+             f"{tok / t:.0f} tok/s (CPU, reduced cfg)")
+
+    # modeled full-scale step times from dry-run artifacts
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if r.get("kind") != "train" or r.get("tag"):
+            continue
+        rl = r["roofline"]
+        t_bound = max(rl["t_compute_s"], rl["t_memory_s"],
+                      rl["t_collective_s"])
+        emit("train_modeled",
+             f"{r['arch']}_{r['shape']}_{r['mesh']}",
+             f"{t_bound:.3f}", "s/step (v5e roofline)",
+             f"bottleneck={rl['bottleneck']} mfu_bound={rl['mfu_bound']:.3f}")

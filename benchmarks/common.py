@@ -1,0 +1,37 @@
+"""Shared benchmark utilities: timing, CSV emission, system builders."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+ROWS: list[tuple] = []
+
+
+def emit(bench: str, name: str, value, unit: str, note: str = ""):
+    ROWS.append((bench, name, value, unit, note))
+    print(f"{bench},{name},{value},{unit},{note}", flush=True)
+
+
+def timeit(fn, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall seconds of fn(*args) with block_until_ready."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def make_system(n: int, *, spd: bool, dtype=np.float32, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    a = rng.standard_normal((n, n)).astype(dtype)
+    if spd:
+        a = (a @ a.T / n + 4.0 * np.eye(n)).astype(dtype)
+    else:
+        a = (a + n * np.eye(n)).astype(dtype)
+    b = rng.standard_normal(n).astype(dtype)
+    return a, b

@@ -1,0 +1,62 @@
+"""Benchmark entry point — one section per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick]
+
+Sections:
+  solvers      — §4 direct-vs-iterative method table (wall + residual)
+  scaling      — Figs. 3/4: speedup vs node count (modeled v5e + emulated)
+  local_accel  — §4 CUDA↔ATLAS ablation (Pallas↔jnp correctness + model)
+  train        — LM-stack step throughput + modeled full-scale cells
+"""
+from __future__ import annotations
+
+import argparse
+import csv
+import os
+import sys
+import traceback
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller sizes / skip subprocess scaling runs")
+    ap.add_argument("--out", default=os.path.join(
+        os.path.dirname(__file__), "..", "experiments", "bench.csv"))
+    args = ap.parse_args(argv)
+
+    from benchmarks import (bench_local_accel, bench_scaling, bench_solvers,
+                            bench_train)
+    from benchmarks.common import ROWS
+
+    failures = []
+
+    def section(name, fn, *a, **kw):
+        print(f"== {name} ==", flush=True)
+        try:
+            fn(*a, **kw)
+        except Exception as e:
+            failures.append((name, repr(e)))
+            traceback.print_exc()
+
+    section("solvers", bench_solvers.run,
+            sizes=(256, 512) if args.quick else (512, 1024),
+            dtypes=("float32",) if args.quick else ("float32", "float64"))
+    section("local_accel", bench_local_accel.run)
+    section("train", bench_train.run)
+    if not args.quick:
+        section("scaling", bench_scaling.run, n=2048,
+                device_counts=(1, 2, 4, 8, 16))
+
+    os.makedirs(os.path.dirname(os.path.abspath(args.out)), exist_ok=True)
+    with open(args.out, "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(["bench", "name", "value", "unit", "note"])
+        w.writerows(ROWS)
+    print(f"wrote {len(ROWS)} rows to {args.out}")
+    if failures:
+        raise SystemExit(f"benchmark sections failed: {failures}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from repro.analysis import hlo, roofline  # noqa: F401
+from repro.analysis.hlo import HloCost, analyze_hlo  # noqa: F401
+from repro.analysis.roofline import RooflineReport  # noqa: F401

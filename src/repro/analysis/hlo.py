@@ -1,0 +1,343 @@
+"""While-aware HLO cost model: FLOPs, HBM traffic, collective bytes.
+
+``compiled.cost_analysis()`` on XLA counts a ``while`` body ONCE, so for
+scanned-layer models (all of ours — depth-independent HLO is a design
+requirement) it under-reports by ~the layer count.  This parser walks the
+optimized post-SPMD HLO text and:
+
+* multiplies every ``while`` body's cost by its static trip count
+  (recovered from the loop-condition's comparison constant — exact for
+  ``lax.scan``/``fori_loop``; data-dependent ``while_loop`` falls back to
+  the max constant found, i.e. ``maxiter``);
+* counts ``dot`` FLOPs as 2·|result|·K (K = contracted extent, from the
+  operand's parsed shape);
+* models HBM traffic as Σ (operand bytes + result bytes) over *top-level*
+  instructions (fusions are single HBM round-trips — their internals live
+  in registers/VMEM; bitcast/tuple/GTE are views and cost 0);
+* sums collective payloads per kind (all-reduce / all-gather /
+  reduce-scatter / all-to-all / collective-permute) with the participating
+  group size, so the roofline layer can apply ring wire factors.
+
+Everything is per-device (post-SPMD partitioning), matching roofline terms.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "f8e4m3b11fnuz": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+_VIEW_OPS = {"bitcast", "get-tuple-element", "tuple", "parameter",
+             "constant", "iota", "after-all", "partition-id", "replica-id",
+             "rng-bit-generator", "bitcast-convert"}
+
+_COLLECTIVES = {"all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute", "all-reduce-start", "all-gather-start",
+                "collective-permute-start"}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> float:
+    """Bytes of a (possibly tuple) HLO type string."""
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        size = _DTYPE_BYTES.get(dt)
+        if size is None:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * size
+    return total
+
+
+def _shape_dims(type_str: str) -> list[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    dims = m.group(2)
+    return [int(d) for d in dims.split(",")] if dims else []
+
+
+def _elems(type_str: str) -> int:
+    n = 1
+    for d in _shape_dims(type_str):
+        n *= d
+    return n
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    type_str: str
+    opcode: str
+    operands: list[str]
+    attrs: str
+    args_raw: str = ""
+
+
+def _parse_type_and_rest(s: str) -> tuple[str, str]:
+    """Split '<type> <opcode>(...)' with bracket-aware type parsing."""
+    s = s.strip()
+    if s.startswith("("):
+        depth = 0
+        for i, ch in enumerate(s):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    return s[:i + 1], s[i + 1:].strip()
+    i = s.find(" ")
+    return s[:i], s[i + 1:].strip()
+
+
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*)$")
+_OPCODE_RE = re.compile(r"^([\w\-]+)\(")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+
+def parse_computations(txt: str) -> dict[str, list[Instr]]:
+    comps: dict[str, list[Instr]] = {}
+    current = None
+    entry = None
+    for line in txt.splitlines():
+        if line and not line.startswith(" ") and "{" in line and "(" in line:
+            m = re.match(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(", line)
+            if m:
+                current = m.group(2)
+                comps[current] = []
+                if m.group(1):
+                    entry = current
+            continue
+        if line.startswith("}"):
+            current = None
+            continue
+        if current is None:
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, rest = m.group(1), m.group(2)
+        type_str, op_part = _parse_type_and_rest(rest)
+        mo = _OPCODE_RE.match(op_part)
+        if not mo:
+            continue
+        opcode = mo.group(1)
+        # operands: names inside the top-level parens
+        depth, j0, j1 = 0, op_part.find("("), len(op_part)
+        for j in range(j0, len(op_part)):
+            if op_part[j] == "(":
+                depth += 1
+            elif op_part[j] == ")":
+                depth -= 1
+                if depth == 0:
+                    j1 = j
+                    break
+        args_raw = op_part[j0:j1 + 1]
+        operands = _OPERAND_RE.findall(args_raw)
+        attrs = op_part[j1 + 1:]
+        comps[current].append(Instr(name, type_str, opcode, operands, attrs,
+                                    args_raw))
+    comps["__entry__"] = comps.get(entry, [])
+    return comps
+
+
+_CONST_RE = re.compile(r"constant\((-?\d+)\)")
+
+
+
+@dataclasses.dataclass
+class HloCost:
+    flops: float = 0.0
+    traffic_bytes: float = 0.0
+    collective_bytes: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+    collective_counts: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(int))
+    group_sizes: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(float))   # kind -> bytes*n/(n) info
+
+    def add(self, other: "HloCost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.traffic_bytes += other.traffic_bytes * mult
+        for k, v in other.collective_bytes.items():
+            self.collective_bytes[k] += v * mult
+        for k, v in other.collective_counts.items():
+            self.collective_counts[k] += int(v * mult)
+        for k, v in other.group_sizes.items():
+            self.group_sizes[k] = max(self.group_sizes[k], v)
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return sum(self.collective_bytes.values())
+
+
+_GROUPS_SHAPE_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+
+
+def _group_size(attrs: str) -> int:
+    m = _GROUPS_SHAPE_RE.search(attrs)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(attrs)
+    if m:
+        return len(m.group(1).split(","))
+    return 2
+
+
+class _Analyzer:
+    def __init__(self, comps: dict[str, list[Instr]]):
+        self.comps = comps
+        self.memo: dict[str, HloCost] = {}
+        self.shapes: dict[str, dict[str, str]] = {}
+        for cname, instrs in comps.items():
+            self.shapes[cname] = {i.name: i.type_str for i in instrs}
+
+    def _fusion_traffic(self, ins: Instr, cname: str, result_bytes: float,
+                        operand_bytes_list: list[float]) -> float:
+        """Traffic of a fusion, in-place-update aware.
+
+        Scan bodies stash per-layer values with dynamic-update-slice into a
+        stacked carry: XLA aliases the buffer in place, so real traffic is
+        the *slice*, not the whole carry.  Symmetrically, dynamic-slice
+        reads touch only the slice.  Without this correction a depth-L scan
+        over-counts the stacked buffers L×.
+        """
+        m = re.search(r"calls=%?([\w.\-]+)", ins.attrs)
+        called = self.comps.get(m.group(1), []) if m else []
+        ops_set = {i.opcode for i in called}
+        total = result_bytes + sum(operand_bytes_list)
+        if "dynamic-update-slice" in ops_set:
+            # update bytes = the DUS update operand (from the called comp)
+            upd = 0.0
+            local = {i.name: i.type_str for i in called}
+            for ci in called:
+                if ci.opcode == "dynamic-update-slice" and len(ci.operands) > 1:
+                    upd += _shape_bytes(local.get(ci.operands[1], ""))
+            # drop the aliased big operand(s) and the full-size result;
+            # count: small operands + update read + update write
+            small_ops = sum(b for b in operand_bytes_list
+                            if b < result_bytes)
+            return small_ops + 2.0 * upd
+        if ("dynamic-slice" in ops_set and "reduce" not in ops_set
+                and "dot" not in ops_set):
+            # slicing reads: cap each over-sized operand at the result size
+            capped = sum(min(b, result_bytes) for b in operand_bytes_list)
+            return result_bytes + capped
+        return total
+
+    def _dot_flops(self, ins: Instr, cname: str) -> float:
+        out_elems = _elems(ins.type_str)
+        m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.attrs)
+        cdims = [int(d) for d in m.group(1).split(",")] if m and m.group(1) \
+            else []
+        k = 1
+        if ins.operands:
+            lhs_type = self.shapes[cname].get(ins.operands[0], "")
+            dims = _shape_dims(lhs_type)
+            for cd in cdims:
+                if cd < len(dims):
+                    k *= dims[cd]
+        return 2.0 * out_elems * max(k, 1)
+
+    def comp_cost(self, cname: str) -> HloCost:
+        if cname in self.memo:
+            return self.memo[cname]
+        cost = HloCost()
+        self.memo[cname] = cost       # guards recursion
+        for ins in self.comps.get(cname, []):
+            op = ins.opcode
+            if op in _VIEW_OPS:
+                continue
+            if op == "while":
+                body = re.search(r"body=%?([\w.\-]+)", ins.attrs)
+                cond = re.search(r"condition=%?([\w.\-]+)", ins.attrs)
+                trip = 1
+                if cond:
+                    trip = self._cond_trip(cond.group(1))
+                if body:
+                    cost.add(self.comp_cost(body.group(1)), mult=trip)
+                continue
+            if op in ("call", "async-start"):
+                m = re.search(r"to_apply=%?([\w.\-]+)", ins.attrs)
+                if m:
+                    cost.add(self.comp_cost(m.group(1)))
+                continue
+            if op == "conditional":
+                for m in re.finditer(r"(?:branch_computations=\{([^}]*)\}|"
+                                     r"(?:true|false)_computation=%?([\w.\-]+))",
+                                     ins.attrs):
+                    names = (m.group(1) or m.group(2) or "").replace("%", "")
+                    for nm in filter(None, names.split(",")):
+                        cost.add(self.comp_cost(nm.strip()))
+                continue
+            result_bytes = _shape_bytes(ins.type_str)
+            operand_bytes_list = [
+                _shape_bytes(self.shapes[cname].get(o, ""))
+                for o in ins.operands]
+            operand_bytes = sum(operand_bytes_list)
+            if op in _COLLECTIVES:
+                kind = op.replace("-start", "")
+                n = _group_size(ins.attrs)
+                payload = result_bytes if kind != "reduce-scatter" \
+                    else operand_bytes
+                cost.collective_bytes[kind] += payload
+                cost.collective_counts[kind] += 1
+                cost.group_sizes[kind] = max(cost.group_sizes[kind], n)
+                cost.traffic_bytes += result_bytes + operand_bytes
+                continue
+            if op == "fusion":
+                cost.traffic_bytes += self._fusion_traffic(
+                    ins, cname, result_bytes, operand_bytes_list)
+                cost.flops += _elems(ins.type_str)
+                continue
+            if op in ("dynamic-update-slice",):
+                # top-level in-place update: traffic = 2 × update slice
+                upd = (_shape_bytes(self.shapes[cname].get(ins.operands[1], ""))
+                       if len(ins.operands) > 1 else result_bytes)
+                cost.traffic_bytes += 2.0 * upd
+                continue
+            if op == "dot":
+                cost.flops += self._dot_flops(ins, cname)
+            elif op == "convolution":
+                # rough: 2 * out_elems * (kernel elems)
+                kshape = (self.shapes[cname].get(ins.operands[1], "")
+                          if len(ins.operands) > 1 else "")
+                cost.flops += 2.0 * _elems(ins.type_str) * max(_elems(kshape), 1)
+            elif op in ("fusion", "reduce", "scatter", "gather", "copy",
+                        "convert", "transpose", "reshape", "broadcast",
+                        "select", "add", "multiply", "subtract", "divide",
+                        "exponential", "sort", "pad", "slice",
+                        "dynamic-slice", "dynamic-update-slice", "compare",
+                        "rsqrt", "tanh", "concatenate", "reverse", "select-and-scatter",
+                        "reduce-window", "map", "clamp", "maximum", "minimum"):
+                # ~1 flop per output element for elementwise-ish work
+                cost.flops += _elems(ins.type_str)
+            cost.traffic_bytes += result_bytes + operand_bytes
+        return cost
+
+    def _cond_trip(self, cond_name: str) -> int:
+        best = 1
+        for ins in self.comps.get(cond_name, []):
+            if ins.opcode != "constant":
+                continue
+            m = re.match(r"\((-?\d+)\)", ins.args_raw or "")
+            if m:
+                best = max(best, int(m.group(1)))
+        return best
+
+
+def analyze_hlo(txt: str) -> HloCost:
+    comps = parse_computations(txt)
+    az = _Analyzer(comps)
+    return az.comp_cost("__entry__")

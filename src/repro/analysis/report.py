@@ -1,0 +1,84 @@
+"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from the artifacts in
+experiments/dryrun/.
+
+    PYTHONPATH=src python -m repro.analysis.report [--dir experiments/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def _fmt_s(x):
+    if x == 0:
+        return "0"
+    if x >= 0.01:
+        return f"{x:.2f}"
+    return f"{x:.2e}"
+
+
+def load(dirpath: str, tag: str | None = "") -> list[dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dirpath, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if tag is not None and r.get("tag", "") != tag:
+            continue
+        rows.append(r)
+    return rows
+
+
+def dryrun_table(rows: list[dict]) -> str:
+    out = ["| arch | shape | mesh | compile | GiB/device | arg GiB | "
+           "collective payload GB | status |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        mem = r["memory"]
+        coll = sum(r["hlo_cost"].get("collective_bytes", {}).values()) / 1e9
+        gib = mem.get("per_device_total_gib",
+                      (mem.get("argument_bytes", 0)
+                       + mem.get("temp_bytes", 0)) / 2**30)
+        fits = "fits" if gib <= 16 else f"**>16 GiB**"
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r.get('compile_s', '—')}s | {gib:.2f} "
+            f"| {mem.get('argument_bytes', 0) / 2**30:.2f} "
+            f"| {coll:.1f} | {fits} |")
+    return "\n".join(out)
+
+
+def roofline_table(rows: list[dict]) -> str:
+    out = ["| arch | shape | mesh | t_compute | t_memory | t_collective | "
+           "bottleneck | useful ratio | MFU bound |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        rl = r["roofline"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {_fmt_s(rl['t_compute_s'])} | {_fmt_s(rl['t_memory_s'])} "
+            f"| {_fmt_s(rl['t_collective_s'])} | {rl['bottleneck']} "
+            f"| {rl.get('useful_ratio', 0):.3f} "
+            f"| {rl.get('mfu_bound', 0):.4f} |")
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default=os.path.join(
+        os.path.dirname(__file__), "..", "..", "..", "experiments",
+        "dryrun"))
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+    rows = load(args.dir, tag=args.tag)
+    lm = [r for r in rows if r.get("kind") != "solver"]
+    sv = [r for r in rows if r.get("kind") == "solver"]
+    print("## Dry-run\n")
+    print(dryrun_table(lm + sv))
+    print("\n## Roofline\n")
+    print(roofline_table(lm + sv))
+
+
+if __name__ == "__main__":
+    main()

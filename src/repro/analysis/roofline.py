@@ -1,0 +1,142 @@
+"""Three-term roofline model for TPU v5e (the target hardware).
+
+    compute term    = HLO_FLOPs / peak_FLOP/s            (per chip)
+    memory term     = HLO_bytes / HBM_bw                 (per chip)
+    collective term = Σ_kind wire_bytes(kind) / link_bw  (per chip)
+
+Sources: FLOPs / traffic / collective payloads come from the while-aware
+HLO parser (``repro.analysis.hlo``) applied to the compiled dry-run
+artifact; ``compiled.cost_analysis()`` is recorded as a cross-check only
+(it counts scan bodies once — see hlo.py docstring).
+
+Wire factors (bidirectional ring on the ICI torus; n = group size):
+    all-reduce       2·(n−1)/n · payload
+    all-gather       (n−1)/n · payload      (payload = gathered result)
+    reduce-scatter   (n−1)/n · payload      (payload = pre-scatter operand)
+    all-to-all       (n−1)/n · payload
+    collective-permute  1 · payload
+
+MODEL_FLOPS (the "useful flops" yardstick) = 6·N·D for training (N =
+params, D = tokens; MoE: N_active), 2·N·D for inference forward — the
+ratio MODEL_FLOPS / HLO_FLOPs exposes remat/redundancy waste.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.analysis.hlo import HloCost
+
+# ---- TPU v5e hardware constants (per chip) --------------------------------
+PEAK_FLOPS_BF16 = 197e12      # FLOP/s
+HBM_BW = 819e9                # B/s
+ICI_BW = 50e9                 # B/s per link (≈ one direction)
+
+_WIRE_FACTORS = {
+    "all-reduce": lambda n: 2.0 * (n - 1) / n,
+    "all-gather": lambda n: (n - 1) / n,
+    "reduce-scatter": lambda n: (n - 1) / n,
+    "all-to-all": lambda n: (n - 1) / n,
+    "collective-permute": lambda n: 1.0,
+}
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    name: str
+    chips: int
+    # per-chip, per-step
+    hlo_flops: float
+    hlo_bytes: float
+    wire_bytes: float
+    model_flops_global: float            # 6·N·D (or 2·N·D serve)
+    xla_flops: float = 0.0               # cost_analysis cross-check
+    xla_bytes: float = 0.0
+    collective_breakdown: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def t_compute(self) -> float:
+        return self.hlo_flops / PEAK_FLOPS_BF16
+
+    @property
+    def t_memory(self) -> float:
+        return self.hlo_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.wire_bytes / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def model_flops_per_chip(self) -> float:
+        return self.model_flops_global / self.chips
+
+    @property
+    def useful_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs (per chip)."""
+        return (self.model_flops_per_chip / self.hlo_flops
+                if self.hlo_flops else 0.0)
+
+    @property
+    def mfu_bound(self) -> float:
+        """Upper bound on MFU implied by the dominant term: useful flops
+        per second at the roofline, over peak."""
+        if self.t_bound == 0:
+            return 0.0
+        return (self.model_flops_per_chip / self.t_bound) / PEAK_FLOPS_BF16
+
+    def row(self) -> dict:
+        return {
+            "name": self.name,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "useful_ratio": self.useful_ratio,
+            "mfu_bound": self.mfu_bound,
+        }
+
+
+def wire_bytes(cost: HloCost) -> tuple[float, dict]:
+    total, detail = 0.0, {}
+    for kind, payload in cost.collective_bytes.items():
+        n = max(int(cost.group_sizes.get(kind, 2)), 2)
+        factor = _WIRE_FACTORS.get(kind, lambda n: 1.0)(n)
+        w = payload * factor
+        detail[kind] = {"payload": payload, "group": n, "wire": w,
+                        "count": cost.collective_counts.get(kind, 0)}
+        total += w
+    return total, detail
+
+
+def roofline(name: str, cost: HloCost, *, chips: int,
+             model_flops_global: float, xla_flops: float = 0.0,
+             xla_bytes: float = 0.0) -> RooflineReport:
+    wb, detail = wire_bytes(cost)
+    return RooflineReport(
+        name=name, chips=chips, hlo_flops=cost.flops,
+        hlo_bytes=cost.traffic_bytes, wire_bytes=wb,
+        model_flops_global=model_flops_global,
+        xla_flops=xla_flops, xla_bytes=xla_bytes,
+        collective_breakdown=detail)
+
+
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS = 6·N·D train / 2·N·D forward / 2·N per decoded token."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        d = shape.global_batch * shape.seq_len
+        return 6.0 * n * d
+    if shape.kind == "prefill":
+        d = shape.global_batch * shape.seq_len
+        return 2.0 * n * d
+    # decode: one token per sequence per step
+    return 2.0 * n * shape.global_batch

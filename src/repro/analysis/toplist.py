@@ -1,0 +1,75 @@
+"""Hillclimb diagnostics: top HBM-traffic and collective instructions of a
+compiled cell, with loop multiplicities — the 'profile' of the dry-run
+methodology (no real hardware, so the lowered IR is the profiler).
+"""
+from __future__ import annotations
+
+import re
+
+from repro.analysis import hlo as H
+
+
+def top_contributors(txt: str, n: int = 20):
+    comps = H.parse_computations(txt)
+    az = H._Analyzer(comps)
+    rows = []
+
+    def walk(cname, mult):
+        for ins in comps.get(cname, []):
+            op = ins.opcode
+            if op in H._VIEW_OPS:
+                continue
+            if op == "while":
+                body = re.search(r"body=%?([\w.\-]+)", ins.attrs)
+                cond = re.search(r"condition=%?([\w.\-]+)", ins.attrs)
+                trip = az._cond_trip(cond.group(1)) if cond else 1
+                if body:
+                    walk(body.group(1), mult * trip)
+                continue
+            if op == "call":
+                m = re.search(r"to_apply=%?([\w.\-]+)", ins.attrs)
+                if m:
+                    walk(m.group(1), mult)
+                continue
+            rb = H._shape_bytes(ins.type_str)
+            obl = [H._shape_bytes(az.shapes[cname].get(o, ""))
+                   for o in ins.operands]
+            if op == "fusion":
+                traffic = az._fusion_traffic(ins, cname, rb, obl)
+            elif op == "dynamic-update-slice":
+                traffic = 2 * (H._shape_bytes(
+                    az.shapes[cname].get(ins.operands[1], ""))
+                    if len(ins.operands) > 1 else rb)
+            else:
+                traffic = rb + sum(obl)
+            kind = op if op in H._COLLECTIVES else None
+            rows.append({
+                "traffic": traffic * mult, "mult": mult, "op": op,
+                "type": ins.type_str[:48], "comp": cname[:40],
+                "collective": kind,
+                "payload": (rb if kind and kind != "reduce-scatter"
+                            else sum(obl) if kind else 0) * mult,
+                "meta": (re.search(r'op_name="([^"]+)"', ins.attrs or "")
+                         or [None]) and (
+                    (re.search(r'op_name="([^"]+)"', ins.attrs or "").group(1)
+                     [:80]) if re.search(r'op_name="', ins.attrs or "")
+                    else ""),
+            })
+
+    walk("__entry__", 1)
+    by_traffic = sorted(rows, key=lambda r: -r["traffic"])[:n]
+    colls = sorted((r for r in rows if r["collective"]),
+                   key=lambda r: -r["payload"])[:n]
+    return by_traffic, colls
+
+
+def print_top(txt: str, n: int = 20):
+    by_traffic, colls = top_contributors(txt, n)
+    print(f"--- top {n} HBM-traffic instructions (bytes × loop mult) ---")
+    for r in by_traffic:
+        print(f"{r['traffic'] / 2**30:9.2f} GiB x{r['mult']:<5d} "
+              f"{r['op']:22s} {r['type']:48s} {r['meta'][:60]}")
+    print(f"--- top {n} collectives (payload bytes × loop mult) ---")
+    for r in colls:
+        print(f"{r['payload'] / 2**30:9.2f} GiB x{r['mult']:<5d} "
+              f"{r['collective']:20s} {r['type']:48s} {r['meta'][:60]}")

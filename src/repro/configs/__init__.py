@@ -1,0 +1,3 @@
+from repro.configs.base import (  # noqa: F401
+    ARCH_IDS, SHAPES, SUBQUADRATIC, ModelConfig, ShapeConfig,
+    get_config, registry, shape_applicable)

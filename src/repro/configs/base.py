@@ -1,0 +1,168 @@
+"""Config system: one frozen dataclass per architecture + the shape sets.
+
+Every assigned architecture gets a ``configs/<id>.py`` defining ``CONFIG``
+(the exact published configuration) and ``REDUCED`` (a tiny same-family
+config for CPU smoke tests).  ``registry()`` resolves ``--arch <id>``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                  # dense | moe | ssm | hybrid | encdec | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0            # 0 → d_model // num_heads
+    qk_norm: bool = False
+    rope_theta: float = 10_000.0
+    rms_eps: float = 1e-6
+    tie_embeddings: bool = False
+    act: str = "silu"            # silu (SwiGLU) | gelu (plain MLP)
+    norm: str = "rms"            # rms | layer
+    # --- MoE ---------------------------------------------------------------
+    num_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.01
+    # --- SSM (mamba2 / SSD) --------------------------------------------------
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_conv_width: int = 4
+    ssm_chunk: int = 256
+    # --- hybrid / local attention -------------------------------------------
+    window: Optional[int] = None          # sliding-window attention size
+    # --- encoder-decoder ------------------------------------------------------
+    enc_layers: int = 0
+    dec_target_len: int = 448             # whisper max_target_positions
+    # --- VLM ------------------------------------------------------------------
+    cross_attn_period: int = 0            # every k-th layer cross-attends
+    img_tokens: int = 0                   # stub patch-embedding length
+    # --- numerics --------------------------------------------------------------
+    param_dtype: str = "bfloat16"
+    act_dtype: str = "bfloat16"
+    vocab_pad_multiple: int = 256
+    # --- training ---------------------------------------------------------------
+    remat: bool = True
+    z_loss: float = 1e-4
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or (self.d_model // max(self.num_heads, 1))
+
+    @property
+    def padded_vocab(self) -> int:
+        m = self.vocab_pad_multiple
+        return -(-self.vocab_size // m) * m
+
+    @property
+    def d_inner(self) -> int:          # SSM inner width
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+    def param_count(self) -> int:
+        """Analytic parameter count N (for MODEL_FLOPS = 6·N·D)."""
+        d, f, v = self.d_model, self.d_ff, self.padded_vocab
+        hd = self.resolved_head_dim
+        emb = v * d * (1 if self.tie_embeddings else 2)
+        attn = d * hd * self.num_heads + 2 * d * hd * self.num_kv_heads \
+            + hd * self.num_heads * d
+        if self.act == "silu":
+            ffn_dense = 3 * d * f
+        else:
+            ffn_dense = 2 * d * f
+        per_layer = attn + ffn_dense + 2 * d
+        if self.family == "moe":
+            ffn = self.num_experts * (3 * d * f) + d * self.num_experts
+            per_layer = attn + ffn + 2 * d
+        if self.family == "ssm":
+            di, n, h = self.d_inner, self.ssm_state, self.ssm_heads
+            proj_in = d * (2 * di + 2 * n + h)
+            per_layer = proj_in + di * d + self.ssm_conv_width * (di + 2 * n) \
+                + 2 * h + di + 2 * d
+        if self.family == "hybrid":
+            di, n, h = self.d_inner, self.ssm_state, self.ssm_heads
+            ssm = d * (2 * di + 2 * n + h) + di * d \
+                + self.ssm_conv_width * (di + 2 * n) + 2 * h + di
+            per_layer = attn + ssm + 3 * d * f + 4 * d
+        n_layers = self.num_layers
+        total = emb + n_layers * per_layer + d
+        if self.family == "encdec":
+            # learned encoder positions (1500 frames) + enc stack + dec
+            # stack of (self-attn + cross-attn + mlp)
+            enc = self.enc_layers * (attn + ffn_dense + 2 * d)
+            dec = n_layers * (2 * attn + ffn_dense + 3 * d)
+            total = emb + 1500 * d + enc + dec + d
+        if self.family == "vlm" and self.cross_attn_period:
+            # every period-th layer is REPLACED by a gated cross-attn layer
+            n_cross = n_layers // self.cross_attn_period
+            n_self = n_layers - n_cross
+            cross_layer = attn + ffn_dense + 2 * d + 2
+            total = emb + n_self * per_layer + n_cross * cross_layer + d
+        return int(total)
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: top_k of num_experts)."""
+        if self.family != "moe" or not self.num_experts:
+            return self.param_count()
+        d, f = self.d_model, self.d_ff
+        dense_ffn = self.num_experts * (3 * d * f)
+        active_ffn = self.top_k * (3 * d * f)
+        return int(self.param_count()
+                   - self.num_layers * (dense_ffn - active_ffn))
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                    # train | prefill | decode
+
+
+SHAPES: dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524_288, 1, "decode"),
+}
+
+ARCH_IDS = [
+    "qwen3-1.7b", "codeqwen1.5-7b", "tinyllama-1.1b", "minicpm-2b",
+    "whisper-small", "mamba2-780m", "dbrx-132b", "kimi-k2-1t-a32b",
+    "hymba-1.5b", "llama-3.2-vision-90b",
+]
+
+# pure full-attention archs skip long_500k (assignment rule; DESIGN.md §5)
+SUBQUADRATIC = {"mamba2-780m", "hymba-1.5b"}
+
+
+def shape_applicable(arch_id: str, shape_name: str) -> bool:
+    if shape_name == "long_500k":
+        return arch_id in SUBQUADRATIC
+    return True
+
+
+def _module_name(arch_id: str) -> str:
+    return arch_id.replace("-", "_").replace(".", "_")
+
+
+def get_config(arch_id: str, reduced: bool = False) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{_module_name(arch_id)}")
+    return mod.REDUCED if reduced else mod.CONFIG
+
+
+def registry() -> dict[str, ModelConfig]:
+    return {a: get_config(a) for a in ARCH_IDS}

@@ -1,0 +1,16 @@
+"""dbrx-132b [moe] — 16 experts top-4, fine-grained. [hf:databricks/dbrx-base]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="dbrx-132b", family="moe",
+    num_layers=40, d_model=6144, num_heads=48, num_kv_heads=8,
+    head_dim=128, d_ff=10_752, vocab_size=100_352,
+    num_experts=16, top_k=4, rope_theta=500_000.0,
+)
+
+REDUCED = ModelConfig(
+    name="dbrx-132b-reduced", family="moe",
+    num_layers=2, d_model=64, num_heads=4, num_kv_heads=2,
+    head_dim=16, d_ff=128, vocab_size=512,
+    num_experts=4, top_k=2, vocab_pad_multiple=16,
+)

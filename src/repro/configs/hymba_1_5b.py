@@ -1,0 +1,24 @@
+"""hymba-1.5b [hybrid] — parallel attention + mamba heads. [arXiv:2411.13676]
+
+Attention heads use a sliding window (Hymba's SWA layers), which keeps the
+KV cache bounded and makes long_500k applicable (sub-quadratic).  The few
+global-attention layers of the published model are approximated as windowed
+(noted in DESIGN.md §5).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="hymba-1.5b", family="hybrid",
+    num_layers=32, d_model=1600, num_heads=25, num_kv_heads=5,
+    head_dim=64, d_ff=5504, vocab_size=32_001,
+    ssm_state=16, ssm_expand=2, ssm_head_dim=64, ssm_conv_width=4,
+    ssm_chunk=128, window=1024,
+)
+
+REDUCED = ModelConfig(
+    name="hymba-1.5b-reduced", family="hybrid",
+    num_layers=2, d_model=64, num_heads=4, num_kv_heads=2,
+    head_dim=16, d_ff=128, vocab_size=512,
+    ssm_state=16, ssm_expand=2, ssm_head_dim=16, ssm_conv_width=4,
+    ssm_chunk=32, window=32, vocab_pad_multiple=16,
+)

@@ -1,0 +1,21 @@
+"""kimi-k2-1t-a32b [moe] — trillion-param MoE, 384 experts top-8.
+[arXiv:2501.kimi2; paper-table]
+
+head_dim = 7168 / 64 = 112; fine-grained experts with d_ff = 2048.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="kimi-k2-1t-a32b", family="moe",
+    num_layers=61, d_model=7168, num_heads=64, num_kv_heads=8,
+    head_dim=112, d_ff=2048, vocab_size=163_840,
+    num_experts=384, top_k=8, rope_theta=500_000.0,
+    capacity_factor=1.25,
+)
+
+REDUCED = ModelConfig(
+    name="kimi-k2-1t-a32b-reduced", family="moe",
+    num_layers=2, d_model=64, num_heads=4, num_kv_heads=2,
+    head_dim=16, d_ff=32, vocab_size=512,
+    num_experts=8, top_k=2, vocab_pad_multiple=16,
+)

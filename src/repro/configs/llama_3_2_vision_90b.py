@@ -1,0 +1,23 @@
+"""llama-3.2-vision-90b [vlm] — cross-attn image layers.
+[hf:meta-llama/Llama-3.2-11B-Vision]
+
+Backbone only (per assignment): the vision tower is a STUB — input_specs()
+provides precomputed patch embeddings (B, img_tokens, d_model).  Every 5th
+layer carries an additional cross-attention to the image embeddings
+(100 layers → 20 cross-attn layers, matching the 90B layout).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama-3.2-vision-90b", family="vlm",
+    num_layers=100, d_model=8192, num_heads=64, num_kv_heads=8,
+    head_dim=128, d_ff=28_672, vocab_size=128_256,
+    rope_theta=500_000.0, cross_attn_period=5, img_tokens=1600,
+)
+
+REDUCED = ModelConfig(
+    name="llama-3.2-vision-90b-reduced", family="vlm",
+    num_layers=4, d_model=64, num_heads=4, num_kv_heads=2,
+    head_dim=16, d_ff=128, vocab_size=512,
+    cross_attn_period=2, img_tokens=16, vocab_pad_multiple=16,
+)

@@ -1,0 +1,22 @@
+"""mamba2-780m [ssm] — SSD (state-space duality), attn-free. [arXiv:2405.21060]
+
+d_inner = 2·d_model = 3072, ssm heads = d_inner / 64 = 48, n_groups = 1.
+long_500k applies (recurrent decode state is O(1) in context length).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-780m", family="ssm",
+    num_layers=48, d_model=1536, num_heads=0, num_kv_heads=0,
+    d_ff=0, vocab_size=50_280,
+    ssm_state=128, ssm_expand=2, ssm_head_dim=64, ssm_conv_width=4,
+    ssm_chunk=128, tie_embeddings=True,
+)
+
+REDUCED = ModelConfig(
+    name="mamba2-780m-reduced", family="ssm",
+    num_layers=2, d_model=64, num_heads=0, num_kv_heads=0,
+    d_ff=0, vocab_size=512,
+    ssm_state=16, ssm_expand=2, ssm_head_dim=16, ssm_conv_width=4,
+    ssm_chunk=32, tie_embeddings=True, vocab_pad_multiple=16,
+)

@@ -1,0 +1,21 @@
+"""whisper-small [audio] — enc-dec, conv frontend (STUB). [arXiv:2212.04356]
+
+Per the assignment the modality frontend is a stub: ``input_specs()``
+provides precomputed frame embeddings (B, T, d) directly; the 2×conv1d stem
+is not modeled.  12L = 12 encoder + 12 decoder layers (whisper-small).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-small", family="encdec",
+    num_layers=12, enc_layers=12, d_model=768, num_heads=12,
+    num_kv_heads=12, head_dim=64, d_ff=3072, vocab_size=51_865,
+    act="gelu", norm="layer", dec_target_len=448,
+)
+
+REDUCED = ModelConfig(
+    name="whisper-small-reduced", family="encdec",
+    num_layers=2, enc_layers=2, d_model=64, num_heads=4, num_kv_heads=4,
+    head_dim=16, d_ff=128, vocab_size=512, act="gelu", norm="layer",
+    dec_target_len=16, vocab_pad_multiple=16,
+)

@@ -1,0 +1,8 @@
+"""CUPLSS-JAX core: the paper's contribution (distributed dense linear
+system solvers — blocked LU/Cholesky direct methods + CG/BiCG/BiCGSTAB/
+GMRES non-stationary iterative methods) as a composable JAX module."""
+from repro.core.api import solve, factorize  # noqa: F401
+from repro.core.krylov import (  # noqa: F401
+    SolveResult, cg, bicg, bicgstab, gmres, cg_spmd, bicgstab_spmd)
+from repro.core.lu import lu_factor, lu_solve  # noqa: F401
+from repro.core.cholesky import cholesky_factor, cholesky_solve  # noqa: F401

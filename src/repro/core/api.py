@@ -1,0 +1,106 @@
+"""CUPLSS level-4 user API (paper §3: "the parallelism is hidden from the
+user" — one entry point, opaque distribution).
+
+    >>> x = solve(a, b)                          # serial / single device
+    >>> x = solve(a, b, method="gmres", mesh=m)  # distributed
+
+``method``: "lu" (default), "cholesky", "cg", "bicg", "bicgstab", "gmres".
+``engine`` (iterative only): "gspmd" (compiler-scheduled collectives) or
+"spmd" (explicit shard_map collectives — MPI-faithful; cg/bicgstab only).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import cholesky as _chol
+from repro.core import dist, krylov, lu as _lu, pblas, precond as _precond
+
+DIRECT = ("lu", "cholesky")
+ITERATIVE = ("cg", "bicg", "bicgstab", "gmres")
+
+
+def solve(a: jax.Array, b: jax.Array, *, method: str = "lu",
+          mesh=None, engine: str = "gspmd", block_size: int = 128,
+          tol: float = 1e-6, maxiter: int = 1000, restart: int = 32,
+          precond: str | Callable | None = None) -> jax.Array:
+    """Solve A x = b.  Returns x (iterative methods: the approximation)."""
+    if method not in DIRECT + ITERATIVE:
+        raise ValueError(f"unknown method {method!r}")
+
+    if mesh is not None:
+        a = dist.shard_matrix(a, mesh)
+        b = dist.shard_vector(b, mesh)
+
+    if method == "lu":
+        return _lu.solve(a, b, block_size=block_size, mesh=mesh)
+    if method == "cholesky":
+        return _chol.solve(a, b, block_size=block_size, mesh=mesh)
+
+    m = _make_precond(precond, a, block_size)
+    if engine == "spmd":
+        if mesh is None:
+            raise ValueError("engine='spmd' requires a mesh")
+        if method == "cg":
+            return krylov.cg_spmd(a, b, mesh, tol=tol, maxiter=maxiter).x
+        if method == "bicgstab":
+            return krylov.bicgstab_spmd(a, b, mesh, tol=tol, maxiter=maxiter).x
+        raise ValueError(f"engine='spmd' supports cg/bicgstab, not {method!r}")
+
+    matvec = _make_matvec(a, mesh)
+    if method == "cg":
+        return krylov.cg(matvec, b, tol=tol, maxiter=maxiter, precond=m).x
+    if method == "bicgstab":
+        return krylov.bicgstab(matvec, b, tol=tol, maxiter=maxiter,
+                               precond=m).x
+    if method == "bicg":
+        matvec_t = _make_matvec_t(a, mesh)
+        return krylov.bicg(matvec, matvec_t, b, tol=tol, maxiter=maxiter,
+                           precond=m).x
+    if method == "gmres":
+        return krylov.gmres(matvec, b, tol=tol, restart=restart,
+                            maxiter=maxiter, precond=m).x
+    raise AssertionError
+
+
+def factorize(a: jax.Array, *, method: str = "lu", mesh=None,
+              block_size: int = 128):
+    """Factor once, solve many (paper's two-step direct method, step 1)."""
+    if mesh is not None:
+        a = dist.shard_matrix(a, mesh)
+    if method == "lu":
+        lu_mat, perm = _lu.lu_factor(a, block_size=block_size, mesh=mesh)
+        return functools.partial(_lu.lu_solve, lu_mat, perm,
+                                 block_size=block_size, mesh=mesh)
+    if method == "cholesky":
+        l = _chol.cholesky_factor(a, block_size=block_size, mesh=mesh)
+        return functools.partial(_chol.cholesky_solve, l,
+                                 block_size=block_size, mesh=mesh)
+    raise ValueError(f"factorize supports lu/cholesky, not {method!r}")
+
+
+def _make_matvec(a, mesh):
+    if mesh is None:
+        return lambda v: a @ v
+    return lambda v: pblas.pmatvec_gspmd(a, v, mesh)
+
+
+def _make_matvec_t(a, mesh):
+    if mesh is None:
+        return lambda v: a.T @ v
+    return lambda v: pblas.pmatvec_gspmd(a.T, v, mesh)
+
+
+def _make_precond(spec, a, block_size):
+    if spec is None:
+        return lambda v: v
+    if callable(spec):
+        return spec
+    if spec == "jacobi":
+        return _precond.jacobi(a)
+    if spec == "block_jacobi":
+        return _precond.block_jacobi(a, block_size)
+    raise ValueError(f"unknown preconditioner {spec!r}")

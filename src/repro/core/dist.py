@@ -1,0 +1,121 @@
+"""Level-3 data-distribution layer (paper: "data distribution model").
+
+The paper (CUPLSS §3) distributes dense matrices over a *logical
+bidimensional mesh of processors* and hides the distribution behind opaque
+objects.  Here the 2-D process mesh is the last two axes of a ``jax.Mesh``
+(named ``"data"`` = mesh rows, ``"model"`` = mesh columns) and the opaque
+object is simply a global ``jax.Array`` carrying a ``NamedSharding`` — JAX's
+global-view arrays play the role of PLSS's distributed-matrix descriptors.
+
+Layouts
+-------
+* matrix  A : ``P(ROW_AXIS, COL_AXIS)``  — 2-D block distribution
+* vector  x : ``P(ROW_AXIS)``            — block rows, replicated over columns
+* scalar  s : ``P()``                    — replicated
+
+``long``-lived solver state always stays in these layouts; conversions are
+explicit (see ``pblas``).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+ROW_AXIS = "data"   # mesh rows  (process-grid i)
+COL_AXIS = "model"  # mesh cols  (process-grid j)
+
+
+def solver_axes(mesh: Mesh) -> tuple[str, str]:
+    """The (row, col) process-grid axes of ``mesh`` (its last two axes)."""
+    names = mesh.axis_names
+    if ROW_AXIS in names and COL_AXIS in names:
+        return (ROW_AXIS, COL_AXIS)
+    if len(names) >= 2:
+        return (names[-2], names[-1])
+    return (names[-1], names[-1])
+
+
+def grid_shape(mesh: Mesh) -> tuple[int, int]:
+    r, c = solver_axes(mesh)
+    return (mesh.shape[r], mesh.shape[c])
+
+
+def matrix_spec(mesh: Mesh) -> P:
+    r, c = solver_axes(mesh)
+    return P(r, c)
+
+
+def vector_spec(mesh: Mesh) -> P:
+    r, _ = solver_axes(mesh)
+    return P(r)
+
+
+def matrix_sharding(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, matrix_spec(mesh))
+
+
+def vector_sharding(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, vector_spec(mesh))
+
+
+def shard_matrix(a: jax.Array, mesh: Mesh) -> jax.Array:
+    """Place a global (n, n) matrix in the 2-D block layout."""
+    return jax.device_put(a, matrix_sharding(mesh))
+
+
+def shard_vector(x: jax.Array, mesh: Mesh) -> jax.Array:
+    """Place a global (n,) vector in the block-row layout."""
+    return jax.device_put(x, vector_sharding(mesh))
+
+
+def constrain(x: jax.Array, mesh: Mesh, spec: P) -> jax.Array:
+    """Sharding constraint that is a no-op outside jit / with trivial mesh."""
+    if mesh is None or mesh.empty:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def constrain_matrix(a: jax.Array, mesh: Mesh) -> jax.Array:
+    return constrain(a, mesh, matrix_spec(mesh))
+
+
+def constrain_vector(x: jax.Array, mesh: Mesh) -> jax.Array:
+    return constrain(x, mesh, vector_spec(mesh))
+
+
+def single_device_mesh() -> Mesh:
+    """A (1, 1) mesh over the first device — lets every code path that wants a
+    mesh run unchanged on one CPU device (tests)."""
+    return jax.make_mesh((1, 1), (ROW_AXIS, COL_AXIS),
+                         devices=jax.devices()[:1])
+
+
+def divisible(n: int, mesh: Mesh) -> bool:
+    p, q = grid_shape(mesh)
+    return n % p == 0 and n % q == 0
+
+
+def pad_to_grid(a: jax.Array, mesh: Mesh) -> tuple[jax.Array, int]:
+    """Pad an (n, n) system so both dims divide the process grid.  Padding is
+    an identity extension (diag 1) so solves are unaffected; returns the
+    padded matrix and the original n."""
+    n = a.shape[0]
+    p, q = grid_shape(mesh)
+    block = p * q // _gcd(p, q) if (p and q) else 1
+    m = -(-n // block) * block if block else n
+    if m == n:
+        return a, n
+    pad = m - n
+    a2 = jnp.zeros((m, m), a.dtype).at[:n, :n].set(a)
+    a2 = a2.at[jnp.arange(n, m), jnp.arange(n, m)].set(jnp.ones((pad,), a.dtype))
+    return a2, n
+
+
+def _gcd(a: int, b: int) -> int:
+    while b:
+        a, b = b, a % b
+    return a

@@ -1,0 +1,137 @@
+"""Blocked right-looking LU factorization with partial pivoting (paper §2).
+
+This is the paper's *delayed-update* (Level-3 BLAS) LU: ``k`` rank-1 updates
+are replaced by a single rank-``nb`` update so the hot loop is a large GEMM
+— on TPU that is the MXU hot spot (optionally executed by the Pallas kernel
+in ``repro.kernels.gemm``).
+
+Distribution: the matrix is a global array in the 2-D block layout
+(``dist.matrix_spec``); the factorization is written against the *global*
+view and the XLA SPMD partitioner inserts the row-broadcasts / pivot-swap
+collectives the MPI version performed explicitly.  TPU-adaptation notes are
+in DESIGN.md §2: pivot search is a masked argmax, the per-column swap
+sequence is accumulated into a single row permutation applied as one gather
+per panel, and the panel factorization is a fixed-shape masked update so it
+maps onto vector units instead of data-dependent control flow.
+
+``lu_factor`` returns (LU_packed, perm) with ``A[perm] = L @ U`` — i.e.
+``perm`` is the accumulated row permutation (paper's ipiv, converted to
+permutation form).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.scipy.linalg import solve_triangular
+
+from repro.core import dist
+
+
+def _panel_factor(pan: jax.Array, n_valid: int | None = None):
+    """LU with partial pivoting of an (m, nb) panel, fixed shapes.
+
+    Returns the packed panel (L unit-lower / U upper in place) and the row
+    permutation ``perm`` (m,) such that pan_in[perm] = L @ U.
+    """
+    m, nb = pan.shape
+    rows = jnp.arange(m)
+
+    def col_step(j, carry):
+        pan, perm = carry
+        col = pan[:, j]
+        # -- pivot search: largest |entry| among rows >= j ------------------
+        cand = jnp.where(rows >= j, jnp.abs(col), -jnp.inf)
+        p = jnp.argmax(cand)
+        # -- row swap j <-> p (also recorded in perm) -----------------------
+        row_j, row_p = pan[j, :], pan[p, :]
+        pan = pan.at[j, :].set(row_p).at[p, :].set(row_j)
+        pj, pp = perm[j], perm[p]
+        perm = perm.at[j].set(pp).at[p].set(pj)
+        # -- scale multipliers ----------------------------------------------
+        pivot = pan[j, j]
+        safe = jnp.where(pivot == 0, jnp.asarray(1, pan.dtype), pivot)
+        col = pan[:, j]
+        mcol = jnp.where(rows > j, col / safe, col)
+        pan = pan.at[:, j].set(mcol)
+        # -- rank-1 update of the panel's trailing block (masked) -----------
+        urow = pan[j, :]
+        mmask = jnp.where(rows > j, mcol, 0)
+        umask = jnp.where(jnp.arange(nb) > j, urow, 0)
+        pan = pan - jnp.outer(mmask, umask)
+        return pan, perm
+
+    perm0 = jnp.arange(m)
+    pan, perm = jax.lax.fori_loop(0, nb, col_step, (pan, perm0))
+    return pan, perm
+
+
+def lu_factor(a: jax.Array, block_size: int = 128, mesh=None
+              ) -> tuple[jax.Array, jax.Array]:
+    """Blocked LU with partial pivoting.  Returns (LU_packed, perm)."""
+    n = a.shape[0]
+    nb = min(block_size, n)
+    if n % nb:
+        raise ValueError(f"n={n} must be divisible by block_size={nb}")
+    perm_total = jnp.arange(n)
+
+    for k in range(0, n, nb):
+        pan = a[k:, k:k + nb]                                    # (n-k, nb)
+        if mesh is not None:
+            # gather the panel across process COLUMNS before the column
+            # loop (rows stay sharded): the nb-step pivoted factorization
+            # then runs on the row-sharded panel with small psum/argmax
+            # rounds instead of re-gathering the whole panel every column
+            # step — the paper's "panel on one process column" pattern
+            # (EXPERIMENTS.md §Perf solver hc3)
+            row, _ = dist.solver_axes(mesh)
+            pan = dist.constrain(pan, mesh,
+                                 jax.sharding.PartitionSpec(row, None))
+        pan, perm = _panel_factor(pan)
+        # one gather applies the whole panel's swap sequence to the rest of
+        # the row block (L history + trailing matrix)
+        rows = a[k:, :]
+        rows = jnp.take(rows, perm, axis=0)
+        rows = rows.at[:, k:k + nb].set(pan)
+        a = a.at[k:, :].set(rows)
+        perm_total = perm_total.at[k:].set(jnp.take(perm_total[k:], perm))
+        if k + nb < n:
+            l11 = a[k:k + nb, k:k + nb]
+            a12 = a[k:k + nb, k + nb:]
+            u12 = solve_triangular(l11, a12, lower=True, unit_diagonal=True)
+            a = a.at[k:k + nb, k + nb:].set(u12)
+            l21 = a[k + nb:, k:k + nb]
+            # delayed rank-nb update — the Level-3 hot spot
+            upd = a[k + nb:, k + nb:] - l21 @ u12
+            a = a.at[k + nb:, k + nb:].set(upd)
+        if mesh is not None:
+            a = dist.constrain_matrix(a, mesh)
+
+    return a, perm_total
+
+
+def unpack(lu: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Split packed LU into (unit-lower L, upper U)."""
+    l = jnp.tril(lu, -1) + jnp.eye(lu.shape[0], dtype=lu.dtype)
+    u = jnp.triu(lu)
+    return l, u
+
+
+def lu_solve(lu: jax.Array, perm: jax.Array, b: jax.Array,
+             block_size: int = 128, mesh=None) -> jax.Array:
+    """Solve A x = b given (LU, perm) from :func:`lu_factor`."""
+    from repro.core.triangular import solve_lower_blocked, solve_upper_blocked
+    bp = jnp.take(b, perm, axis=0)
+    y = solve_lower_blocked(lu, bp, unit_diagonal=True,
+                            block_size=block_size, mesh=mesh)
+    x = solve_upper_blocked(lu, y, block_size=block_size, mesh=mesh)
+    return x
+
+
+def solve(a: jax.Array, b: jax.Array, block_size: int = 128, mesh=None
+          ) -> jax.Array:
+    """Direct dense solve via blocked, pivoted LU (paper's two-step method)."""
+    lu, perm = lu_factor(a, block_size=block_size, mesh=mesh)
+    return lu_solve(lu, perm, b, block_size=block_size, mesh=mesh)

@@ -1,0 +1,44 @@
+"""Preconditioners for the Krylov solvers (Jacobi / block-Jacobi).
+
+Block-Jacobi is the natural distributed preconditioner for the paper's
+layout: each process-grid row owns a diagonal block of A, factorizes it
+locally (the paper's "local acceleration" level), and applies the inverse
+with two batched triangular solves — zero communication.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.scipy.linalg import lu_factor as jsp_lu_factor, lu_solve as jsp_lu_solve
+
+
+def jacobi(a: jax.Array, eps: float = 1e-30) -> Callable:
+    """Diagonal (point-Jacobi) preconditioner M⁻¹ = diag(A)⁻¹."""
+    d = jnp.diagonal(a)
+    dinv = jnp.where(jnp.abs(d) > eps, 1.0 / d, 1.0)
+
+    def apply(v):
+        return dinv * v
+
+    return apply
+
+
+def block_jacobi(a: jax.Array, block_size: int = 128) -> Callable:
+    """Block-diagonal preconditioner; blocks LU-factorized up front (vmapped)."""
+    n = a.shape[0]
+    nb = min(block_size, n)
+    if n % nb:
+        raise ValueError(f"n={n} must be divisible by block_size={nb}")
+    k = n // nb
+    blocks = a.reshape(k, nb, k, nb)
+    diag_blocks = jnp.stack([blocks[i, :, i, :] for i in range(k)])  # (k, nb, nb)
+    lu, piv = jax.vmap(jsp_lu_factor)(diag_blocks)
+
+    def apply(v):
+        vb = v.reshape(k, nb)
+        out = jax.vmap(lambda l, p, rhs: jsp_lu_solve((l, p), rhs))(lu, piv, vb)
+        return out.reshape(n)
+
+    return apply

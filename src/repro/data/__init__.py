@@ -1,0 +1,1 @@
+from repro.data.pipeline import TokenPipeline, make_pipeline  # noqa: F401

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the compute hot spots (paper's CUDA level):
+
+* ``gemm``         — MXU-tiled matmul (the delayed rank-k update / CUBLAS role)
+* ``trsm``         — inverse-based block triangular solve
+* ``attention``    — flash attention fwd (GQA, causal, sliding window)
+* ``krylov_fused`` — fused CG/BiCGSTAB vector update + reduction
+
+``ops`` is the jit'd dispatch layer (TPU native / CPU interpret / jnp
+fallback); ``ref`` holds the pure-jnp oracles the tests sweep against.
+"""
+from repro.kernels import ops, ref  # noqa: F401

@@ -1,0 +1,36 @@
+"""Production meshes.
+
+Single pod: 16×16 = 256 chips (v5e pod), axes ("data", "model").
+Multi-pod:  2×16×16 = 512 chips, axes ("pod", "data", "model") — the
+leading "pod" axis crosses DCN and is used for data parallelism (plus the
+compressed gradient reduction in repro.distributed.compression).
+
+``make_production_mesh`` is a function (not a module constant) so importing
+this module never touches jax device state.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape, axes, devices=None):
+    """Arbitrary mesh over an explicit device list (elastic restarts use
+    this to rebuild a smaller mesh after excluding failed hosts)."""
+    return jax.make_mesh(shape, axes, devices=devices)
+
+
+def solver_mesh(devices=None):
+    """2-D process grid for the CUPLSS solver layer (paper's logical mesh):
+    squarest (p, q) factorization of the device count."""
+    devices = jax.devices() if devices is None else devices
+    n = len(devices)
+    p = int(n ** 0.5)
+    while n % p:
+        p -= 1
+    return jax.make_mesh((p, n // p), ("data", "model"), devices=devices)

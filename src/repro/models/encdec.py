@@ -1,0 +1,196 @@
+"""Whisper-style encoder–decoder (whisper-small).  [arXiv:2212.04356]
+
+Per the assignment the audio frontend is a STUB: the model consumes
+precomputed frame embeddings (B, T_enc, d) directly (``input_specs``
+provides them); the 2×conv1d stem + mel filterbank are not modeled.
+
+Encoder: bidirectional self-attention + GELU MLP (pre-layernorm).
+Decoder: causal self-attention + cross-attention to encoder states + MLP.
+Decode shapes lower the decoder step: self-KV ring cache + cross-K/V
+computed once from the encoder output (re-used every step, whisper-style).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+ENC_FRAMES = 1500          # whisper 30 s @ 50 Hz after the conv stem
+
+
+def init_enc_layer(cfg: ModelConfig, key):
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": L.init_norm(cfg),
+        "attn": L.init_attention(cfg, k1),
+        "ln2": L.init_norm(cfg),
+        "mlp": L.init_mlp(cfg, k2),
+    }
+
+
+def init_dec_layer(cfg: ModelConfig, key):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "ln1": L.init_norm(cfg),
+        "self_attn": L.init_attention(cfg, k1),
+        "ln_x": L.init_norm(cfg),
+        "cross_attn": L.init_attention(cfg, k2, cross=True),
+        "ln2": L.init_norm(cfg),
+        "mlp": L.init_mlp(cfg, k3),
+    }
+
+
+def init_params(cfg: ModelConfig, key):
+    ke, kenc, kdec, kpe = jax.random.split(key, 4)
+    enc_keys = jax.random.split(kenc, cfg.enc_layers)
+    dec_keys = jax.random.split(kdec, cfg.num_layers)
+    pt = L.dtype_of(cfg)
+    return {
+        "embed": L.init_embed(cfg, ke),
+        "enc_pos": (jax.random.normal(kpe, (ENC_FRAMES, cfg.d_model))
+                    * 0.02).astype(pt),
+        "enc_layers": jax.vmap(functools.partial(init_enc_layer, cfg))(enc_keys),
+        "enc_final": L.init_norm(cfg),
+        "dec_layers": jax.vmap(functools.partial(init_dec_layer, cfg))(dec_keys),
+        "final_norm": L.init_norm(cfg),
+    }
+
+
+def encode(params, frames, cfg: ModelConfig):
+    """frames (B, T_enc, d) stub embeddings → encoder states (B, T_enc, d)."""
+    t = frames.shape[1]
+    x = frames + params["enc_pos"][:t].astype(frames.dtype)
+
+    def body(x, lp):
+        h = L.apply_norm(lp["ln1"], x, cfg)
+        a, _ = L.attention_fwd(lp["attn"], h, cfg, positions=None,
+                               causal=False)
+        x = x + a
+        h = L.apply_norm(lp["ln2"], x, cfg)
+        return x + L.mlp_fwd(lp["mlp"], h, cfg), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return L.apply_norm(params["enc_final"], x, cfg)
+
+
+def _dec_layer_fwd(cfg, x, lp, positions, enc_states):
+    h = L.apply_norm(lp["ln1"], x, cfg)
+    a, _ = L.attention_fwd(lp["self_attn"], h, cfg, positions=positions,
+                           causal=True)
+    x = x + a
+    h = L.apply_norm(lp["ln_x"], x, cfg)
+    a, _ = L.attention_fwd(lp["cross_attn"], h, cfg, kv_src=enc_states)
+    x = x + a
+    h = L.apply_norm(lp["ln2"], x, cfg)
+    return x + L.mlp_fwd(lp["mlp"], h, cfg)
+
+
+def forward(params, batch, cfg: ModelConfig, last_only: bool = False):
+    """batch: {"frames": (B,T_enc,d), "tokens": (B,S)} → logits (B,S,V)."""
+    enc = encode(params, batch["frames"], cfg)
+    tokens = batch["tokens"]
+    x = L.embed(params["embed"], tokens, cfg)
+    positions = jnp.arange(tokens.shape[1])
+
+    def body(x, lp):
+        return _dec_layer_fwd(cfg, x, lp, positions, enc), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["dec_layers"])
+    x = L.apply_norm(params["final_norm"], x, cfg)
+    if last_only:
+        x = x[:, -1:]
+    return L.unembed(params["embed"], x, cfg)
+
+
+def loss_fn(params, batch, cfg: ModelConfig):
+    return L.lm_loss(forward(params, batch, cfg), batch["targets"], cfg)
+
+
+# --------------------------------------------------------------------------
+# serving: decoder step with self-KV ring cache + precomputed cross-K/V
+# --------------------------------------------------------------------------
+
+def _cross_kv(params, enc_states, cfg: ModelConfig):
+    """Precompute per-layer cross-attention K/V from encoder states."""
+    hd = cfg.resolved_head_dim
+
+    def per_layer(lp):
+        p = lp["cross_attn"]
+        k = enc_states @ p["wk"]
+        v = enc_states @ p["wv"]
+        b, t, _ = k.shape
+        to_heads = lambda y: y.reshape(b, t, cfg.num_kv_heads, hd
+                                       ).transpose(0, 2, 1, 3)
+        return to_heads(k), to_heads(v)
+
+    return jax.vmap(per_layer, in_axes=(0,))(params["dec_layers"])
+
+
+def init_decode_state(params, cfg: ModelConfig, batch: int, seq_len: int,
+                      batch_ctx=None):
+    """batch_ctx: {"enc_states": (B, T_enc, d)} — required for cross-attn."""
+    kv1 = L.init_cache(cfg, batch, seq_len)
+    stack = lambda a: jnp.broadcast_to(a, (cfg.num_layers,) + a.shape)
+    state = {"k": stack(kv1["k"]), "v": stack(kv1["v"]), "pos": kv1["pos"]}
+    if batch_ctx is None:        # shape stand-in for the dry-run
+        hd = cfg.resolved_head_dim
+        z = jnp.zeros((cfg.num_layers, batch, cfg.num_kv_heads, ENC_FRAMES,
+                       hd), L.dtype_of(cfg, "act"))
+        state["cross_k"], state["cross_v"] = z, z
+    else:
+        ck, cv = _cross_kv(params, batch_ctx["enc_states"], cfg)
+        state["cross_k"] = ck.astype(L.dtype_of(cfg, "act"))
+        state["cross_v"] = cv.astype(L.dtype_of(cfg, "act"))
+    return state
+
+
+def _cross_decode(p, x, ck, cv, cfg: ModelConfig):
+    """Single-token cross-attention against fixed (B,Hkv,T_enc,D) K/V."""
+    hd = cfg.resolved_head_dim
+    b = x.shape[0]
+    q = (x @ p["wq"]).reshape(b, 1, cfg.num_heads, hd).transpose(0, 2, 1, 3)
+    g = cfg.num_heads // cfg.num_kv_heads
+    qf = q.reshape(b, cfg.num_kv_heads, g, 1, hd).astype(jnp.float32)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qf, ck.astype(jnp.float32)) * hd ** -0.5
+    pr = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", pr, cv.astype(jnp.float32))
+    o = o.reshape(b, cfg.num_heads, 1, hd).astype(x.dtype)
+    return o.transpose(0, 2, 1, 3).reshape(b, 1, cfg.num_heads * hd) @ p["wo"]
+
+
+def decode_step(params, state, token, index, cfg: ModelConfig,
+                batch_ctx=None):
+    x = L.embed(params["embed"], token[:, None], cfg)
+    pos = state["pos"]
+    c = pos.shape[0]
+    slot = (index % c).astype(jnp.int32)
+    new_pos = pos.at[slot].set(index.astype(pos.dtype))
+
+    def body(x, inp):
+        lp, ck, cv, xk, xv = inp
+        h = L.apply_norm(lp["ln1"], x, cfg)
+        a, kv = L.decode_attention(lp["self_attn"], h,
+                                   {"k": ck, "v": cv, "pos": pos}, cfg,
+                                   index=index)
+        x = x + a
+        h = L.apply_norm(lp["ln_x"], x, cfg)
+        x = x + _cross_decode(lp["cross_attn"], h[:, 0, :], xk, xv, cfg)
+        h = L.apply_norm(lp["ln2"], x, cfg)
+        x = x + L.mlp_fwd(lp["mlp"], h, cfg)
+        return x, (kv["k"], kv["v"])
+
+    x, (ks, vs) = jax.lax.scan(
+        body, x, (params["dec_layers"], state["k"], state["v"],
+                  state["cross_k"], state["cross_v"]))
+    x = L.apply_norm(params["final_norm"], x, cfg)
+    logits = L.unembed(params["embed"], x, cfg)[:, 0, :]
+    return logits, {"k": ks, "v": vs, "pos": new_pos,
+                    "cross_k": state["cross_k"], "cross_v": state["cross_v"]}

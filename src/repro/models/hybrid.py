@@ -1,0 +1,141 @@
+"""Hymba-style hybrid: parallel attention + SSM heads per layer
+(hymba-1.5b).  [arXiv:2411.13676]
+
+Each layer runs a sliding-window GQA attention branch and a Mamba-2/SSD
+branch *in parallel* on the same normed input; the branch outputs are
+normalized and fused with learnable per-channel gates (Hymba's β), then a
+SwiGLU MLP follows.  The window-bounded KV cache plus the O(1) SSM state
+make the family sub-quadratic, so the ``long_500k`` shape applies.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import mamba2 as M
+
+
+def _branch_norm(x, scale, eps):
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def init_layer(cfg: ModelConfig, key):
+    k1, k2, k3 = jax.random.split(key, 3)
+    pt = L.dtype_of(cfg)
+    return {
+        "ln1": L.init_norm(cfg),
+        "attn": L.init_attention(cfg, k1),
+        "ssm": M.init_ssm(cfg, k2),
+        # per-branch output norms + fusion gates (Hymba β)
+        "attn_norm": jnp.ones((cfg.d_model,), pt),
+        "ssm_norm": jnp.ones((cfg.d_model,), pt),
+        "beta_attn": jnp.ones((cfg.d_model,), pt),
+        "beta_ssm": jnp.ones((cfg.d_model,), pt),
+        "ln2": L.init_norm(cfg),
+        "mlp": L.init_mlp(cfg, k3),
+    }
+
+
+def init_params(cfg: ModelConfig, key):
+    ke, kl = jax.random.split(key)
+    lkeys = jax.random.split(kl, cfg.num_layers)
+    return {
+        "embed": L.init_embed(cfg, ke),
+        "layers": jax.vmap(functools.partial(init_layer, cfg))(lkeys),
+        "final_norm": L.init_norm(cfg),
+    }
+
+
+def _fuse(lp, a, s, cfg):
+    a = _branch_norm(a, lp["attn_norm"], cfg.rms_eps)
+    s = _branch_norm(s, lp["ssm_norm"], cfg.rms_eps)
+    half = jnp.asarray(0.5, jnp.float32)
+    out = half * (a.astype(jnp.float32) * lp["beta_attn"].astype(jnp.float32)
+                  + s.astype(jnp.float32) * lp["beta_ssm"].astype(jnp.float32))
+    return out.astype(a.dtype)
+
+
+def _layer_fwd(cfg, x, lp, positions):
+    from repro import runtime
+    h = L.apply_norm(lp["ln1"], x, cfg)
+    # 25 heads / 50 SSD heads don't divide a 16-way TP axis — reshard the
+    # mixer to batch-parallel over ALL axes (context parallel) instead of
+    # letting GSPMD replicate it (runtime.mixer_cp docstring)
+    h = runtime.mixer_cp(h)
+    a, _ = L.attention_fwd(lp["attn"], h, cfg, positions=positions,
+                           causal=True, window=cfg.window)
+    s, _ = M.ssm_fwd(lp["ssm"], h, cfg)
+    f = runtime.mixer_cp_out(_fuse(lp, a, s, cfg))
+    x = x + f
+    h = L.apply_norm(lp["ln2"], x, cfg)
+    return x + L.mlp_fwd(lp["mlp"], h, cfg)
+
+
+def forward(params, batch, cfg: ModelConfig, last_only: bool = False):
+    tokens = batch["tokens"]
+    x = L.embed(params["embed"], tokens, cfg)
+    positions = jnp.arange(tokens.shape[1])
+
+    def body(x, lp):
+        return _layer_fwd(cfg, x, lp, positions), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    x = L.apply_norm(params["final_norm"], x, cfg)
+    if last_only:
+        x = x[:, -1:]
+    return L.unembed(params["embed"], x, cfg)
+
+
+def loss_fn(params, batch, cfg: ModelConfig):
+    return L.lm_loss(forward(params, batch, cfg), batch["targets"], cfg)
+
+
+# --------------------------------------------------------------------------
+# serving: windowed KV ring cache + SSM recurrent state per layer
+# --------------------------------------------------------------------------
+
+def init_decode_state(params, cfg: ModelConfig, batch: int, seq_len: int,
+                      batch_ctx=None):
+    kv1 = L.init_cache(cfg, batch, seq_len, window=cfg.window)
+    ssm1 = M.init_ssm_cache(cfg, batch)
+    stack = lambda a: jnp.broadcast_to(a, (cfg.num_layers,) + a.shape)
+    return {
+        "k": stack(kv1["k"]), "v": stack(kv1["v"]), "pos": kv1["pos"],
+        "conv": stack(ssm1["conv"]), "state": stack(ssm1["state"]),
+    }
+
+
+def decode_step(params, state, token, index, cfg: ModelConfig,
+                batch_ctx=None):
+    x = L.embed(params["embed"], token[:, None], cfg)
+    pos = state["pos"]
+    c = pos.shape[0]
+    slot = (index % c).astype(jnp.int32)
+    new_pos = pos.at[slot].set(index.astype(pos.dtype))
+
+    def body(x, inp):
+        lp, ck, cv, conv, hst = inp
+        h = L.apply_norm(lp["ln1"], x, cfg)
+        a, kv = L.decode_attention(lp["attn"], h, {"k": ck, "v": cv, "pos": pos},
+                                   cfg, index=index, window=cfg.window)
+        s, sc = M.ssm_decode(lp["ssm"], h, {"conv": conv, "state": hst}, cfg)
+        x = x + _fuse(lp, a, s, cfg)
+        h = L.apply_norm(lp["ln2"], x, cfg)
+        x = x + L.mlp_fwd(lp["mlp"], h, cfg)
+        return x, (kv["k"], kv["v"], sc["conv"], sc["state"])
+
+    x, (ks, vs, convs, hsts) = jax.lax.scan(
+        body, x, (params["layers"], state["k"], state["v"],
+                  state["conv"], state["state"]))
+    x = L.apply_norm(params["final_norm"], x, cfg)
+    logits = L.unembed(params["embed"], x, cfg)[:, 0, :]
+    return logits, {"k": ks, "v": vs, "pos": new_pos,
+                    "conv": convs, "state": hsts}

@@ -1,0 +1,406 @@
+"""Shared building blocks for the architecture zoo.
+
+Functional style: ``init_*`` builds param pytrees (bf16 by default), apply
+functions are pure.  Attention has three execution paths:
+
+* dense masked einsum            — short sequences (compile-simple),
+* nested-scan flash (pure jnp)   — long sequences; O(qc·kc) live memory, the
+  path the 512-device dry-run lowers (XLA:TPU fuses it; flops match flash),
+* Pallas flash kernel            — TPU runtime (``repro.kernels.attention``)
+  when ``repro.runtime.use_pallas()`` is on.
+
+All layouts: activations (B, S, d); attention heads (B, H, S, head_dim).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import runtime
+from repro.configs.base import ModelConfig
+
+_NEG = -1e30
+
+
+def dtype_of(cfg: ModelConfig, kind: str = "param"):
+    return jnp.dtype(cfg.param_dtype if kind == "param" else cfg.act_dtype)
+
+
+# --------------------------------------------------------------------------
+# norms
+# --------------------------------------------------------------------------
+
+def init_norm(cfg: ModelConfig, d: int | None = None):
+    d = d or cfg.d_model
+    p = {"scale": jnp.ones((d,), dtype_of(cfg))}
+    if cfg.norm == "layer":
+        p["bias"] = jnp.zeros((d,), dtype_of(cfg))
+    return p
+
+
+def apply_norm(p, x, cfg: ModelConfig, eps: float | None = None):
+    eps = eps or cfg.rms_eps
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layer":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + eps) * p["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def _rms_head(x, scale, eps=1e-6):
+    """Per-head rmsnorm (qk_norm), x (..., head_dim)."""
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# rotary embedding
+# --------------------------------------------------------------------------
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x (B, H, S, D), positions (S,) or (B, S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    pos = positions.astype(jnp.float32)
+    angles = pos[..., None] * freq                      # (S, half) or (B,S,half)
+    if angles.ndim == 2:
+        angles = angles[None, None, :, :]               # (1,1,S,half)
+    else:
+        angles = angles[:, None, :, :]                  # (B,1,S,half)
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# attention core
+# --------------------------------------------------------------------------
+
+def _dense_attention(q, k, v, *, causal, window, scale):
+    b, hq, tq, d = q.shape
+    hkv, tk = k.shape[1], k.shape[2]
+    g = hq // hkv
+    qf = q.reshape(b, hkv, g, tq, d).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qf, kf) * scale
+    qpos = jnp.arange(tq)[:, None] + (tk - tq)
+    kpos = jnp.arange(tk)[None, :]
+    mask = jnp.ones((tq, tk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None, None, None], s, _NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", p, vf)
+    return o.reshape(b, hq, tq, d).astype(q.dtype)
+
+
+def _chunk_of(t: int, target: int) -> int:
+    """Largest divisor of t that is <= target (chunked attention tiling)."""
+    c = min(target, t)
+    while t % c:
+        c -= 1
+    return c
+
+
+def _flash_jnp(q, k, v, *, causal, window, scale,
+               q_chunk=512, k_chunk=1024):
+    """Nested-scan flash attention: fixed O(qc·kc) live memory."""
+    b, hq, tq, d = q.shape
+    hkv, tk = k.shape[1], k.shape[2]
+    g = hq // hkv
+    qc = _chunk_of(tq, q_chunk)
+    kc = _chunk_of(tk, k_chunk)
+    nq, nk = tq // qc, tk // kc
+    off = tk - tq
+
+    # NOTE: hoisting the k/v TP-gather out of the chunk scans via a
+    # replicate-heads constraint was tried and measured NEUTRAL on the
+    # dry-run (tx 6.28→6.35 s — GSPMD already CSEs the per-chunk gathers);
+    # reverted to keep the path constraint-free (EXPERIMENTS.md §Perf).
+    qr = jnp.moveaxis(q.reshape(b, hkv, g, nq, qc, d), 3, 0)      # (nq,...)
+    kr = jnp.moveaxis(k.reshape(b, hkv, nk, kc, d), 2, 0)         # (nk,...)
+    vr = jnp.moveaxis(v.reshape(b, hkv, nk, kc, d), 2, 0)
+    qpos = off + (jnp.arange(nq)[:, None] * qc + jnp.arange(qc)[None, :])
+    kpos = jnp.arange(nk)[:, None] * kc + jnp.arange(kc)[None, :]
+
+    def per_q(_, xs_q):
+        q_blk, qp = xs_q                                          # (b,hkv,g,qc,d), (qc,)
+        qf = q_blk            # keep bf16 operands; accumulate fp32 (MXU-style)
+
+        def per_k(c, xs_k):
+            m, l, acc = c
+            k_blk, v_blk, kp = xs_k
+            s = jnp.einsum("bhgqd,bhkd->bhgqk", qf, k_blk,
+                           preferred_element_type=jnp.float32) * scale
+            mask = jnp.ones((qc, kc), bool)
+            if causal:
+                mask &= kp[None, :] <= qp[:, None]
+            if window is not None:
+                mask &= kp[None, :] > qp[:, None] - window
+            s = jnp.where(mask[None, None, None], s, _NEG)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l = alpha * l + jnp.sum(p, axis=-1)
+            acc = alpha[..., None] * acc + jnp.einsum(
+                "bhgqk,bhkd->bhgqd", p.astype(v_blk.dtype), v_blk,
+                preferred_element_type=jnp.float32)
+            return (m_new, l, acc), None
+
+        m0 = jnp.full((b, hkv, g, qc), _NEG, jnp.float32)
+        l0 = jnp.zeros((b, hkv, g, qc), jnp.float32)
+        a0 = jnp.zeros((b, hkv, g, qc, d), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(per_k, (m0, l0, a0), (kr, vr, kpos))
+        out = acc / jnp.where(l == 0, 1.0, l)[..., None]
+        return 0, out.astype(q.dtype)
+
+    _, outs = jax.lax.scan(per_q, 0, (qr, qpos))                  # (nq,b,hkv,g,qc,d)
+    out = jnp.moveaxis(outs, 0, 3)                                # (b,hkv,g,nq,qc,d)
+    return out.reshape(b, hq, tq, d)
+
+
+def _window_banded_jnp(q, k, v, *, window, scale, q_chunk=512):
+    """Sliding-window attention that only touches the live band.
+
+    The generic chunked path scans ALL (q_chunk × k_chunk) tiles and masks
+    the dead ones — for window ≪ T that is mostly wasted HBM traffic (the
+    hymba-1.5b train_4k memory term was dominated by it; EXPERIMENTS.md
+    §Perf).  Here each q chunk attends to one dynamic slice of length
+    (window + qc) ending at the chunk's last position: compute drops from
+    O(T²) to O(T·(w+qc)), post-softmax probabilities are cast to bf16 for
+    the PV matmul, and per-tile masks are built on the fly from iota.
+    """
+    b, hq, tq, d = q.shape
+    hkv, tk = k.shape[1], k.shape[2]
+    g = hq // hkv
+    qc = _chunk_of(tq, q_chunk)
+    nq = tq // qc
+    lw = min(window + qc, tk)                      # live keys per q chunk
+    off = tk - tq
+
+    qr = jnp.moveaxis(q.reshape(b, hkv, g, nq, qc, d), 3, 0)   # (nq, ...)
+
+    def per_q(_, xs):
+        i, q_blk = xs
+        q_end = off + (i + 1) * qc                 # one past last q pos
+        start = jnp.clip(q_end - lw, 0, tk - lw)
+        k_blk = jax.lax.dynamic_slice_in_dim(k, start, lw, axis=2)
+        v_blk = jax.lax.dynamic_slice_in_dim(v, start, lw, axis=2)
+        qpos = off + i * qc + jnp.arange(qc)
+        kpos = start + jnp.arange(lw)
+        s = jnp.einsum("bhgqd,bhkd->bhgqk", q_blk, k_blk,
+                       preferred_element_type=jnp.float32) * scale
+        mask = (kpos[None, :] <= qpos[:, None]) \
+            & (kpos[None, :] > qpos[:, None] - window)
+        s = jnp.where(mask[None, None, None], s, _NEG)
+        p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+        out = jnp.einsum("bhgqk,bhkd->bhgqd", p, v_blk)
+        return 0, out
+
+    _, outs = jax.lax.scan(per_q, 0, (jnp.arange(nq), qr))
+    out = jnp.moveaxis(outs, 0, 3)                 # (b,hkv,g,nq,qc,d)
+    return out.reshape(b, hq, tq, d).astype(q.dtype)
+
+
+def attention_core(q, k, v, *, causal=True, window=None, scale=None,
+                   dense_threshold=2048):
+    """Dispatch between dense / banded-window / scan-flash / Pallas paths."""
+    d = q.shape[-1]
+    scale = (d ** -0.5) if scale is None else scale
+    tq, tk = q.shape[2], k.shape[2]
+    if runtime.use_pallas() and tq % 128 == 0 and tk % 128 == 0:
+        from repro.kernels import ops
+        return ops.flash_attention(q, k, v, causal=causal, window=window)
+    if max(tq, tk) <= dense_threshold:
+        return _dense_attention(q, k, v, causal=causal, window=window,
+                                scale=scale)
+    if window is not None and causal and tq == tk and window + 512 < tk:
+        return _window_banded_jnp(q, k, v, window=window, scale=scale)
+    return _flash_jnp(q, k, v, causal=causal, window=window, scale=scale)
+
+
+# --------------------------------------------------------------------------
+# attention layer (projections + rope + qk_norm + cache handling)
+# --------------------------------------------------------------------------
+
+def init_attention(cfg: ModelConfig, key, cross: bool = False):
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    hq, hkv = cfg.num_heads, cfg.num_kv_heads
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s = d ** -0.5
+    pt = dtype_of(cfg)
+    p = {
+        "wq": (jax.random.normal(k1, (d, hq * hd)) * s).astype(pt),
+        "wk": (jax.random.normal(k2, (d, hkv * hd)) * s).astype(pt),
+        "wv": (jax.random.normal(k3, (d, hkv * hd)) * s).astype(pt),
+        "wo": (jax.random.normal(k4, (hq * hd, d)) * s).astype(pt),
+    }
+    if cfg.qk_norm and not cross:
+        p["q_norm"] = jnp.ones((hd,), pt)
+        p["k_norm"] = jnp.ones((hd,), pt)
+    return p
+
+
+def _split_heads(x, n, hd):
+    b, s, _ = x.shape
+    return x.reshape(b, s, n, hd).transpose(0, 2, 1, 3)
+
+
+def _merge_heads(x):
+    b, h, s, hd = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, s, h * hd)
+
+
+def attention_fwd(p, x, cfg: ModelConfig, *, positions=None,
+                  causal=True, window=None, kv_src=None):
+    """Full-sequence attention (train / prefill).  ``kv_src`` = cross-attn
+    source sequence (B, S_kv, d); positions only rotate self-attention."""
+    hd = cfg.resolved_head_dim
+    src = x if kv_src is None else kv_src
+    q = _split_heads(x @ p["wq"], cfg.num_heads, hd)
+    k = _split_heads(src @ p["wk"], cfg.num_kv_heads, hd)
+    v = _split_heads(src @ p["wv"], cfg.num_kv_heads, hd)
+    if cfg.qk_norm and "q_norm" in p:
+        q = _rms_head(q, p["q_norm"])
+        k = _rms_head(k, p["k_norm"])
+    if kv_src is None and positions is not None:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    o = attention_core(q, k, v, causal=causal and kv_src is None,
+                       window=window)
+    return _merge_heads(o) @ p["wo"], (k, v)
+
+
+def decode_attention(p, x, cache, cfg: ModelConfig, *, index, window=None):
+    """Single-token decode with a (possibly ring-buffered) KV cache.
+
+    cache: {"k": (B,Hkv,C,D), "v": ..., "pos": (C,) global position of each
+    slot, -1 = empty}.  ``index`` is the global position of the new token.
+    """
+    hd = cfg.resolved_head_dim
+    q = _split_heads(x @ p["wq"], cfg.num_heads, hd)       # (B,H,1,D)
+    k_new = _split_heads(x @ p["wk"], cfg.num_kv_heads, hd)
+    v_new = _split_heads(x @ p["wv"], cfg.num_kv_heads, hd)
+    if cfg.qk_norm and "q_norm" in p:
+        q = _rms_head(q, p["q_norm"])
+        k_new = _rms_head(k_new, p["k_norm"])
+    q = apply_rope(q, index[None], cfg.rope_theta)
+    k_new = apply_rope(k_new, index[None], cfg.rope_theta)
+
+    c = cache["k"].shape[2]
+    slot = (index % c).astype(jnp.int32)
+    k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new.astype(cache["k"].dtype), slot, axis=2)
+    v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new.astype(cache["v"].dtype), slot, axis=2)
+    pos = cache["pos"].at[slot].set(index.astype(cache["pos"].dtype))
+
+    b, hq = q.shape[0], cfg.num_heads
+    hkv = cfg.num_kv_heads
+    g = hq // hkv
+    qf = q.reshape(b, hkv, g, 1, hd).astype(jnp.float32)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qf, k.astype(jnp.float32)) * (hd ** -0.5)
+    valid = (pos >= 0) & (pos <= index)
+    if window is not None:
+        valid &= pos > index - window
+    s = jnp.where(valid[None, None, None, None, :], s, _NEG)
+    pr = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", pr, v.astype(jnp.float32))
+    o = o.reshape(b, hq, 1, hd).astype(x.dtype)
+    out = _merge_heads(o) @ p["wo"]
+    return out, {"k": k, "v": v, "pos": pos}
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int, *,
+               window=None, dtype=None):
+    c = min(seq_len, window) if window else seq_len
+    hd = cfg.resolved_head_dim
+    dt = dtype or dtype_of(cfg, "act")
+    return {
+        "k": jnp.zeros((batch, cfg.num_kv_heads, c, hd), dt),
+        "v": jnp.zeros((batch, cfg.num_kv_heads, c, hd), dt),
+        "pos": jnp.full((c,), -1, jnp.int32),
+    }
+
+
+# --------------------------------------------------------------------------
+# MLP
+# --------------------------------------------------------------------------
+
+def init_mlp(cfg: ModelConfig, key):
+    d, f = cfg.d_model, cfg.d_ff
+    k1, k2 = jax.random.split(key)
+    pt = dtype_of(cfg)
+    if cfg.act == "silu":   # SwiGLU: fused gate+up
+        return {
+            "wi": (jax.random.normal(k1, (d, 2 * f)) * d ** -0.5).astype(pt),
+            "wo": (jax.random.normal(k2, (f, d)) * f ** -0.5).astype(pt),
+        }
+    return {
+        "wi": (jax.random.normal(k1, (d, f)) * d ** -0.5).astype(pt),
+        "wo": (jax.random.normal(k2, (f, d)) * f ** -0.5).astype(pt),
+    }
+
+
+def mlp_fwd(p, x, cfg: ModelConfig):
+    h = x @ p["wi"]
+    if cfg.act == "silu":
+        g, u = jnp.split(h, 2, axis=-1)
+        h = jax.nn.silu(g) * u
+    else:
+        h = jax.nn.gelu(h)
+    return h @ p["wo"]
+
+
+# --------------------------------------------------------------------------
+# embeddings / unembedding / loss
+# --------------------------------------------------------------------------
+
+def init_embed(cfg: ModelConfig, key):
+    pt = dtype_of(cfg)
+    p = {"embedding": (jax.random.normal(key, (cfg.padded_vocab, cfg.d_model))
+                       * 0.02).astype(pt)}
+    if not cfg.tie_embeddings:
+        k2 = jax.random.fold_in(key, 1)
+        p["unembed"] = (jax.random.normal(
+            k2, (cfg.d_model, cfg.padded_vocab)) * cfg.d_model ** -0.5
+        ).astype(pt)
+    return p
+
+
+def embed(p, tokens, cfg: ModelConfig):
+    return jnp.take(p["embedding"], tokens, axis=0).astype(
+        dtype_of(cfg, "act"))
+
+
+def unembed(p, x, cfg: ModelConfig):
+    w = p["embedding"].T if cfg.tie_embeddings else p["unembed"]
+    return (x @ w.astype(x.dtype)).astype(jnp.float32)
+
+
+def lm_loss(logits, targets, cfg: ModelConfig):
+    """Next-token CE with padded-vocab masking and z-loss."""
+    v = cfg.padded_vocab
+    neg = jnp.full((v,), 0.0, jnp.float32).at[cfg.vocab_size:].set(_NEG)
+    logits = logits + neg                    # mask padding region
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    weights = (targets >= 0).astype(jnp.float32)
+    tgt = jnp.maximum(targets, 0)
+    gold = jnp.take_along_axis(logits, tgt[..., None], axis=-1)[..., 0]
+    nll = (lse - gold) * weights
+    z = jnp.square(lse) * weights * cfg.z_loss
+    denom = jnp.maximum(jnp.sum(weights), 1.0)
+    return (jnp.sum(nll) + jnp.sum(z)) / denom

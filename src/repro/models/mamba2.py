@@ -1,0 +1,256 @@
+"""Mamba-2 / SSD (state-space duality) — mamba2-780m, and the SSM branch of
+hymba-1.5b.  [arXiv:2405.21060]
+
+Training/prefill uses the chunked SSD algorithm: within-chunk quadratic
+(matrix) form on the MXU + an inter-chunk state recurrence via ``lax.scan``
+— the TPU-native expression of the paper's "dual" form.  Decode is the
+O(1)-per-token recurrence on an (B, H, P, N) state, which is why the
+``long_500k`` shape is applicable to this family.
+
+Layout: d_inner = expand·d_model, heads H = d_inner / head_dim (P), single
+B/C group (G=1), state size N = cfg.ssm_state.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+
+def _dims(cfg: ModelConfig):
+    di = cfg.d_inner
+    p = cfg.ssm_head_dim
+    h = di // p
+    n = cfg.ssm_state
+    return di, h, p, n
+
+
+def init_ssm(cfg: ModelConfig, key):
+    di, h, p, n = _dims(cfg)
+    d = cfg.d_model
+    w = cfg.ssm_conv_width
+    k1, k2, k3 = jax.random.split(key, 3)
+    pt = L.dtype_of(cfg)
+    conv_ch = di + 2 * n
+    return {
+        "in_proj": (jax.random.normal(k1, (d, 2 * di + 2 * n + h))
+                    * d ** -0.5).astype(pt),
+        "conv_w": (jax.random.normal(k2, (w, conv_ch)) * w ** -0.5).astype(pt),
+        "conv_b": jnp.zeros((conv_ch,), pt),
+        "A_log": jnp.zeros((h,), jnp.float32),         # A = -exp(A_log) = -1
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "gate_norm": jnp.ones((di,), pt),
+        "out_proj": (jax.random.normal(k3, (di, d)) * di ** -0.5).astype(pt),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal 1-D conv, x (B, T, C), w (W, C)."""
+    width = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(width):                       # W is tiny (4): unrolled adds
+        out = out + xp[:, i:i + x.shape[1], :].astype(jnp.float32) \
+            * w[i].astype(jnp.float32)
+    return (out + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def _segsum_decay(cum):
+    """L[..., i, j] = exp(cum_i - cum_j) for i >= j else 0; cum (..., Q, H)."""
+    ci = cum[..., :, None, :]                    # (..., Q, 1, H)
+    cj = cum[..., None, :, :]                    # (..., 1, Q, H)
+    q = cum.shape[-2]
+    tri = jnp.tril(jnp.ones((q, q), bool))
+    val = jnp.exp(jnp.where(tri[..., None], ci - cj, -jnp.inf))
+    return val                                    # (..., Q, Q, H)
+
+
+def ssd_scan(xh, dt, a, bmat, cmat, cfg: ModelConfig, init_state=None):
+    """Chunked SSD.  xh (B,T,H,P), dt (B,T,H) (post-softplus), a (H,) (<0),
+    bmat/cmat (B,T,N).  Returns (y (B,T,H,P), final_state (B,H,P,N))."""
+    b, t, h, p = xh.shape
+    n = bmat.shape[-1]
+    q = min(cfg.ssm_chunk, t)
+    if t % q:
+        raise ValueError(f"T={t} not divisible by chunk={q}")
+    c = t // q
+
+    xb = xh.reshape(b, c, q, h, p).astype(jnp.float32)
+    dtb = dt.reshape(b, c, q, h)
+    bb = bmat.reshape(b, c, q, n).astype(jnp.float32)
+    cb = cmat.reshape(b, c, q, n).astype(jnp.float32)
+
+    da = dtb * a                                  # (B,C,Q,H)
+    cum = jnp.cumsum(da, axis=2)
+
+    # within-chunk (quadratic / "attention-like") term.  The (B,C,Q,Q,H)
+    # decay tensor is the HBM hot spot of the dual form (traffic ∝ T·Q·H)
+    # — keep Q modest (configs use 128) and carry the tensor in bf16; the
+    # contraction accumulates in fp32 (EXPERIMENTS.md §Perf, hymba hc1).
+    decay = _segsum_decay(cum).astype(jnp.bfloat16)   # (B,C,Q,Q,H)
+    scores = jnp.einsum("bcin,bcjn->bcij", cb, bb)
+    y_diag = jnp.einsum("bcij,bcijh,bcjh,bcjhp->bcihp",
+                        scores.astype(jnp.bfloat16), decay,
+                        dtb.astype(jnp.bfloat16), xb.astype(jnp.bfloat16),
+                        preferred_element_type=jnp.float32)
+
+    # chunk-boundary states
+    dstat = jnp.exp(cum[:, :, -1:, :] - cum)      # (B,C,Q,H)
+    states = jnp.einsum("bcjn,bcjh,bcjhp->bchpn", bb, dstat * dtb, xb)
+
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(cum[:, :, -1, :])       # (B,C,H)
+    h0 = jnp.zeros((b, h, p, n), jnp.float32) if init_state is None \
+        else init_state.astype(jnp.float32)
+
+    def step(hprev, xs):
+        s_c, dec_c = xs
+        hnext = dec_c[:, :, None, None] * hprev + s_c
+        return hnext, hprev
+
+    cd = jnp.moveaxis(chunk_decay, 1, 0)          # (C,B,H)
+    st = jnp.moveaxis(states, 1, 0)               # (C,B,H,P,N)
+    hfin, hprevs = jax.lax.scan(step, h0, (st, cd))
+    hprevs = jnp.moveaxis(hprevs, 0, 1)           # (B,C,H,P,N)
+
+    y_off = jnp.einsum("bcin,bchpn,bcih->bcihp", cb, hprevs, jnp.exp(cum))
+    y = (y_diag + y_off).reshape(b, t, h, p)
+    return y, hfin
+
+
+def ssm_fwd(p, x, cfg: ModelConfig, init_state=None):
+    """Full SSM block forward.  x (B,T,d) → (y (B,T,d), final_state)."""
+    di, h, pd, n = _dims(cfg)
+    proj = x @ p["in_proj"]
+    z, xr, braw, craw, dtraw = jnp.split(
+        proj, [di, 2 * di, 2 * di + n, 2 * di + 2 * n], axis=-1)
+    conv_in = jnp.concatenate([xr, braw, craw], axis=-1)
+    conv_out = jax.nn.silu(_causal_conv(conv_in, p["conv_w"], p["conv_b"]))
+    xr, braw, craw = jnp.split(conv_out, [di, di + n], axis=-1)
+
+    dt = jax.nn.softplus(dtraw.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["A_log"])
+    xh = xr.reshape(*xr.shape[:-1], h, pd)
+    y, state = ssd_scan(xh, dt, a, braw, craw, cfg, init_state)
+    y = y + p["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(*x.shape[:-1], di).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    # gated RMSNorm (mamba2's norm-before-out_proj)
+    yf = y.astype(jnp.float32)
+    y = (yf * jax.lax.rsqrt(jnp.mean(yf ** 2, -1, keepdims=True) + cfg.rms_eps)
+         * p["gate_norm"].astype(jnp.float32)).astype(x.dtype)
+    return y @ p["out_proj"], state
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, dtype=None):
+    di, h, pd, n = _dims(cfg)
+    w = cfg.ssm_conv_width
+    dt = dtype or L.dtype_of(cfg, "act")
+    return {
+        "conv": jnp.zeros((batch, w - 1, di + 2 * n), dt),
+        "state": jnp.zeros((batch, h, pd, n), jnp.float32),
+    }
+
+
+def ssm_decode(p, x, cache, cfg: ModelConfig):
+    """Single-token recurrence.  x (B, 1, d) → (y (B, 1, d), cache)."""
+    di, h, pd, n = _dims(cfg)
+    proj = x[:, 0, :] @ p["in_proj"]
+    z, xr, braw, craw, dtraw = jnp.split(
+        proj, [di, 2 * di, 2 * di + n, 2 * di + 2 * n], axis=-1)
+    conv_in = jnp.concatenate([xr, braw, craw], axis=-1)  # (B, C)
+    window = jnp.concatenate([cache["conv"], conv_in[:, None, :]], axis=1)
+    w = p["conv_w"]
+    conv_out = jnp.einsum("bwc,wc->bc", window.astype(jnp.float32),
+                          w.astype(jnp.float32)) + p["conv_b"].astype(jnp.float32)
+    conv_out = jax.nn.silu(conv_out).astype(x.dtype)
+    xr, braw, craw = jnp.split(conv_out, [di, di + n], axis=-1)
+
+    dt = jax.nn.softplus(dtraw.astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    a = -jnp.exp(p["A_log"])
+    decay = jnp.exp(dt * a)                                     # (B,H)
+    xh = xr.reshape(-1, h, pd).astype(jnp.float32)
+    hst = cache["state"]
+    hst = decay[..., None, None] * hst + jnp.einsum(
+        "bh,bhp,bn->bhpn", dt, xh, braw.astype(jnp.float32))
+    y = jnp.einsum("bhpn,bn->bhp", hst, craw.astype(jnp.float32))
+    y = y + p["D"][None, :, None] * xh
+    y = y.reshape(-1, di).astype(x.dtype) * jax.nn.silu(z)
+    yf = y.astype(jnp.float32)
+    y = (yf * jax.lax.rsqrt(jnp.mean(yf ** 2, -1, keepdims=True) + cfg.rms_eps)
+         * p["gate_norm"].astype(jnp.float32)).astype(x.dtype)
+    out = (y @ p["out_proj"])[:, None, :]
+    return out, {"conv": window[:, 1:, :], "state": hst}
+
+
+# --------------------------------------------------------------------------
+# full mamba2 model (family "ssm")
+# --------------------------------------------------------------------------
+
+def init_layer(cfg: ModelConfig, key):
+    return {"ln": L.init_norm(cfg), "ssm": init_ssm(cfg, key)}
+
+
+def init_params(cfg: ModelConfig, key):
+    ke, kl = jax.random.split(key)
+    lkeys = jax.random.split(kl, cfg.num_layers)
+    return {
+        "embed": L.init_embed(cfg, ke),
+        "layers": jax.vmap(functools.partial(init_layer, cfg))(lkeys),
+        "final_norm": L.init_norm(cfg),
+    }
+
+
+def forward(params, batch, cfg: ModelConfig, last_only: bool = False):
+    x = L.embed(params["embed"], batch["tokens"], cfg)
+
+    # NOTE: unlike hymba, mamba2 does NOT use runtime.mixer_cp — measured
+    # on the dry-run it made the collective term 4.6× WORSE (tx 4.3→20 s):
+    # mamba2's 48 SSD heads divide the TP axis, so its mixer was already
+    # mostly sharded and CP only added resharding all-to-alls
+    # (EXPERIMENTS.md §Perf, refuted hypothesis).
+    def body(x, lp):
+        h = L.apply_norm(lp["ln"], x, cfg)
+        y, _ = ssm_fwd(lp["ssm"], h, cfg)
+        return x + y, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    x = L.apply_norm(params["final_norm"], x, cfg)
+    if last_only:
+        x = x[:, -1:]
+    return L.unembed(params["embed"], x, cfg)
+
+
+def loss_fn(params, batch, cfg: ModelConfig):
+    return L.lm_loss(forward(params, batch, cfg), batch["targets"], cfg)
+
+
+def init_decode_state(params, cfg: ModelConfig, batch: int, seq_len: int,
+                      batch_ctx=None):
+    c1 = init_ssm_cache(cfg, batch)
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (cfg.num_layers,) + a.shape), c1)
+
+
+def decode_step(params, state, token, index, cfg: ModelConfig,
+                batch_ctx=None):
+    x = L.embed(params["embed"], token[:, None], cfg)
+
+    def body(x, inp):
+        lp, conv, hst = inp
+        h = L.apply_norm(lp["ln"], x, cfg)
+        y, nc = ssm_decode(lp["ssm"], h, {"conv": conv, "state": hst}, cfg)
+        return x + y, (nc["conv"], nc["state"])
+
+    x, (convs, hsts) = jax.lax.scan(
+        body, x, (params["layers"], state["conv"], state["state"]))
+    x = L.apply_norm(params["final_norm"], x, cfg)
+    logits = L.unembed(params["embed"], x, cfg)[:, 0, :]
+    return logits, {"conv": convs, "state": hsts}

@@ -1,0 +1,182 @@
+"""Token-choice top-k MoE transformer (dbrx-132b, kimi-k2-1t-a32b).
+
+Dispatch is the sort-based fixed-capacity scheme (no (T, E, C) one-hot):
+tokens are argsorted by expert id, positions-within-expert computed from the
+segment starts, and a (E, C) index table gathers tokens into per-expert
+rows.  Expert weights are sharded on the expert axis over ``"model"`` (EP);
+the gather/scatter become GSPMD all-to-alls.  Router math is fp32; a
+Switch-style load-balance auxiliary loss is returned alongside the logits.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+
+def init_moe_mlp(cfg: ModelConfig, key):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    k1, k2, k3 = jax.random.split(key, 3)
+    pt = L.dtype_of(cfg)
+    return {
+        "router": (jax.random.normal(k1, (d, e)) * d ** -0.5).astype(jnp.float32),
+        "wi": (jax.random.normal(k2, (e, d, 2 * f)) * d ** -0.5).astype(pt),
+        "wo": (jax.random.normal(k3, (e, f, d)) * f ** -0.5).astype(pt),
+    }
+
+
+def moe_fwd(p, x, cfg: ModelConfig):
+    """x (B, S, d) → (y (B, S, d), aux_loss)."""
+    from repro import runtime
+    b, s, d = x.shape
+    t = b * s
+    e, k = cfg.num_experts, cfg.top_k
+    # keep tokens batch-sharded through the dispatch: the sort/gather ops
+    # otherwise drive GSPMD into token replication (runtime.tokens_shard)
+    xf = runtime.tokens_shard(x.reshape(t, d))
+
+    logits = xf.astype(jnp.float32) @ p["router"]            # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(logits, k)         # (T, k)
+    gates = jax.nn.softmax(gate_vals, axis=-1)               # renormalized
+
+    # ---- sort-based dispatch -------------------------------------------
+    e_flat = expert_idx.reshape(-1)                          # (T*k,)
+    g_flat = gates.reshape(-1)
+    order = jnp.argsort(e_flat)
+    sorted_e = e_flat[order]
+    token_of = order // k                                    # original token
+    starts = jnp.searchsorted(sorted_e, jnp.arange(e))       # segment starts
+    pos_in_e = jnp.arange(t * k) - starts[sorted_e]
+    cap = int(max(1, -(-t * k // e) * cfg.capacity_factor))
+    cap = -(-cap // 128) * 128      # align so C shards over "data" (EP×DP)
+    # slots past capacity get an out-of-range position → dropped
+    slot_pos = jnp.where(pos_in_e < cap, pos_in_e, cap)
+    table = jnp.full((e, cap + 1), t, jnp.int32).at[
+        sorted_e, slot_pos].set(token_of.astype(jnp.int32))[:, :cap]
+    gtab = jnp.zeros((e, cap + 1), jnp.float32).at[
+        sorted_e, slot_pos].set(g_flat[order])[:, :cap]
+
+    # ---- expert compute (E over "model", capacity over "data") ----------
+    pad = 128
+    xp = jnp.concatenate([xf, jnp.zeros((pad, d), xf.dtype)], axis=0)
+    xe = runtime.expert_shard(jnp.take(xp, table, axis=0))   # (E, C, d)
+    h = jnp.einsum("ecd,edf->ecf", xe, p["wi"].astype(xe.dtype))
+    g, u = jnp.split(h, 2, axis=-1)
+    h = jax.nn.silu(g) * u
+    ye = jnp.einsum("ecf,efd->ecd", h, p["wo"].astype(h.dtype))
+    ye = runtime.expert_shard(ye)
+
+    # ---- weighted combine back to tokens --------------------------------
+    yw = ye.astype(jnp.float32) * gtab[..., None]
+    y = jnp.zeros((t + pad, d), jnp.float32).at[
+        table.reshape(-1)].add(yw.reshape(-1, d))[:t]
+    y = runtime.tokens_shard(y)
+
+    # ---- Switch load-balance aux loss ------------------------------------
+    counts = jnp.zeros((e,), jnp.float32).at[e_flat].add(1.0)
+    frac = counts / (t * k)
+    mean_prob = jnp.mean(probs, axis=0)
+    aux = e * jnp.sum(frac * mean_prob)
+    return y.reshape(b, s, d).astype(x.dtype), aux
+
+
+def init_layer(cfg: ModelConfig, key):
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": L.init_norm(cfg),
+        "attn": L.init_attention(cfg, k1),
+        "ln2": L.init_norm(cfg),
+        "moe": init_moe_mlp(cfg, k2),
+    }
+
+
+def init_params(cfg: ModelConfig, key):
+    ke, kl = jax.random.split(key)
+    lkeys = jax.random.split(kl, cfg.num_layers)
+    return {
+        "embed": L.init_embed(cfg, ke),
+        "layers": jax.vmap(functools.partial(init_layer, cfg))(lkeys),
+        "final_norm": L.init_norm(cfg),
+    }
+
+
+def forward(params, batch, cfg: ModelConfig, with_aux: bool = False,
+            last_only: bool = False):
+    tokens = batch["tokens"]
+    x = L.embed(params["embed"], tokens, cfg)
+    positions = jnp.arange(tokens.shape[1])
+
+    def body(carry, lp):
+        x, aux = carry
+        h = L.apply_norm(lp["ln1"], x, cfg)
+        a, _ = L.attention_fwd(lp["attn"], h, cfg, positions=positions,
+                               causal=True)
+        x = x + a
+        h = L.apply_norm(lp["ln2"], x, cfg)
+        y, aux_l = moe_fwd(lp["moe"], h, cfg)
+        return (x + y, aux + aux_l), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                               params["layers"])
+    x = L.apply_norm(params["final_norm"], x, cfg)
+    if last_only:
+        x = x[:, -1:]
+    logits = L.unembed(params["embed"], x, cfg)
+    if with_aux:
+        return logits, aux / cfg.num_layers
+    return logits
+
+
+def loss_fn(params, batch, cfg: ModelConfig):
+    logits, aux = forward(params, batch, cfg, with_aux=True)
+    return L.lm_loss(logits, batch["targets"], cfg) \
+        + cfg.router_aux_weight * aux
+
+
+def _moe_decode(p, x, cfg):
+    """Single-token MoE (B, 1, d): tiny T — dense top-k dispatch per token."""
+    y, _ = moe_fwd(p, x, cfg)
+    return y
+
+
+def init_decode_state(params, cfg: ModelConfig, batch: int, seq_len: int,
+                      batch_ctx=None):
+    cache1 = L.init_cache(cfg, batch, seq_len, window=cfg.window)
+    return {
+        "k": jnp.broadcast_to(cache1["k"], (cfg.num_layers,) + cache1["k"].shape),
+        "v": jnp.broadcast_to(cache1["v"], (cfg.num_layers,) + cache1["v"].shape),
+        "pos": cache1["pos"],
+    }
+
+
+def decode_step(params, state, token, index, cfg: ModelConfig,
+                batch_ctx=None):
+    x = L.embed(params["embed"], token[:, None], cfg)
+    pos = state["pos"]
+    c = pos.shape[0]
+    slot = (index % c).astype(jnp.int32)
+    new_pos = pos.at[slot].set(index.astype(pos.dtype))
+
+    def body(x, inp):
+        lp, ck, cv = inp
+        h = L.apply_norm(lp["ln1"], x, cfg)
+        a, new_cache = L.decode_attention(
+            lp["attn"], h, {"k": ck, "v": cv, "pos": pos}, cfg, index=index,
+            window=cfg.window)
+        x = x + a
+        h = L.apply_norm(lp["ln2"], x, cfg)
+        x = x + _moe_decode(lp["moe"], h, cfg)
+        return x, (new_cache["k"], new_cache["v"])
+
+    x, (ks, vs) = jax.lax.scan(body, x, (params["layers"], state["k"],
+                                         state["v"]))
+    x = L.apply_norm(params["final_norm"], x, cfg)
+    logits = L.unembed(params["embed"], x, cfg)[:, 0, :]
+    return logits, {"k": ks, "v": vs, "pos": new_pos}

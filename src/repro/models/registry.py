@@ -1,0 +1,74 @@
+"""Uniform model interface: family → module dispatch.
+
+Every family module exposes ``init_params``, ``forward``, ``loss_fn``,
+``init_decode_state`` and ``decode_step`` with the same signatures; this
+registry is the single place the training/serving/launch layers touch.
+"""
+from __future__ import annotations
+
+from types import ModuleType
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import encdec, hybrid, mamba2, moe, transformer, vlm
+
+FAMILIES: dict[str, ModuleType] = {
+    "dense": transformer,
+    "moe": moe,
+    "ssm": mamba2,
+    "hybrid": hybrid,
+    "encdec": encdec,
+    "vlm": vlm,
+}
+
+
+def get_module(cfg: ModelConfig) -> ModuleType:
+    try:
+        return FAMILIES[cfg.family]
+    except KeyError:
+        raise ValueError(f"unknown family {cfg.family!r}") from None
+
+
+def init_params(cfg: ModelConfig, key):
+    return get_module(cfg).init_params(cfg, key)
+
+
+def loss_fn(params, batch, cfg: ModelConfig):
+    return get_module(cfg).loss_fn(params, batch, cfg)
+
+
+def forward(params, batch, cfg: ModelConfig, last_only: bool = False):
+    return get_module(cfg).forward(params, batch, cfg, last_only=last_only)
+
+
+def init_decode_state(params, cfg: ModelConfig, batch: int, seq_len: int,
+                      batch_ctx=None):
+    return get_module(cfg).init_decode_state(params, cfg, batch, seq_len,
+                                             batch_ctx=batch_ctx)
+
+
+def decode_step(params, state, token, index, cfg: ModelConfig,
+                batch_ctx=None):
+    return get_module(cfg).decode_step(params, state, token, index, cfg,
+                                       batch_ctx=batch_ctx)
+
+
+def make_batch(cfg: ModelConfig, batch: int, seq: int, *, key=None):
+    """A concrete (small) training batch for smoke tests / examples."""
+    key = jax.random.key(0) if key is None else key
+    k1, k2, k3 = jax.random.split(key, 3)
+    tokens = jax.random.randint(k1, (batch, seq), 0, cfg.vocab_size)
+    out = {"tokens": tokens,
+           "targets": jnp.roll(tokens, -1, axis=1)}
+    if cfg.family == "encdec":
+        from repro.models.encdec import ENC_FRAMES
+        t_enc = min(ENC_FRAMES, 64)
+        out["frames"] = jax.random.normal(
+            k2, (batch, t_enc, cfg.d_model)).astype(jnp.bfloat16)
+    if cfg.family == "vlm":
+        t_img = min(cfg.img_tokens, 64) or 16
+        out["img_embeds"] = jax.random.normal(
+            k3, (batch, t_img, cfg.d_model)).astype(jnp.bfloat16)
+    return out

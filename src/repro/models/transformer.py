@@ -1,0 +1,144 @@
+"""Dense decoder-only transformer (qwen3 / codeqwen / tinyllama / minicpm).
+
+Layers are *scanned*: per-layer params are stacked on a leading axis and the
+forward pass is one ``lax.scan`` over them (MaxText-style), so HLO size and
+compile time are depth-independent and the remat policy applies per layer.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+
+def init_layer(cfg: ModelConfig, key):
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": L.init_norm(cfg),
+        "attn": L.init_attention(cfg, k1),
+        "ln2": L.init_norm(cfg),
+        "mlp": L.init_mlp(cfg, k2),
+    }
+
+
+def init_params(cfg: ModelConfig, key):
+    ke, kl = jax.random.split(key)
+    lkeys = jax.random.split(kl, cfg.num_layers)
+    return {
+        "embed": L.init_embed(cfg, ke),
+        "layers": jax.vmap(functools.partial(init_layer, cfg))(lkeys),
+        "final_norm": L.init_norm(cfg),
+    }
+
+
+def _layer_fwd(cfg, x, lp, positions):
+    # NOTE: Megatron-style sequence parallelism (runtime.seq_shard on the
+    # residual) was tried here and REFUTED on the dry-run: the chunked
+    # attention scans need full-sequence tensors, so GSPMD re-gathered
+    # every layer (tm 6.4→19.6 s, tx 6.3→25.7 s) — see EXPERIMENTS.md
+    # §Perf qwen3 iteration 2.
+    h = L.apply_norm(lp["ln1"], x, cfg)
+    a, _ = L.attention_fwd(lp["attn"], h, cfg, positions=positions,
+                           causal=True, window=cfg.window)
+    x = x + a
+    h = L.apply_norm(lp["ln2"], x, cfg)
+    return x + L.mlp_fwd(lp["mlp"], h, cfg)
+
+
+def forward(params, batch, cfg: ModelConfig, last_only: bool = False):
+    tokens = batch["tokens"]
+    x = L.embed(params["embed"], tokens, cfg)
+    positions = jnp.arange(tokens.shape[1])
+
+    def body(x, lp):
+        return _layer_fwd(cfg, x, lp, positions), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    x = L.apply_norm(params["final_norm"], x, cfg)
+    if last_only:
+        x = x[:, -1:]
+    return L.unembed(params["embed"], x, cfg)
+
+
+def loss_fn(params, batch, cfg: ModelConfig):
+    logits = forward(params, batch, cfg)
+    return L.lm_loss(logits, batch["targets"], cfg)
+
+
+# --------------------------------------------------------------------------
+# serving
+# --------------------------------------------------------------------------
+
+def init_decode_state(params, cfg: ModelConfig, batch: int, seq_len: int,
+                      batch_ctx=None):
+    cache1 = L.init_cache(cfg, batch, seq_len, window=cfg.window)
+    return {
+        "k": jnp.broadcast_to(cache1["k"], (cfg.num_layers,) + cache1["k"].shape),
+        "v": jnp.broadcast_to(cache1["v"], (cfg.num_layers,) + cache1["v"].shape),
+        "pos": cache1["pos"],
+    }
+
+
+def decode_step(params, state, token, index, cfg: ModelConfig,
+                batch_ctx=None):
+    """One new token given a KV cache.  token (B,), index () int32."""
+    x = L.embed(params["embed"], token[:, None], cfg)
+    pos = state["pos"]
+    c = pos.shape[0]
+    slot = (index % c).astype(jnp.int32)
+    new_pos = pos.at[slot].set(index.astype(pos.dtype))
+
+    def body(x, inp):
+        lp, ck, cv = inp
+        h = L.apply_norm(lp["ln1"], x, cfg)
+        a, new_cache = L.decode_attention(
+            lp["attn"], h, {"k": ck, "v": cv, "pos": pos}, cfg,
+            index=index, window=cfg.window)
+        x = x + a
+        h = L.apply_norm(lp["ln2"], x, cfg)
+        x = x + L.mlp_fwd(lp["mlp"], h, cfg)
+        return x, (new_cache["k"], new_cache["v"])
+
+    x, (ks, vs) = jax.lax.scan(body, x, (params["layers"], state["k"],
+                                         state["v"]))
+    x = L.apply_norm(params["final_norm"], x, cfg)
+    logits = L.unembed(params["embed"], x, cfg)[:, 0, :]
+    return logits, {"k": ks, "v": vs, "pos": new_pos}
+
+
+def prefill(params, batch, cfg: ModelConfig, cache_len: int | None = None):
+    """Forward pass that also fills a decode cache (serving warm-up)."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    cache_len = cache_len or s
+    x = L.embed(params["embed"], tokens, cfg)
+    positions = jnp.arange(s)
+
+    def body(x, lp):
+        h = L.apply_norm(lp["ln1"], x, cfg)
+        a, (k, v) = L.attention_fwd(lp["attn"], h, cfg, positions=positions,
+                                    causal=True, window=cfg.window)
+        x = x + a
+        h = L.apply_norm(lp["ln2"], x, cfg)
+        x = x + L.mlp_fwd(lp["mlp"], h, cfg)
+        return x, (k, v)
+
+    x, (ks, vs) = jax.lax.scan(body, x, params["layers"])
+    x = L.apply_norm(params["final_norm"], x, cfg)
+    logits = L.unembed(params["embed"], x, cfg)
+    # pack the per-layer K/V into a ring cache of length cache_len
+    pad = cache_len - s
+    if pad < 0:
+        raise ValueError("cache_len shorter than prompt")
+    ks = jnp.pad(ks, ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0)))
+    vs = jnp.pad(vs, ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0)))
+    pos = jnp.concatenate([jnp.arange(s), jnp.full((pad,), -1)]).astype(jnp.int32)
+    state = {"k": ks.astype(L.dtype_of(cfg, "act")),
+             "v": vs.astype(L.dtype_of(cfg, "act")), "pos": pos}
+    return logits, state

@@ -1,0 +1,187 @@
+"""Llama-3.2-Vision-style VLM backbone (llama-3.2-vision-90b).
+[hf:meta-llama/Llama-3.2-11B-Vision]
+
+Backbone only (per assignment): the vision tower is a STUB — the model
+consumes precomputed patch embeddings (B, img_tokens, d_model) from
+``input_specs``.  Every ``cross_attn_period``-th layer is a gated
+cross-attention transformer layer (tanh-gated attn + MLP, gates init 0 so
+the fresh model reproduces the text backbone), the rest are standard
+self-attention layers.
+
+Scan structure: layers are grouped as (period-1 self layers + 1 cross
+layer) × G groups; the outer ``lax.scan`` runs over groups, an inner scan
+over the self layers — HLO size stays depth-independent while cross-attn
+params exist only where cross-attn layers do.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import transformer as T
+
+
+def _group_shape(cfg: ModelConfig) -> tuple[int, int]:
+    period = cfg.cross_attn_period
+    if period <= 0 or cfg.num_layers % period:
+        raise ValueError(f"num_layers={cfg.num_layers} must be a multiple of "
+                         f"cross_attn_period={period}")
+    return cfg.num_layers // period, period - 1   # (groups, self per group)
+
+
+def init_cross_layer(cfg: ModelConfig, key):
+    k1, k2 = jax.random.split(key)
+    pt = L.dtype_of(cfg)
+    return {
+        "ln1": L.init_norm(cfg),
+        "xattn": L.init_attention(cfg, k1, cross=True),
+        "gate_attn": jnp.zeros((), pt),
+        "ln2": L.init_norm(cfg),
+        "mlp": L.init_mlp(cfg, k2),
+        "gate_mlp": jnp.zeros((), pt),
+    }
+
+
+def init_params(cfg: ModelConfig, key):
+    g, spg = _group_shape(cfg)
+    ke, ks, kx = jax.random.split(key, 3)
+    self_keys = jax.random.split(ks, g * spg).reshape(g, spg)
+    cross_keys = jax.random.split(kx, g)
+
+    init_group = jax.vmap(jax.vmap(functools.partial(T.init_layer, cfg)))
+    return {
+        "embed": L.init_embed(cfg, ke),
+        "self_layers": init_group(self_keys),
+        "cross_layers": jax.vmap(functools.partial(init_cross_layer, cfg))(
+            cross_keys),
+        "final_norm": L.init_norm(cfg),
+    }
+
+
+def _cross_fwd(cfg, x, lp, img):
+    h = L.apply_norm(lp["ln1"], x, cfg)
+    a, _ = L.attention_fwd(lp["xattn"], h, cfg, kv_src=img)
+    x = x + jnp.tanh(lp["gate_attn"].astype(jnp.float32)).astype(x.dtype) * a
+    h = L.apply_norm(lp["ln2"], x, cfg)
+    m = L.mlp_fwd(lp["mlp"], h, cfg)
+    return x + jnp.tanh(lp["gate_mlp"].astype(jnp.float32)).astype(x.dtype) * m
+
+
+def forward(params, batch, cfg: ModelConfig, last_only: bool = False):
+    """batch: {"tokens": (B,S), "img_embeds": (B,T_img,d)}."""
+    tokens = batch["tokens"]
+    img = batch["img_embeds"].astype(L.dtype_of(cfg, "act"))
+    x = L.embed(params["embed"], tokens, cfg)
+    positions = jnp.arange(tokens.shape[1])
+
+    def self_body(x, lp):
+        return T._layer_fwd(cfg, x, lp, positions), None
+
+    if cfg.remat:
+        self_body = jax.checkpoint(self_body)
+
+    def group_body(x, gp):
+        sp, xp = gp
+        x, _ = jax.lax.scan(self_body, x, sp)
+        return _cross_fwd(cfg, x, xp, img), None
+
+    if cfg.remat:
+        group_body = jax.checkpoint(group_body)
+    x, _ = jax.lax.scan(group_body, x,
+                        (params["self_layers"], params["cross_layers"]))
+    x = L.apply_norm(params["final_norm"], x, cfg)
+    if last_only:
+        x = x[:, -1:]
+    return L.unembed(params["embed"], x, cfg)
+
+
+def loss_fn(params, batch, cfg: ModelConfig):
+    return L.lm_loss(forward(params, batch, cfg), batch["targets"], cfg)
+
+
+# --------------------------------------------------------------------------
+# serving: self-KV ring caches + precomputed image cross-K/V per group
+# --------------------------------------------------------------------------
+
+def _img_kv(params, img, cfg: ModelConfig):
+    hd = cfg.resolved_head_dim
+
+    def per_group(xp):
+        k = img @ xp["xattn"]["wk"]
+        v = img @ xp["xattn"]["wv"]
+        b, t, _ = k.shape
+        to_heads = lambda y: y.reshape(b, t, cfg.num_kv_heads, hd
+                                       ).transpose(0, 2, 1, 3)
+        return to_heads(k), to_heads(v)
+
+    return jax.vmap(per_group, in_axes=(0,))(params["cross_layers"])
+
+
+def init_decode_state(params, cfg: ModelConfig, batch: int, seq_len: int,
+                      batch_ctx=None):
+    g, spg = _group_shape(cfg)
+    kv1 = L.init_cache(cfg, batch, seq_len)
+    state = {
+        "k": jnp.broadcast_to(kv1["k"], (g, spg) + kv1["k"].shape),
+        "v": jnp.broadcast_to(kv1["v"], (g, spg) + kv1["v"].shape),
+        "pos": kv1["pos"],
+    }
+    if batch_ctx is None:         # dry-run stand-in
+        hd = cfg.resolved_head_dim
+        z = jnp.zeros((g, batch, cfg.num_kv_heads, cfg.img_tokens, hd),
+                      L.dtype_of(cfg, "act"))
+        state["img_k"], state["img_v"] = z, z
+    else:
+        ik, iv = _img_kv(params, batch_ctx["img_embeds"].astype(
+            L.dtype_of(cfg, "act")), cfg)
+        state["img_k"] = ik.astype(L.dtype_of(cfg, "act"))
+        state["img_v"] = iv.astype(L.dtype_of(cfg, "act"))
+    return state
+
+
+def _cross_decode(cfg, x, xp, ik, iv):
+    from repro.models.encdec import _cross_decode as xdec
+    h = L.apply_norm(xp["ln1"], x, cfg)
+    a = xdec(xp["xattn"], h[:, 0, :], ik, iv, cfg)
+    x = x + jnp.tanh(xp["gate_attn"].astype(jnp.float32)).astype(x.dtype) * a
+    h = L.apply_norm(xp["ln2"], x, cfg)
+    m = L.mlp_fwd(xp["mlp"], h, cfg)
+    return x + jnp.tanh(xp["gate_mlp"].astype(jnp.float32)).astype(x.dtype) * m
+
+
+def decode_step(params, state, token, index, cfg: ModelConfig,
+                batch_ctx=None):
+    x = L.embed(params["embed"], token[:, None], cfg)
+    pos = state["pos"]
+    c = pos.shape[0]
+    slot = (index % c).astype(jnp.int32)
+    new_pos = pos.at[slot].set(index.astype(pos.dtype))
+
+    def self_body(x, inp):
+        lp, ck, cv = inp
+        h = L.apply_norm(lp["ln1"], x, cfg)
+        a, kv = L.decode_attention(lp["attn"], h, {"k": ck, "v": cv, "pos": pos},
+                                   cfg, index=index)
+        x = x + a
+        h = L.apply_norm(lp["ln2"], x, cfg)
+        x = x + L.mlp_fwd(lp["mlp"], h, cfg)
+        return x, (kv["k"], kv["v"])
+
+    def group_body(x, gp):
+        sp, xp, ck, cv, ik, iv = gp
+        x, (ks, vs) = jax.lax.scan(self_body, x, (sp, ck, cv))
+        x = _cross_decode(cfg, x, xp, ik, iv)
+        return x, (ks, vs)
+
+    x, (ks, vs) = jax.lax.scan(
+        group_body, x, (params["self_layers"], params["cross_layers"],
+                        state["k"], state["v"], state["img_k"],
+                        state["img_v"]))
+    x = L.apply_norm(params["final_norm"], x, cfg)
+    logits = L.unembed(params["embed"], x, cfg)[:, 0, :]
+    return logits, {"k": ks, "v": vs, "pos": new_pos,
+                    "img_k": state["img_k"], "img_v": state["img_v"]}

@@ -1,0 +1,79 @@
+"""Adafactor (factored second moment, no first moment by default).
+
+The memory-frugal optimizer for the ≥90B assigned configs (dbrx-132b,
+kimi-k2-1t-a32b, llama-3.2-vision-90b): for a (…, r, c) parameter the second
+moment is stored as a rank-1 pair (row mean, col mean) — O(r + c) instead of
+O(r·c) — which is the difference between fitting and not fitting the
+optimizer state in HBM at 256 chips (see EXPERIMENTS.md §Dry-run).
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.adamw import Optimizer, clip_by_global_norm
+
+
+def _factored(shape) -> bool:
+    return len(shape) >= 2 and shape[-1] > 1 and shape[-2] > 1
+
+
+def adafactor(lr: Callable | float = 1e-3, *, decay: float = 0.8,
+              eps: float = 1e-30, clip_threshold: float = 1.0,
+              weight_decay: float = 0.0,
+              clip_norm: float | None = 1.0) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        def leaf(p):
+            if _factored(p.shape):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                        jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"f": jax.tree.map(leaf, params)}
+
+    def update(grads, state, params, step):
+        if clip_norm is not None:
+            grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        else:
+            grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+            from repro.optim.adamw import global_norm
+            gnorm = global_norm(grads)
+        t = step.astype(jnp.float32) + 1.0
+        beta2 = 1.0 - jnp.power(t, -decay)
+        lr_t = jnp.asarray(lr_fn(step), jnp.float32)
+
+        def upd(g, s, p):
+            g2 = jnp.square(g) + eps
+            if _factored(g.shape):
+                vr = beta2 * s["vr"] + (1 - beta2) * jnp.mean(g2, axis=-1)
+                vc = beta2 * s["vc"] + (1 - beta2) * jnp.mean(g2, axis=-2)
+                rfac = jax.lax.rsqrt(
+                    vr / jnp.maximum(
+                        jnp.mean(vr, axis=-1, keepdims=True), eps))
+                cfac = jax.lax.rsqrt(vc)
+                u = g * rfac[..., None] * cfac[..., None, :]
+                news = {"vr": vr, "vc": vc}
+            else:
+                v = beta2 * s["v"] + (1 - beta2) * g2
+                u = g * jax.lax.rsqrt(v)
+                news = {"v": v}
+            # update clipping (Adafactor's RMS-1 rule)
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-30)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            newp = (p.astype(jnp.float32) - lr_t *
+                    (u + weight_decay * p.astype(jnp.float32))).astype(p.dtype)
+            return newp, news
+
+        flat_g, tdef = jax.tree.flatten(grads)
+        flat_s = tdef.flatten_up_to(state["f"])
+        flat_p = tdef.flatten_up_to(params)
+        out = [upd(g, s, p) for g, s, p in zip(flat_g, flat_s, flat_p)]
+        new_p = tdef.unflatten([o[0] for o in out])
+        new_s = tdef.unflatten([o[1] for o in out])
+        return new_p, {"f": new_s}, {"grad_norm": gnorm, "lr": lr_t}
+
+    return Optimizer(init, update)

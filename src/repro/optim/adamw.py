@@ -1,0 +1,75 @@
+"""AdamW with decoupled weight decay and global-norm clipping.
+
+State layout is a pytree mirroring the params (``m``/``v`` fp32); sharding
+of the state is decided by ``repro.train.sharding.opt_state_specs`` (ZeRO-1:
+the state is additionally sharded over the data axis).  Parameters may be
+bf16 — updates are computed in fp32 and cast back (no separate fp32 master
+copy; the fp32 ``m`` carries the precision, MaxText-style).
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable       # (grads, state, params, step) -> (new_params, new_state)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), norm
+
+
+def adamw(lr: Callable | float = 1e-3, *, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.1,
+          clip_norm: float | None = 1.0) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params)}
+
+    def update(grads, state, params, step):
+        if clip_norm is not None:
+            grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        else:
+            grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+            gnorm = global_norm(grads)
+        t = step.astype(jnp.float32) + 1.0
+        lr_t = jnp.asarray(lr_fn(step), jnp.float32)
+        bc1 = 1.0 - b1 ** t
+        bc2 = 1.0 - b2 ** t
+
+        def upd(g, m, v, p):
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * jnp.square(g)
+            mh = m / bc1
+            vh = v / bc2
+            step_ = mh / (jnp.sqrt(vh) + eps) + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr_t * step_).astype(p.dtype), m, v
+
+        flat_g, tdef = jax.tree.flatten(grads)
+        flat_m = tdef.flatten_up_to(state["m"])
+        flat_v = tdef.flatten_up_to(state["v"])
+        flat_p = tdef.flatten_up_to(params)
+        out = [upd(g, m, v, p) for g, m, v, p
+               in zip(flat_g, flat_m, flat_v, flat_p)]
+        new_p = tdef.unflatten([o[0] for o in out])
+        new_m = tdef.unflatten([o[1] for o in out])
+        new_v = tdef.unflatten([o[2] for o in out])
+        return new_p, {"m": new_m, "v": new_v}, {"grad_norm": gnorm,
+                                                 "lr": lr_t}
+
+    return Optimizer(init, update)

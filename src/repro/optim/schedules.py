@@ -1,0 +1,41 @@
+"""LR schedules: linear-warmup cosine, and WSD (warmup–stable–decay).
+
+WSD is the schedule of minicpm-2b [arXiv:2404.06395] — one of the assigned
+architectures — so it is first-class here: LR warms up, stays flat for the
+bulk of training (checkpointable "stable" phase usable for continued
+training), then decays quickly in the final ``decay_frac`` of steps.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_schedule(peak_lr: float, total_steps: int, *,
+                    warmup_steps: int = 100, final_frac: float = 0.1):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / jnp.maximum(warmup_steps, 1)
+        t = (step - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1)
+        t = jnp.clip(t, 0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup_steps, warm, peak_lr * cos)
+    return lr
+
+
+def wsd_schedule(peak_lr: float, total_steps: int, *,
+                 warmup_steps: int = 100, decay_frac: float = 0.1,
+                 final_frac: float = 0.01):
+    """Warmup → stable (flat) → exponential-ish decay tail (minicpm WSD)."""
+    decay_steps = max(int(total_steps * decay_frac), 1)
+    stable_end = total_steps - decay_steps
+
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / jnp.maximum(warmup_steps, 1)
+        t = jnp.clip((step - stable_end) / decay_steps, 0.0, 1.0)
+        decay = peak_lr * jnp.power(final_frac, t)   # exp decay to final_frac
+        flat = jnp.asarray(peak_lr, jnp.float32)
+        out = jnp.where(step < warmup_steps, warm,
+                        jnp.where(step < stable_end, flat, decay))
+        return out
+    return lr

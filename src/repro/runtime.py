@@ -1,0 +1,160 @@
+"""Global runtime switches (kept tiny on purpose).
+
+``use_pallas``: whether models route hot spots through the Pallas kernels.
+Defaults to True only on a real TPU backend; the CPU container and the
+512-device dry-run take the pure-jnp paths (same math — see
+repro.kernels.ops docstring).
+
+``mixer_cp``: context-parallel resharding helper for sequence-mixer blocks
+whose head counts do not divide the TP axis (hymba's 25 heads, mamba2's
+uneven in_proj split points).  Without it GSPMD replicates the whole mixer
+across ``"model"`` — 16× redundant HBM traffic (EXPERIMENTS.md §Perf,
+hymba hc1 iteration 3).  The constraint shards the *batch* over every mesh
+axis inside the mixer; the tiny mixer weights are all-gathered instead.
+No-ops when there is no ambient mesh or the batch does not divide.
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_FORCED: bool | None = None
+
+
+def mixer_cp(x):
+    """Reshard (B, S, d) activations to batch-over-ALL-axes, if possible."""
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+        if mesh is None or mesh.empty or not mesh.axis_names:
+            return x
+        total = 1
+        for a in mesh.axis_names:
+            total *= mesh.shape[a]
+        if x.shape[0] % total:
+            return x
+        spec = P(tuple(mesh.axis_names), *([None] * (x.ndim - 1)))
+        return jax.lax.with_sharding_constraint(x, spec)
+    except (RuntimeError, ValueError, AttributeError):
+        return x
+
+
+def tokens_shard(x):
+    """(T, d) flattened-token tensors: shard T over the DP axes.  The MoE
+    dispatch's sort/gather otherwise pushes GSPMD into replicating tokens
+    everywhere (measured: kimi-k2 attention ran at global batch per
+    device)."""
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+        if mesh is None or mesh.empty or not mesh.axis_names:
+            return x
+        dp = tuple(a for a in mesh.axis_names if a != "model")
+        total = 1
+        for a in dp:
+            total *= mesh.shape[a]
+        if not dp or x.shape[0] % total:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, P(dp, *([None] * (x.ndim - 1))))
+    except (RuntimeError, ValueError, AttributeError):
+        return x
+
+
+def expert_shard(x):
+    """(E, C, ...) expert-dispatch tensors: experts over "model" (EP),
+    capacity rows over "data" — the expert einsums then run fully
+    sharded instead of replicated."""
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+        if mesh is None or mesh.empty:
+            return x
+        parts = [None] * x.ndim
+        if "model" in mesh.axis_names and x.shape[0] % mesh.shape["model"] == 0:
+            parts[0] = "model"
+        if "data" in mesh.axis_names and x.ndim > 1 \
+                and x.shape[1] % mesh.shape["data"] == 0:
+            parts[1] = "data"
+        if not any(parts):
+            return x
+        return jax.lax.with_sharding_constraint(x, P(*parts))
+    except (RuntimeError, ValueError, AttributeError):
+        return x
+
+
+def replicate_heads(x):
+    """(B, H, T, D) k/v: batch on DP, everything else replicated — one
+    gather per layer instead of one per chunk-scan step."""
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+        if mesh is None or mesh.empty or not mesh.axis_names:
+            return x
+        dp = tuple(a for a in mesh.axis_names if a != "model")
+        total = 1
+        for a in dp:
+            total *= mesh.shape[a]
+        bspec = dp if (dp and x.shape[0] % total == 0) else None
+        return jax.lax.with_sharding_constraint(
+            x, P(bspec, *([None] * (x.ndim - 1))))
+    except (RuntimeError, ValueError, AttributeError):
+        return x
+
+
+def seq_shard(x):
+    """Sequence parallelism: shard (B, S, ...) activations' sequence dim
+    over "model" at layer boundaries.  Norms/residual adds then compute
+    1/TP per device and GSPMD turns the row-parallel all-reduce into
+    reduce-scatter (+ all-gather at the next column-parallel matmul) —
+    halving wire bytes per Megatron-SP.  No-op without an ambient mesh."""
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+        if mesh is None or mesh.empty or "model" not in mesh.axis_names:
+            return x
+        if x.ndim < 2 or x.shape[1] % mesh.shape["model"]:
+            return x
+        dp = tuple(a for a in mesh.axis_names if a != "model")
+        total = 1
+        for a in dp:
+            total *= mesh.shape[a]
+        bspec = dp if (dp and x.shape[0] % total == 0) else None
+        spec = P(bspec, "model", *([None] * (x.ndim - 2)))
+        return jax.lax.with_sharding_constraint(x, spec)
+    except (RuntimeError, ValueError, AttributeError):
+        return x
+
+
+def mixer_cp_out(x):
+    """Reshard mixer output back to batch-over-DP (TP axes free again)."""
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+        if mesh is None or mesh.empty or not mesh.axis_names:
+            return x
+        dp = tuple(a for a in mesh.axis_names if a != "model")
+        if not dp:
+            return x
+        total = 1
+        for a in dp:
+            total *= mesh.shape[a]
+        if x.shape[0] % total:
+            return x
+        spec = P(dp, *([None] * (x.ndim - 1)))
+        return jax.lax.with_sharding_constraint(x, spec)
+    except (RuntimeError, ValueError, AttributeError):
+        return x
+
+
+def use_pallas() -> bool:
+    if _FORCED is not None:
+        return _FORCED
+    return jax.default_backend() == "tpu"
+
+
+@contextlib.contextmanager
+def force_pallas(value: bool | None):
+    global _FORCED
+    prev = _FORCED
+    _FORCED = value
+    try:
+        yield
+    finally:
+        _FORCED = prev

@@ -1,0 +1,268 @@
+"""Sharding rules: param / batch / decode-state / optimizer-state specs.
+
+This is the LM-stack instantiation of the paper's "data distribution
+layer": one module owns every decision about how global arrays map onto the
+2-D (or 3-D multi-pod) device mesh.
+
+Axes (launch/mesh.py): ``"pod"`` (optional, cross-pod DP), ``"data"`` (DP),
+``"model"`` (TP/EP).  Rules:
+
+* Megatron TP — attention/MLP input projections shard their *output* dim on
+  ``"model"``; output projections shard their *input* dim; the pair
+  all-reduces once per block.  Sharding the flattened ``heads × head_dim``
+  dim (not the head count) keeps minicpm's 36 and hymba's 25 heads evenly
+  divisible (36·64 and 25·64 are multiples of 16).
+* Embeddings/unembed shard the (padded) vocab dim on ``"model"``.
+* MoE expert tables shard the expert dim on ``"model"`` (EP); the dispatch
+  gather/scatter become GSPMD all-to-alls.
+* Decode KV caches shard batch on DP and the cache-length dim on
+  ``"model"`` (KV heads can be < 16 so the head dim is not shardable);
+  SSM states shard the head (or head_dim) axis on ``"model"``.
+* ZeRO-1 — optimizer state takes the param spec plus ``"data"`` on the
+  first still-replicated divisible dim (within-pod only: cross-pod
+  opt-state gathers would cross DCN every step).
+
+Every rule degrades gracefully: a dim is sharded only if evenly divisible,
+otherwise the next candidate dim is tried, otherwise replicated.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+TP = "model"
+
+
+def dp_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def dp_size(mesh: Mesh) -> int:
+    n = 1
+    for a in dp_axes(mesh):
+        n *= mesh.shape[a]
+    return n
+
+
+def tp_size(mesh: Mesh) -> int:
+    return mesh.shape[TP] if TP in mesh.axis_names else 1
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                    for k in path)
+
+
+def _spec_with(ndim: int, dim: int, axis) -> P:
+    parts = [None] * ndim
+    parts[dim] = axis
+    return P(*parts)
+
+
+def batch_spec(mesh: Mesh, global_batch: int, ndim: int = 2) -> P:
+    """Batch-dim sharding over DP axes with divisibility fallback."""
+    axes = dp_axes(mesh)
+    n = dp_size(mesh)
+    if axes and global_batch % n == 0:
+        return _spec_with(ndim, 0, axes)
+    if "data" in axes and global_batch % mesh.shape["data"] == 0:
+        return _spec_with(ndim, 0, "data")
+    return P(*([None] * ndim))
+
+
+# --------------------------------------------------------------------------
+# parameter specs
+# --------------------------------------------------------------------------
+
+_REPLICATED_NAMES = {
+    "scale", "bias", "q_norm", "k_norm", "A_log", "D", "dt_bias",
+    "gate_attn", "gate_mlp", "enc_pos",
+}
+_LAST_DIM_NAMES = {"wq", "wk", "wv", "wi", "router", "in_proj"}
+_IN_DIM_NAMES = {"wo", "out_proj"}    # shard dim -2 (their input features)
+_CHANNEL_NAMES = {"conv_w", "conv_b", "gate_norm", "attn_norm", "ssm_norm",
+                  "beta_attn", "beta_ssm"}
+
+
+def _param_rule(path: str, name: str, shape, tp_n: int):
+    def ok(dim):
+        return shape[dim] % tp_n == 0 and shape[dim] >= tp_n
+
+    nd = len(shape)
+    if name in _REPLICATED_NAMES or nd == 0:
+        return P()
+    if name == "embedding":
+        return _spec_with(nd, 0, TP) if ok(0) else P()
+    if name == "unembed":
+        return _spec_with(nd, nd - 1, TP) if ok(nd - 1) else P()
+    if "moe" in path and name in ("wi", "wo"):
+        # (L, E, d, f): shard experts (EP)
+        if nd >= 2 and ok(1):
+            return _spec_with(nd, 1, TP)
+        return P()
+    if name in _LAST_DIM_NAMES:
+        return _spec_with(nd, nd - 1, TP) if ok(nd - 1) else P()
+    if name in _IN_DIM_NAMES and nd >= 2:
+        return _spec_with(nd, nd - 2, TP) if ok(nd - 2) else P()
+    if name in _CHANNEL_NAMES:
+        return _spec_with(nd, nd - 1, TP) if ok(nd - 1) else P()
+    return P()
+
+
+def param_specs(abstract_params, mesh: Mesh, *, fsdp: bool = False):
+    """Pytree of PartitionSpec matching an abstract (eval_shape) param tree.
+
+    ``fsdp=True`` additionally shards every (large) param over ``"data"``
+    on its first still-replicated divisible dim (ZeRO-3/FSDP) — required
+    for the ≥90B configs, whose weights do not fit 16-way-TP-sharded in
+    16 GB HBM (kimi-k2: 121 GiB/device TP-only → 7.6 GiB with FSDP).
+    GSPMD inserts the per-layer all-gathers; with scanned layers these
+    overlap the previous layer's compute.
+    """
+    tp_n = tp_size(mesh)
+
+    def leaf(path, p):
+        name = str(getattr(path[-1], "key", path[-1]))
+        spec = _param_rule(_path_str(path), name, p.shape, tp_n)
+        if fsdp and p.size * 2 > (1 << 20):      # leave small leaves alone
+            spec = zero1_spec(spec, p.shape, mesh)
+        return spec
+
+    return jax.tree_util.tree_map_with_path(leaf, abstract_params)
+
+
+def wants_fsdp(cfg) -> bool:
+    """FSDP for configs whose bf16 weights exceed ~2 GiB/device TP-only."""
+    return cfg.param_count() * 2 > 32 * (1 << 30)   # > 32 GiB total
+
+
+# --------------------------------------------------------------------------
+# optimizer-state specs (ZeRO-1)
+# --------------------------------------------------------------------------
+
+def zero1_spec(spec: P, shape, mesh: Mesh) -> P:
+    """Add "data" to the LAST replicated, divisible dim of ``spec``.
+
+    Dim choice matters enormously: sharding a weight's *contraction* dim
+    makes GSPMD all-reduce the (huge) activation outputs instead of
+    all-gathering the (small) weights — measured 1 TB/layer f32 ARs on
+    kimi-k2 (EXPERIMENTS.md §Perf, MoE iteration).  The last dim is the
+    output-features dim for every projection in this codebase, so FSDP
+    gathers weights (streamable, overlappable) rather than reducing
+    activations.
+    """
+    if "data" not in mesh.axis_names:
+        return spec
+    d = mesh.shape["data"]
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    for i in range(len(shape) - 1, -1, -1):
+        if parts[i] is None and shape[i] % d == 0 and shape[i] >= d:
+            parts[i] = "data"
+            return P(*parts)
+    return spec
+
+
+def opt_state_specs(abstract_opt, abstract_params, pspecs, mesh: Mesh):
+    """Opt-state tree specs: mirror the param spec (+ ZeRO-1 data sharding).
+
+    Works for both adamw ({"m","v"} mirroring params) and adafactor
+    ({"f"} with per-leaf dicts of reduced-rank stats).
+    """
+    # map each opt leaf to the param leaf whose shape prefix matches
+    flat_p = {tuple(_key_names(kp)): (v, s) for (kp, v), s in zip(
+        jax.tree_util.tree_flatten_with_path(abstract_params)[0],
+        jax.tree.leaves(pspecs, is_leaf=lambda x: isinstance(x, P)))}
+
+    def leaf(path, leaf_val):
+        names = tuple(_key_names(path))
+        # strip the leading "m"/"v"/"f" and trailing "vr"/"vc"/"v"
+        inner = names[1:]
+        if inner and inner[-1] in ("vr", "vc", "v"):
+            inner_param = inner[:-1]
+        else:
+            inner_param = inner
+        pv = flat_p.get(inner_param)
+        if pv is None:
+            return P()
+        pshape, pspec = pv[0].shape, pv[1]
+        if leaf_val.shape == pshape:
+            return zero1_spec(pspec, leaf_val.shape, mesh)
+        # factored stats: truncate the param spec to the reduced shape
+        parts = list(pspec) + [None] * (len(pshape) - len(pspec))
+        if names[-1] == "vr":      # row stats: param minus last dim
+            spec = P(*parts[:-1])
+        elif names[-1] == "vc":    # col stats: param minus second-to-last
+            spec = P(*(parts[:-2] + parts[-1:]))
+        else:
+            spec = P()
+        # guard divisibility after truncation
+        tp_n = tp_size(mesh)
+        fixed = [a if (a is None or (dim % (tp_n if a == TP else
+                 mesh.shape[a] if isinstance(a, str) else 1) == 0)) else None
+                 for a, dim in zip(list(spec) + [None] * (
+                     len(leaf_val.shape) - len(spec)), leaf_val.shape)]
+        return zero1_spec(P(*fixed), leaf_val.shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(leaf, abstract_opt)
+
+
+def _key_names(path):
+    return [str(getattr(k, "key", getattr(k, "idx", k))) for k in path]
+
+
+# --------------------------------------------------------------------------
+# decode-state specs
+# --------------------------------------------------------------------------
+
+def decode_state_specs(abstract_state, mesh: Mesh, global_batch: int):
+    """Specs for KV/SSM caches: batch on DP, cache-len / head dims on TP."""
+    tp_n = tp_size(mesh)
+    daxes = dp_axes(mesh)
+    dn = dp_size(mesh)
+    batch_axis = daxes if (daxes and global_batch % dn == 0) else None
+
+    def leaf(path, v):
+        name = _key_names(path)[-1]
+        nd = len(v.shape)
+        if name == "pos":
+            return P()
+        parts = [None] * nd
+        if name in ("k", "v", "cross_k", "cross_v", "img_k", "img_v"):
+            # (..., B, H, C, D): batch = nd-4, cache len = nd-2
+            b_dim, c_dim = nd - 4, nd - 2
+            if batch_axis and v.shape[b_dim] % dn == 0:
+                parts[b_dim] = batch_axis
+            if v.shape[c_dim] % tp_n == 0 and v.shape[c_dim] >= tp_n:
+                parts[c_dim] = TP
+            return P(*parts)
+        if name == "state":
+            # (L, B, H, Phd, N)
+            b_dim = nd - 4
+            if batch_axis and v.shape[b_dim] % dn == 0:
+                parts[b_dim] = batch_axis
+            for dim in (nd - 3, nd - 2):       # heads, then head_dim
+                if v.shape[dim] % tp_n == 0 and v.shape[dim] >= tp_n:
+                    parts[dim] = TP
+                    break
+            return P(*parts)
+        if name == "conv":
+            # (L, B, W-1, C)
+            b_dim = nd - 3
+            if batch_axis and v.shape[b_dim] % dn == 0:
+                parts[b_dim] = batch_axis
+            if v.shape[nd - 1] % tp_n == 0:
+                parts[nd - 1] = TP
+            return P(*parts)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(leaf, abstract_state)
+
+
+# --------------------------------------------------------------------------
+# helpers
+# --------------------------------------------------------------------------
+
+def shardings_of(spec_tree, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,78 @@
+"""``input_specs`` — ShapeDtypeStruct stand-ins for every model input.
+
+The dry-run lowers against these (weak-type-correct, shardable, no device
+allocation).  For a training step: {tokens, targets} (+ modality-stub
+embeddings for encdec/vlm).  For serving: the request batch, and for decode
+shapes the (abstract) decode state itself — the KV/SSM caches are the
+memory-dominant inputs at 32k/500k context.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import registry
+from repro.models.encdec import ENC_FRAMES
+from repro.train import sharding as sh
+
+
+def abstract_params(cfg: ModelConfig):
+    key = jax.ShapeDtypeStruct((), jax.random.key(0).dtype)
+    return jax.eval_shape(functools.partial(registry.init_params, cfg),
+                          jax.random.key(0))
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def train_inputs(cfg: ModelConfig, shape: ShapeConfig):
+    b, s = shape.global_batch, shape.seq_len
+    batch = {
+        "tokens": _sds((b, s), jnp.int32),
+        "targets": _sds((b, s), jnp.int32),
+    }
+    act = jnp.dtype(cfg.act_dtype)
+    if cfg.family == "encdec":
+        batch["frames"] = _sds((b, ENC_FRAMES, cfg.d_model), act)
+    if cfg.family == "vlm":
+        batch["img_embeds"] = _sds((b, cfg.img_tokens, cfg.d_model), act)
+    return batch
+
+
+def train_input_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh):
+    batch = train_inputs(cfg, shape)
+    return {k: sh.batch_spec(mesh, shape.global_batch, ndim=v.ndim)
+            for k, v in batch.items()}
+
+
+def prefill_inputs(cfg: ModelConfig, shape: ShapeConfig):
+    batch = train_inputs(cfg, shape)
+    batch.pop("targets")
+    return batch
+
+
+def decode_inputs(cfg: ModelConfig, shape: ShapeConfig):
+    """(token, index, abstract decode state) for one serve_step."""
+    b, s = shape.global_batch, shape.seq_len
+    state = jax.eval_shape(
+        lambda: registry.init_decode_state(None, cfg, b, s))
+    return {
+        "token": _sds((b,), jnp.int32),
+        "index": _sds((), jnp.int32),
+        "state": state,
+    }
+
+
+def decode_input_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh):
+    inp = decode_inputs(cfg, shape)
+    return {
+        "token": sh.batch_spec(mesh, shape.global_batch, ndim=1),
+        "index": P(),
+        "state": sh.decode_state_specs(inp["state"], mesh,
+                                       shape.global_batch),
+    }

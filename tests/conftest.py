@@ -1,0 +1,19 @@
+import warnings
+
+import numpy as np
+import pytest
+
+warnings.filterwarnings("ignore", category=DeprecationWarning)
+warnings.filterwarnings("ignore", category=FutureWarning)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="session")
+def mesh1():
+    """A (1,1) mesh so mesh-requiring code paths run on one CPU device."""
+    from repro.core import dist
+    return dist.single_device_mesh()

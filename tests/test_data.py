@@ -1,0 +1,64 @@
+"""Data pipeline: deterministic, shard-consistent, restart-exact."""
+import numpy as np
+
+from repro.data import TokenPipeline
+
+
+def _pipe(**kw):
+    base = dict(vocab_size=1000, seq_len=64, global_batch=8, seed=7)
+    base.update(kw)
+    return TokenPipeline(**base)
+
+
+def test_deterministic():
+    a = _pipe().batch(3)
+    b = _pipe().batch(3)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+
+
+def test_steps_differ():
+    p = _pipe()
+    assert not np.array_equal(p.batch(0)["tokens"], p.batch(1)["tokens"])
+
+
+def test_seeds_differ():
+    assert not np.array_equal(_pipe(seed=1).batch(0)["tokens"],
+                              _pipe(seed=2).batch(0)["tokens"])
+
+
+def test_shards_partition_global_batch():
+    """Concatenated shard batches == the global batch (elastic property:
+    any host can recompute any shard)."""
+    full = _pipe().global_batch_view(5)
+    parts = [
+        _pipe(num_shards=4, shard=s).batch(5)["tokens"] for s in range(4)]
+    np.testing.assert_array_equal(np.concatenate(parts, 0), full["tokens"])
+
+
+def test_targets_are_next_token():
+    b = _pipe().batch(0)
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["targets"][:, :-1])
+
+
+def test_tokens_in_range():
+    b = _pipe().batch(0)
+    assert b["tokens"].min() >= 0
+    assert b["tokens"].max() < 1000
+
+
+def test_has_document_structure():
+    p = _pipe(seq_len=4096, mean_doc_len=128)
+    t = p.batch(0)["tokens"]
+    eos_frac = (t == p.eos_id).mean()
+    assert 1 / 400 < eos_frac < 1 / 30     # ~1/128 expected
+
+
+def test_restart_exactness():
+    """Stream [k, k+n) is identical whether or not steps [0, k) were read —
+    the property checkpoint-resume relies on."""
+    p1 = _pipe()
+    seen = [p1.batch(s)["tokens"] for s in range(10)]
+    p2 = _pipe()     # "restarted process"
+    resumed = [p2.batch(s)["tokens"] for s in range(5, 10)]
+    for a, b in zip(seen[5:], resumed):
+        np.testing.assert_array_equal(a, b)

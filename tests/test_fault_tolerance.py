@@ -1,0 +1,68 @@
+"""Fault tolerance: watchdog detection, injected failures, recovery loop."""
+import time
+
+import pytest
+
+from repro.distributed.fault_tolerance import (
+    FailureInjector, HeartbeatMonitor, NodeFailure, run_with_recovery)
+
+
+def test_heartbeat_detects_stall():
+    fired = []
+    mon = HeartbeatMonitor(step_budget_s=0.2,
+                           on_timeout=lambda: fired.append(1))
+    mon.start(poll_s=0.05)
+    time.sleep(0.5)
+    mon.stop()
+    assert mon.timed_out and fired
+
+
+def test_heartbeat_survives_with_beats():
+    mon = HeartbeatMonitor(step_budget_s=0.3)
+    mon.start(poll_s=0.05)
+    for _ in range(5):
+        time.sleep(0.1)
+        mon.beat()
+    mon.stop()
+    assert not mon.timed_out
+
+
+def test_failure_injector():
+    inj = FailureInjector({2})
+    inj.check(0)
+    inj.check(1)
+    with pytest.raises(NodeFailure):
+        inj.check(2)
+    inj.check(2)      # fires once
+    assert inj.failures == 1
+
+
+def test_run_with_recovery_resumes():
+    """The loop crashes twice; recovery restores the last checkpoint and
+    finishes the work."""
+    inj = FailureInjector({3, 7})
+    checkpoints = {"state": 0}    # simulated checkpoint store
+
+    def restore():
+        return checkpoints["state"]
+
+    def loop(start):
+        s = start
+        while s < 10:
+            inj.check(s)
+            s += 1
+            checkpoints["state"] = s     # checkpoint every step
+        return s
+
+    final, recoveries = run_with_recovery(loop, restore=restore,
+                                          max_failures=3)
+    assert final == 10
+    assert recoveries == 2
+
+
+def test_run_with_recovery_gives_up():
+    def loop(start):
+        raise NodeFailure("always")
+
+    with pytest.raises(NodeFailure):
+        run_with_recovery(loop, restore=lambda: 0, max_failures=2)

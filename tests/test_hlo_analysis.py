@@ -1,0 +1,105 @@
+"""The while-aware HLO cost model against programs with known costs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis.hlo import analyze_hlo
+
+
+def _cost_of(fn, *args):
+    compiled = jax.jit(fn).lower(*args).compile()
+    return analyze_hlo(compiled.as_text())
+
+
+def test_single_matmul_flops():
+    m = n = k = 256
+    a = jnp.zeros((m, k), jnp.float32)
+    b = jnp.zeros((k, n), jnp.float32)
+    cost = _cost_of(lambda x, y: x @ y, a, b)
+    expect = 2 * m * n * k
+    assert abs(cost.flops - expect) / expect < 0.05, cost.flops
+
+
+def test_scan_multiplies_body_cost():
+    """A scan of T matmuls must count ~T × one matmul (the bug in
+    cost_analysis this parser exists to fix)."""
+    t, n = 8, 128
+    ws = jnp.zeros((t, n, n), jnp.float32)
+    x = jnp.zeros((4, n), jnp.float32)
+
+    def f(x, ws):
+        def body(c, w):
+            return jnp.tanh(c @ w), None
+        return jax.lax.scan(body, x, ws)[0]
+
+    cost = _cost_of(f, x, ws)
+    expect = t * 2 * 4 * n * n
+    assert cost.flops > 0.8 * expect, (cost.flops, expect)
+    assert cost.flops < 3.0 * expect, (cost.flops, expect)
+
+
+def test_nested_scan():
+    t1, t2, n = 4, 5, 64
+    x = jnp.zeros((4, n), jnp.float32)
+    w = jnp.zeros((n, n), jnp.float32)
+
+    def f(x, w):
+        def outer(c, _):
+            def inner(ci, _):
+                return jnp.tanh(ci @ w), None
+            return jax.lax.scan(inner, c, None, length=t2)[0], None
+        return jax.lax.scan(outer, x, None, length=t1)[0]
+
+    cost = _cost_of(f, x, w)
+    expect = t1 * t2 * 2 * 4 * n * n
+    assert cost.flops > 0.8 * expect
+    assert cost.flops < 3.0 * expect
+
+
+def test_traffic_reasonable_for_elementwise():
+    n = 1 << 20
+    x = jnp.zeros((n,), jnp.float32)
+    cost = _cost_of(lambda v: v * 2 + 1, x)
+    # one read + one write = 8 MB; fused, so should be within ~3×
+    assert cost.traffic_bytes < 5 * 8 * n
+    assert cost.traffic_bytes >= 8 * n * 0.9
+
+
+def test_collective_counting():
+    import os
+    # single-device psum via shard_map on 1-device mesh: lowered as
+    # all-reduce only with real multi-device meshes; so instead parse a
+    # known multi-device HLO only if devices available
+    if len(jax.devices()) < 2:
+        # synthetic check on the parser directly
+        txt = """
+HloModule test, entry_computation_layout={()->f32[]}
+
+ENTRY %main () -> f32[] {
+  %c = f32[128,256]{1,0} parameter(0)
+  ROOT %ar = f32[128,256]{1,0} all-reduce(%c), replica_groups=[4,2]<=[8], to_apply=%add
+}
+"""
+        cost = analyze_hlo(txt)
+        assert cost.collective_bytes["all-reduce"] == 128 * 256 * 4
+        assert cost.group_sizes["all-reduce"] == 2
+
+
+def test_dus_not_overcounted():
+    """Scan stacking its carry into a big buffer must not count the whole
+    buffer every iteration."""
+    t, n = 64, 256
+    x = jnp.zeros((n, n), jnp.float32)
+
+    def f(x):
+        def body(c, _):
+            c = jnp.tanh(c)
+            return c, c[0]                     # stash one row per step
+        _, rows = jax.lax.scan(body, x, None, length=t)
+        return rows
+
+    cost = _cost_of(f, x)
+    # per-iter traffic ≈ read+write of (n,n) tanh + row stash ≈ 2*n*n*4
+    per_iter = 2 * n * n * 4
+    assert cost.traffic_bytes < 4 * t * per_iter, \
+        (cost.traffic_bytes, t * per_iter)

@@ -1,0 +1,112 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode): shape/dtype sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import attention as attn_k
+from repro.kernels import gemm, krylov_fused, ref, trsm
+
+
+@pytest.mark.parametrize("m,n,k", [(128, 128, 128), (256, 128, 64),
+                                   (128, 256, 256), (512, 256, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gemm_sweep(m, n, k, dtype):
+    k1, k2 = jax.random.split(jax.random.key(0))
+    a = jax.random.normal(k1, (m, k), jnp.float32).astype(dtype)
+    b = jax.random.normal(k2, (k, n), jnp.float32).astype(dtype)
+    got = gemm.matmul(a, b, bm=128, bn=128, bk=64, interpret=True)
+    want = ref.matmul(a, b)
+    tol = 1e-4 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol * k)
+
+
+@pytest.mark.parametrize("blocks", [(64, 64), (128, 256), (32, 128)])
+def test_gemm_block_shapes(blocks):
+    bm, bk = blocks
+    a = jax.random.normal(jax.random.key(1), (256, 256), jnp.float32)
+    b = jax.random.normal(jax.random.key(2), (256, 256), jnp.float32)
+    got = gemm.matmul(a, b, bm=bm, bn=128, bk=bk, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref.matmul(a, b)),
+                               rtol=1e-4, atol=0.05)
+
+
+@pytest.mark.parametrize("n,m,sb,bc", [(128, 128, 32, 64), (256, 128, 64, 128),
+                                       (128, 256, 128, 128)])
+@pytest.mark.parametrize("unit", [False, True])
+def test_trsm_sweep(n, m, sb, bc, unit):
+    k1, k2 = jax.random.split(jax.random.key(3))
+    l = jnp.tril(jax.random.normal(k1, (n, n), jnp.float32) * 0.1) \
+        + 2.0 * jnp.eye(n)
+    b = jax.random.normal(k2, (n, m), jnp.float32)
+    got = trsm.trsm_lower(l, b, unit_diagonal=unit, sb=sb, bc=bc,
+                          interpret=True)
+    want = ref.trsm_lower(l, b, unit_diagonal=unit)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("hq,hkv", [(4, 4), (4, 2), (8, 1)])
+@pytest.mark.parametrize("causal", [True, False])
+def test_attention_gqa_sweep(hq, hkv, causal):
+    k1, k2, k3 = jax.random.split(jax.random.key(4), 3)
+    q = jax.random.normal(k1, (2, hq, 256, 64), jnp.float32)
+    k = jax.random.normal(k2, (2, hkv, 256, 64), jnp.float32)
+    v = jax.random.normal(k3, (2, hkv, 256, 64), jnp.float32)
+    got = attn_k.flash_attention(q, k, v, causal=causal, bq=128, bk=128,
+                                 interpret=True)
+    want = ref.attention(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_attention_sliding_window():
+    k1, k2, k3 = jax.random.split(jax.random.key(5), 3)
+    q = jax.random.normal(k1, (1, 2, 256, 64), jnp.float32)
+    k = jax.random.normal(k2, (1, 2, 256, 64), jnp.float32)
+    v = jax.random.normal(k3, (1, 2, 256, 64), jnp.float32)
+    got = attn_k.flash_attention(q, k, v, causal=True, window=128,
+                                 bq=128, bk=128, interpret=True)
+    want = ref.attention(q, k, v, causal=True, window=128)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_attention_decode_offset():
+    """Tq < Tk (queries are the last positions — decode/chunked prefill)."""
+    k1, k2, k3 = jax.random.split(jax.random.key(6), 3)
+    q = jax.random.normal(k1, (1, 2, 128, 64), jnp.float32)
+    k = jax.random.normal(k2, (1, 2, 512, 64), jnp.float32)
+    v = jax.random.normal(k3, (1, 2, 512, 64), jnp.float32)
+    got = attn_k.flash_attention(q, k, v, causal=True, bq=128, bk=128,
+                                 interpret=True)
+    want = ref.attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("n", [1024, 4096, 128 * 6])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fused_cg_update_sweep(n, dtype):
+    ks = jax.random.split(jax.random.key(7), 4)
+    x, r, p, ap = (jax.random.normal(k, (n,), jnp.float32).astype(dtype)
+                   for k in ks)
+    got = krylov_fused.fused_cg_update(x, r, p, ap, 0.37, block_rows=2,
+                                       interpret=True)
+    want = ref.fused_cg_update(x, r, p, ap, 0.37)
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    for g, w in zip(got[:2], want[:2]):
+        np.testing.assert_allclose(np.asarray(g, np.float32),
+                                   np.asarray(w, np.float32),
+                                   rtol=tol, atol=tol)
+    np.testing.assert_allclose(float(got[2]), float(want[2]),
+                               rtol=max(tol, 1e-4) * 10)
+
+
+def test_gemm_rejects_untiled():
+    a = jnp.zeros((100, 128))
+    b = jnp.zeros((128, 128))
+    with pytest.raises(ValueError):
+        gemm.matmul(a, b, bm=64, bn=64, bk=64, interpret=True)

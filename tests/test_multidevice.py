@@ -1,0 +1,27 @@
+"""Multi-device battery (8 virtual devices) in a subprocess, so the main
+pytest process keeps its 1-device view (the dry-run env flag must not leak
+into smoke tests — assignment requirement)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+@pytest.mark.timeout(900)
+def test_selftest_battery():
+    env = dict(os.environ,
+               PYTHONPATH=os.path.abspath(SRC),
+               XLA_FLAGS="--xla_force_host_platform_device_count=8")
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.selftest"],
+        capture_output=True, text=True, env=env, timeout=850)
+    assert "SELFTEST PASS" in proc.stdout, \
+        f"stdout:\n{proc.stdout[-3000:]}\nstderr:\n{proc.stderr[-3000:]}"
+
+
+def test_main_process_single_device():
+    import jax
+    assert len(jax.devices()) == 1

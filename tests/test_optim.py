@@ -1,0 +1,79 @@
+"""Optimizers + schedules."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import adafactor, adamw, cosine_schedule, wsd_schedule
+
+
+def _rosenbrockish(params):
+    x, y = params["x"], params["y"]
+    return jnp.sum((1 - x) ** 2) + 10 * jnp.sum((y - x ** 2) ** 2)
+
+
+@pytest.mark.parametrize("make_opt,steps", [(lambda: adamw(lr=0.05), 200),
+                                            (lambda: adafactor(lr=0.1), 400)])
+def test_optimizer_converges(make_opt, steps):
+    opt = make_opt()
+    params = {"x": jnp.zeros((4, 4)), "y": jnp.zeros((4, 4))}
+    state = opt.init(params)
+    loss0 = float(_rosenbrockish(params))
+    for step in range(steps):
+        g = jax.grad(_rosenbrockish)(params)
+        params, state, _ = opt.update(g, state, params,
+                                      jnp.asarray(step, jnp.int32))
+    assert float(_rosenbrockish(params)) < loss0 * 0.05
+
+
+def test_adamw_bf16_params():
+    opt = adamw(lr=0.1, weight_decay=0.0)
+    params = {"w": jnp.ones((8,), jnp.bfloat16)}
+    state = opt.init(params)
+    g = {"w": jnp.ones((8,), jnp.bfloat16)}
+    new, state, m = opt.update(g, state, params, jnp.zeros((), jnp.int32))
+    assert new["w"].dtype == jnp.bfloat16
+    assert float(new["w"][0]) < 1.0
+    assert state["m"]["w"].dtype == jnp.float32
+
+
+def test_adafactor_is_factored():
+    opt = adafactor(lr=0.1)
+    params = {"w": jnp.ones((64, 32)), "b": jnp.ones((64,))}
+    state = opt.init(params)
+    assert state["f"]["w"]["vr"].shape == (64,)
+    assert state["f"]["w"]["vc"].shape == (32,)
+    assert state["f"]["b"]["v"].shape == (64,)
+    # memory: factored state is O(r+c), not O(r*c)
+    n_state = sum(x.size for x in jax.tree.leaves(state))
+    assert n_state == 64 + 32 + 64
+
+
+def test_grad_clip():
+    opt = adamw(lr=0.0, clip_norm=1.0)   # lr 0: only metrics matter
+    params = {"w": jnp.zeros((4,))}
+    state = opt.init(params)
+    g = {"w": jnp.full((4,), 100.0)}
+    _, _, metrics = opt.update(g, state, params, jnp.zeros((), jnp.int32))
+    assert float(metrics["grad_norm"]) == pytest.approx(200.0)
+
+
+def test_cosine_schedule():
+    lr = cosine_schedule(1.0, 1000, warmup_steps=100)
+    assert float(lr(0)) == 0.0
+    assert float(lr(50)) == pytest.approx(0.5)
+    assert float(lr(100)) == pytest.approx(1.0)
+    assert float(lr(1000)) == pytest.approx(0.1, abs=1e-3)
+    # monotone decay after warmup
+    vals = [float(lr(s)) for s in range(100, 1000, 50)]
+    assert all(a >= b for a, b in zip(vals, vals[1:]))
+
+
+def test_wsd_schedule():
+    """Warmup–stable–decay (minicpm): flat plateau then sharp tail."""
+    lr = wsd_schedule(1.0, 1000, warmup_steps=100, decay_frac=0.1)
+    assert float(lr(50)) == pytest.approx(0.5)
+    assert float(lr(500)) == pytest.approx(1.0)      # stable phase is flat
+    assert float(lr(899)) == pytest.approx(1.0)
+    assert float(lr(1000)) == pytest.approx(0.01, rel=0.05)
+    assert float(lr(950)) < 1.0

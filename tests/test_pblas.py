@@ -1,0 +1,46 @@
+"""Parallel BLAS on the (1,1) mesh (communication-free degenerate case —
+the multi-device cases run in the selftest battery)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import pblas
+
+
+def test_pmatvec_spmd(mesh1, rng):
+    a = rng.standard_normal((64, 64)).astype(np.float32)
+    x = rng.standard_normal(64).astype(np.float32)
+    y = pblas.pmatvec_spmd(jnp.asarray(a), jnp.asarray(x), mesh1)
+    np.testing.assert_allclose(np.asarray(y), a @ x, rtol=1e-5, atol=1e-4)
+
+
+def test_pmatvec_t_spmd(mesh1, rng):
+    a = rng.standard_normal((64, 64)).astype(np.float32)
+    x = rng.standard_normal(64).astype(np.float32)
+    y = pblas.pmatvec_t_spmd(jnp.asarray(a), jnp.asarray(x), mesh1)
+    np.testing.assert_allclose(np.asarray(y), a.T @ x, rtol=1e-5, atol=1e-4)
+
+
+def test_pdot_pnorm_paxpy(mesh1, rng):
+    x = rng.standard_normal(128).astype(np.float32)
+    y = rng.standard_normal(128).astype(np.float32)
+    assert float(pblas.pdot_spmd(jnp.asarray(x), jnp.asarray(y), mesh1)) \
+        == pytest.approx(float(x @ y), rel=1e-5)
+    assert float(pblas.pnorm_spmd(jnp.asarray(x), mesh1)) \
+        == pytest.approx(float(np.linalg.norm(x)), rel=1e-5)
+    z = pblas.paxpy_spmd(2.5, jnp.asarray(x), jnp.asarray(y), mesh1)
+    np.testing.assert_allclose(np.asarray(z), 2.5 * x + y, rtol=1e-5)
+
+
+def test_pgemm_summa(mesh1, rng):
+    a = rng.standard_normal((32, 32)).astype(np.float32)
+    b = rng.standard_normal((32, 32)).astype(np.float32)
+    c = pblas.pgemm_summa(jnp.asarray(a), jnp.asarray(b), mesh1)
+    np.testing.assert_allclose(np.asarray(c), a @ b, rtol=1e-4, atol=1e-4)
+
+
+def test_gspmd_engine(mesh1, rng):
+    a = rng.standard_normal((32, 32)).astype(np.float32)
+    x = rng.standard_normal(32).astype(np.float32)
+    y = pblas.pmatvec_gspmd(jnp.asarray(a), jnp.asarray(x), mesh1)
+    np.testing.assert_allclose(np.asarray(y), a @ x, rtol=1e-5, atol=1e-4)

@@ -1,0 +1,155 @@
+"""Core CUPLSS solver correctness vs dense numpy oracles (paper §2)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import api, cholesky, krylov, lu, triangular, precond
+
+
+def _system(n, spd=False, dtype=np.float32, seed=0):
+    rng = np.random.default_rng(seed)
+    a = rng.standard_normal((n, n)).astype(dtype)
+    if spd:
+        a = (a @ a.T / n + 4.0 * np.eye(n)).astype(dtype)
+    else:
+        a = (a + n * np.eye(n)).astype(dtype)
+    b = rng.standard_normal(n).astype(dtype)
+    return a, b
+
+
+@pytest.mark.parametrize("n,bs", [(64, 16), (128, 32), (128, 128), (96, 32)])
+def test_lu_factor_reconstructs(n, bs):
+    a, _ = _system(n)
+    lu_mat, perm = lu.lu_factor(jnp.asarray(a), block_size=bs)
+    l, u = lu.unpack(lu_mat)
+    np.testing.assert_allclose(np.asarray(l @ u), a[np.asarray(perm)],
+                               rtol=1e-4, atol=1e-3 * n)
+
+
+@pytest.mark.parametrize("n,bs", [(64, 16), (256, 64)])
+def test_lu_solve(n, bs):
+    a, b = _system(n)
+    x = lu.solve(jnp.asarray(a), jnp.asarray(b), block_size=bs)
+    np.testing.assert_allclose(np.asarray(x), np.linalg.solve(a, b),
+                               rtol=1e-3, atol=1e-4)
+
+
+def test_lu_pivoting_handles_zero_diagonal():
+    # permuted identity has zeros on the diagonal — unpivoted LU dies
+    n = 32
+    p = np.roll(np.eye(n, dtype=np.float32), 1, axis=0)
+    b = np.arange(n, dtype=np.float32)
+    x = lu.solve(jnp.asarray(p), jnp.asarray(b), block_size=8)
+    np.testing.assert_allclose(np.asarray(x), np.linalg.solve(p, b),
+                               atol=1e-5)
+
+
+@pytest.mark.parametrize("n,bs", [(64, 16), (256, 64)])
+def test_cholesky(n, bs):
+    a, b = _system(n, spd=True)
+    l = cholesky.cholesky_factor(jnp.asarray(a), block_size=bs)
+    np.testing.assert_allclose(np.asarray(l @ l.T), a, rtol=1e-3, atol=1e-3)
+    x = cholesky.cholesky_solve(l, jnp.asarray(b), block_size=bs)
+    np.testing.assert_allclose(np.asarray(x), np.linalg.solve(a, b),
+                               rtol=1e-3, atol=1e-4)
+
+
+@pytest.mark.parametrize("lower", [True, False])
+def test_triangular_blocked(lower):
+    n = 128
+    rng = np.random.default_rng(1)
+    t = np.tril(rng.standard_normal((n, n))) + 4 * np.eye(n)
+    t = t.astype(np.float32)
+    b = rng.standard_normal(n).astype(np.float32)
+    if lower:
+        y = triangular.solve_lower_blocked(jnp.asarray(t), jnp.asarray(b),
+                                           block_size=32)
+        ref = np.linalg.solve(t, b)
+    else:
+        y = triangular.solve_upper_blocked(jnp.asarray(t.T), jnp.asarray(b),
+                                           block_size=32)
+        ref = np.linalg.solve(t.T, b)
+    np.testing.assert_allclose(np.asarray(y), ref, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("method", ["cg", "bicg", "bicgstab", "gmres"])
+def test_iterative_methods(method):
+    n = 128
+    spd = method == "cg"
+    a, b = _system(n, spd=spd)
+    x = api.solve(jnp.asarray(a), jnp.asarray(b), method=method, tol=1e-8)
+    res = np.linalg.norm(b - a @ np.asarray(x)) / np.linalg.norm(b)
+    assert res < 1e-5, f"{method} residual {res}"
+
+
+@pytest.mark.parametrize("method", ["cg", "bicgstab"])
+@pytest.mark.parametrize("pc", ["jacobi", "block_jacobi"])
+def test_preconditioners_accelerate(method, pc):
+    n = 128
+    rng = np.random.default_rng(2)
+    # badly scaled SPD system: Jacobi should cut iterations
+    d = np.diag(10.0 ** rng.uniform(-2, 2, n)).astype(np.float32)
+    a0, b = _system(n, spd=True)
+    a = (d @ a0 @ d).astype(np.float32)
+    matvec = lambda v: jnp.asarray(a) @ v
+    plain = krylov.cg(matvec, jnp.asarray(b), tol=1e-6, maxiter=2000)
+    m = precond.jacobi(jnp.asarray(a)) if pc == "jacobi" else \
+        precond.block_jacobi(jnp.asarray(a), 32)
+    if method == "cg":
+        fast = krylov.cg(matvec, jnp.asarray(b), tol=1e-6, maxiter=2000,
+                         precond=m)
+    else:
+        fast = krylov.bicgstab(matvec, jnp.asarray(b), tol=1e-6,
+                               maxiter=2000, precond=m)
+    assert bool(fast.converged)
+    assert int(fast.iterations) < int(plain.iterations)
+
+
+def test_gmres_restart_equivalence():
+    """Both restart lengths must reach the same solution (paper's GMRES(m))."""
+    n = 96
+    a, b = _system(n)
+    x1 = api.solve(jnp.asarray(a), jnp.asarray(b), method="gmres",
+                   restart=16, tol=1e-9, maxiter=200)
+    x2 = api.solve(jnp.asarray(a), jnp.asarray(b), method="gmres",
+                   restart=48, tol=1e-9, maxiter=200)
+    np.testing.assert_allclose(np.asarray(x1), np.asarray(x2), atol=1e-4)
+
+
+def test_factorize_reuse():
+    """Paper's two-step: factor once, solve many right-hand sides."""
+    n = 64
+    a, _ = _system(n)
+    solver = api.factorize(jnp.asarray(a), method="lu", block_size=16)
+    rng = np.random.default_rng(3)
+    for _ in range(3):
+        b = rng.standard_normal(n).astype(np.float32)
+        x = solver(jnp.asarray(b))
+        np.testing.assert_allclose(np.asarray(x), np.linalg.solve(a, b),
+                                   rtol=1e-3, atol=1e-4)
+
+
+def test_fp64_path():
+    jax.config.update("jax_enable_x64", True)
+    try:
+        n = 64
+        a, b = _system(n, dtype=np.float64)
+        x = api.solve(jnp.asarray(a), jnp.asarray(b), method="lu",
+                      block_size=16)
+        np.testing.assert_allclose(np.asarray(x), np.linalg.solve(a, b),
+                                   rtol=1e-10, atol=1e-10)
+    finally:
+        jax.config.update("jax_enable_x64", False)
+
+
+def test_solve_result_reports_convergence():
+    n = 64
+    a, b = _system(n, spd=True)
+    r = krylov.cg(lambda v: jnp.asarray(a) @ v, jnp.asarray(b), tol=1e-8,
+                  maxiter=500)
+    assert bool(r.converged)
+    assert float(r.residual) < 1e-8 * np.linalg.norm(b) * 10
+    r2 = krylov.cg(lambda v: jnp.asarray(a) @ v, jnp.asarray(b), tol=1e-14,
+                   maxiter=2)
+    assert not bool(r2.converged)
