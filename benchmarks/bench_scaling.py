@@ -26,7 +26,7 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=%(ndev)d"
 sys.path.insert(0, %(src)r)
 import warnings; warnings.filterwarnings("ignore")
 import numpy as np, jax, jax.numpy as jnp
-from repro.core import krylov, api, dist
+from repro.core import krylov, api, dist, operator
 from repro.analysis import hlo as H
 import repro.analysis.roofline as R
 
@@ -42,7 +42,8 @@ out = {}
 # --- iterative (CG, explicit SPMD — the paper's MPI pattern) ---------------
 aj = dist.shard_matrix(jnp.asarray(a), mesh)
 bj = dist.shard_vector(jnp.asarray(b), mesh)
-fn = jax.jit(lambda A, B: krylov.cg_spmd(A, B, mesh, tol=1e-6, maxiter=50).x)
+fn = jax.jit(lambda A, B: operator.spmd_solve(
+    krylov.cg, A, B, mesh, tol=1e-6, maxiter=50).x)
 lowered = fn.lower(aj, bj); compiled = lowered.compile()
 t0 = time.perf_counter(); jax.block_until_ready(fn(aj, bj))
 t1 = time.perf_counter(); jax.block_until_ready(fn(aj, bj))

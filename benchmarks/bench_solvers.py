@@ -28,7 +28,8 @@ def run(sizes=(512, 1024), dtypes=("float32",)):
 
             for method, mat, ref in (
                     ("lu", aj, x_ref), ("cholesky", sj, xs_ref),
-                    ("cg", sj, xs_ref), ("bicgstab", aj, x_ref),
+                    ("cg", sj, xs_ref), ("pipelined_cg", sj, xs_ref),
+                    ("bicgstab", aj, x_ref),
                     ("gmres", aj, x_ref), ("bicg", aj, x_ref)):
                 fn = jax.jit(lambda A, B, m=method: api.solve(
                     A, B, method=m, tol=1e-8, block_size=min(128, n // 4)))
@@ -39,5 +40,25 @@ def run(sizes=(512, 1024), dtypes=("float32",)):
                 kind = "direct" if method in ("lu", "cholesky") else "iter"
                 emit("solvers", f"{method}_n{n}_{dtype}", round(t * 1e3, 2),
                      "ms", f"kind={kind} rel_res={res:.1e}")
+
+            if dtype != "float32":
+                continue        # fused kernels are float32-only
+
+            # fused-Pallas vs ref hot loop, and pipelined vs classic CG:
+            # iteration counts via return_info (pipelined should match CG
+            # ±rounding while issuing ONE reduction per iteration).
+            for method in ("cg", "pipelined_cg", "bicgstab"):
+                mat = sj if method.endswith("cg") else aj
+                for backend in ("ref", "pallas"):
+                    fn = jax.jit(lambda A, B, m=method, be=backend:
+                                 api.solve(A, B, method=m, tol=1e-8,
+                                           backend=be, return_info=True))
+                    t = timeit(fn, mat, bj)
+                    r = fn(mat, bj)
+                    emit("solvers",
+                         f"backend_{backend}_{method}_n{n}_{dtype}",
+                         round(t * 1e3, 2), "ms",
+                         f"iters={int(r.iterations)} "
+                         f"converged={bool(r.converged)}")
         if dtype == "float64":
             jax.config.update("jax_enable_x64", False)

@@ -1,8 +1,14 @@
 """CUPLSS-JAX core: the paper's contribution (distributed dense linear
 system solvers — blocked LU/Cholesky direct methods + CG/BiCG/BiCGSTAB/
-GMRES non-stationary iterative methods) as a composable JAX module."""
-from repro.core.api import solve, factorize  # noqa: F401
+GMRES/pipelined-CG non-stationary iterative methods) as a composable JAX
+module.  Solvers are written once against the LinearOperator primitive set
+and dispatched through the ``api`` registry."""
+from repro.core.api import (  # noqa: F401
+    solve, factorize, register_method, available_methods)
 from repro.core.krylov import (  # noqa: F401
-    SolveResult, cg, bicg, bicgstab, gmres, cg_spmd, bicgstab_spmd)
+    SolveResult, cg, bicg, bicgstab, gmres, pipelined_cg)
+from repro.core.operator import (  # noqa: F401
+    LinearOperator, DenseOperator, GspmdOperator, SpmdLocalOperator,
+    BatchedOperator, make_operator, spmd_solve)
 from repro.core.lu import lu_factor, lu_solve  # noqa: F401
 from repro.core.cholesky import cholesky_factor, cholesky_solve  # noqa: F401

@@ -3,13 +3,23 @@ user" — one entry point, opaque distribution).
 
     >>> x = solve(a, b)                          # serial / single device
     >>> x = solve(a, b, method="gmres", mesh=m)  # distributed
+    >>> r = solve(a, b, method="cg", return_info=True)   # full SolveResult
+    >>> x = solve(a, b, method="cg", backend="pallas")   # fused hot loop
 
-``method``: "lu" (default), "cholesky", "cg", "bicg", "bicgstab", "gmres".
-``engine`` (iterative only): "gspmd" (compiler-scheduled collectives) or
-"spmd" (explicit shard_map collectives — MPI-faithful; cg/bicgstab only).
+Methods live in a registry (``register_method``) — adding a solver is one
+driver function written against the :class:`repro.core.operator
+.LinearOperator` primitive set plus one registration line; it then runs on
+every engine:
+
+* ``engine="gspmd"``  — compiler-scheduled collectives (default),
+* ``engine="spmd"``   — the whole iteration inside one ``shard_map`` with
+  explicit collectives (MPI-faithful; all iterative methods, preconditioned),
+* batched             — pass ``a`` of shape (B, n, n) and ``b`` (B, n),
+* ``backend="pallas"``— dense engine with the fused Pallas update kernels.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Callable
 
@@ -17,53 +27,131 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import cholesky as _chol
-from repro.core import dist, krylov, lu as _lu, pblas, precond as _precond
+from repro.core import dist, krylov, lu as _lu, operator as _operator
+from repro.core import precond as _precond
+from repro.core.krylov import SolveResult
 
-DIRECT = ("lu", "cholesky")
-ITERATIVE = ("cg", "bicg", "bicgstab", "gmres")
+ENGINES = ("gspmd", "spmd")
+BACKENDS = ("ref", "pallas")
+
+# capabilities of the explicit-SPMD local operator (checked pre-shard_map,
+# since the operator itself only exists inside the shard_map body)
+_SPMD_CAPS = frozenset({"matvec_t", "gram"})
+
+
+@dataclasses.dataclass(frozen=True)
+class SolverEntry:
+    name: str
+    fn: Callable
+    kind: str = "iterative"       # "iterative" | "direct"
+    requires: tuple = ()          # subset of {"matvec_t", "gram"}
+    extra: tuple = ()             # accepted solver-specific kwargs
+
+
+_REGISTRY: dict[str, SolverEntry] = {}
+
+
+def register_method(name: str, fn: Callable, *, kind: str = "iterative",
+                    requires: tuple = (), extra: tuple = ()) -> SolverEntry:
+    """Register a solver.  Iterative ``fn(op, b, *, tol, maxiter, precond,
+    **extra) -> SolveResult``; direct ``fn(a, b, *, block_size, mesh) -> x``.
+    Re-registering a name overwrites it (lets users swap implementations)."""
+    entry = SolverEntry(name, fn, kind=kind, requires=tuple(requires),
+                        extra=tuple(extra))
+    _REGISTRY[name] = entry
+    return entry
+
+
+def get_method(name: str) -> SolverEntry:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(f"unknown method {name!r}; available: "
+                         f"{sorted(_REGISTRY)}") from None
+
+
+def available_methods(kind: str | None = None) -> tuple[str, ...]:
+    return tuple(sorted(n for n, e in _REGISTRY.items()
+                        if kind is None or e.kind == kind))
+
+
+register_method("lu", _lu.solve, kind="direct")
+register_method("cholesky", _chol.solve, kind="direct")
+register_method("cg", krylov.cg)
+register_method("pipelined_cg", krylov.pipelined_cg)
+register_method("bicg", krylov.bicg, requires=("matvec_t",))
+register_method("bicgstab", krylov.bicgstab)
+register_method("gmres", krylov.gmres, requires=("gram",),
+                extra=("restart",))
+
+# kept as module-level introspection helpers (historical names)
+DIRECT = available_methods("direct")
+ITERATIVE = available_methods("iterative")
 
 
 def solve(a: jax.Array, b: jax.Array, *, method: str = "lu",
-          mesh=None, engine: str = "gspmd", block_size: int = 128,
-          tol: float = 1e-6, maxiter: int = 1000, restart: int = 32,
-          precond: str | Callable | None = None) -> jax.Array:
-    """Solve A x = b.  Returns x (iterative methods: the approximation)."""
-    if method not in DIRECT + ITERATIVE:
-        raise ValueError(f"unknown method {method!r}")
+          mesh=None, engine: str = "gspmd", backend: str = "ref",
+          block_size: int = 128, tol: float = 1e-6, maxiter: int = 1000,
+          restart: int = 32, precond: str | Callable | None = None,
+          return_info: bool = False, **method_kwargs):
+    """Solve A x = b.  Returns x, or the full :class:`SolveResult`
+    (iterations / residual / converged) when ``return_info=True``.
+    ``**method_kwargs`` forwards solver-specific options declared in the
+    method's registry ``extra`` tuple (anything else is a TypeError)."""
+    entry = get_method(method)
+    unknown = set(method_kwargs) - set(entry.extra)
+    if unknown:
+        raise TypeError(f"method {method!r} does not accept "
+                        f"{sorted(unknown)}; declared extras: "
+                        f"{list(entry.extra)}")
+    if engine not in ENGINES:
+        raise ValueError(f"unknown engine {engine!r}; expected {ENGINES}")
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; expected {BACKENDS}")
 
     if mesh is not None:
+        if a.ndim == 3:
+            raise ValueError("batched solves are single-device (mesh=None)")
         a = dist.shard_matrix(a, mesh)
         b = dist.shard_vector(b, mesh)
 
-    if method == "lu":
-        return _lu.solve(a, b, block_size=block_size, mesh=mesh)
-    if method == "cholesky":
-        return _chol.solve(a, b, block_size=block_size, mesh=mesh)
+    if entry.kind == "direct":
+        if a.ndim == 3:
+            raise ValueError(f"method {method!r} does not support batching")
+        x = entry.fn(a, b, block_size=block_size, mesh=mesh)
+        if not return_info:
+            return x
+        res = jnp.linalg.norm(b - a @ x)
+        bnorm = jnp.linalg.norm(b)
+        atol = tol * jnp.where(bnorm == 0, 1.0, bnorm)
+        return SolveResult(x, jnp.asarray(0), res, res <= atol)
 
-    m = _make_precond(precond, a, block_size)
+    pc = _precond.make(precond, a, block_size)
+    extra = {"restart": restart} if "restart" in entry.extra else {}
+    extra.update(method_kwargs)
+
     if engine == "spmd":
         if mesh is None:
             raise ValueError("engine='spmd' requires a mesh")
-        if method == "cg":
-            return krylov.cg_spmd(a, b, mesh, tol=tol, maxiter=maxiter).x
-        if method == "bicgstab":
-            return krylov.bicgstab_spmd(a, b, mesh, tol=tol, maxiter=maxiter).x
-        raise ValueError(f"engine='spmd' supports cg/bicgstab, not {method!r}")
-
-    matvec = _make_matvec(a, mesh)
-    if method == "cg":
-        return krylov.cg(matvec, b, tol=tol, maxiter=maxiter, precond=m).x
-    if method == "bicgstab":
-        return krylov.bicgstab(matvec, b, tol=tol, maxiter=maxiter,
-                               precond=m).x
-    if method == "bicg":
-        matvec_t = _make_matvec_t(a, mesh)
-        return krylov.bicg(matvec, matvec_t, b, tol=tol, maxiter=maxiter,
-                           precond=m).x
-    if method == "gmres":
-        return krylov.gmres(matvec, b, tol=tol, restart=restart,
-                            maxiter=maxiter, precond=m).x
-    raise AssertionError
+        if backend == "pallas":
+            raise ValueError("backend='pallas' is single-device only; "
+                             "engine='spmd' runs the ref update")
+        missing = set(entry.requires) - _SPMD_CAPS
+        if missing:
+            raise ValueError(f"method {method!r} needs {sorted(missing)} "
+                             "which the spmd engine lacks")
+        result = _operator.spmd_solve(entry.fn, a, b, mesh, tol=tol,
+                                      maxiter=maxiter, precond=pc, **extra)
+    else:
+        op = _operator.make_operator(a, mesh=mesh, backend=backend)
+        if "matvec_t" in entry.requires and not op.has_transpose:
+            raise ValueError(f"method {method!r} needs Aᵀx on this engine")
+        if "gram" in entry.requires and not op.supports_gram:
+            raise ValueError(f"method {method!r} does not support batching")
+        result = entry.fn(op, b, tol=tol, maxiter=maxiter,
+                          precond=pc.apply if pc is not None else None,
+                          **extra)
+    return result if return_info else result.x
 
 
 def factorize(a: jax.Array, *, method: str = "lu", mesh=None,
@@ -80,27 +168,3 @@ def factorize(a: jax.Array, *, method: str = "lu", mesh=None,
         return functools.partial(_chol.cholesky_solve, l,
                                  block_size=block_size, mesh=mesh)
     raise ValueError(f"factorize supports lu/cholesky, not {method!r}")
-
-
-def _make_matvec(a, mesh):
-    if mesh is None:
-        return lambda v: a @ v
-    return lambda v: pblas.pmatvec_gspmd(a, v, mesh)
-
-
-def _make_matvec_t(a, mesh):
-    if mesh is None:
-        return lambda v: a.T @ v
-    return lambda v: pblas.pmatvec_gspmd(a.T, v, mesh)
-
-
-def _make_precond(spec, a, block_size):
-    if spec is None:
-        return lambda v: v
-    if callable(spec):
-        return spec
-    if spec == "jacobi":
-        return _precond.jacobi(a)
-    if spec == "block_jacobi":
-        return _precond.block_jacobi(a, block_size)
-    raise ValueError(f"unknown preconditioner {spec!r}")

@@ -1,17 +1,24 @@
-"""Non-stationary iterative solvers (paper §2): CG, BiCG, BiCGSTAB, GMRES(m).
+"""Single-source non-stationary iterative solvers (paper §2): CG, BiCG,
+BiCGSTAB, GMRES(m), and pipelined CG.
 
 The paper builds these from three distributed primitives — mat-vec, inner
-product, axpy.  Here the solvers are written against *global* arrays with a
-pluggable ``matvec`` so the same driver runs:
+product, axpy.  Each driver here is written ONCE against the
+:class:`repro.core.operator.LinearOperator` primitive set and therefore runs
+unchanged on every engine:
 
-* single-device (tests / serial baseline, the paper's "1 CPU" reference),
-* GSPMD-distributed (sharded ``A``; XLA inserts the collectives), or
-* explicitly SPMD (``cg_spmd`` / ``bicgstab_spmd`` below run the *entire*
-  iteration inside one ``shard_map`` with hand-written ``psum``/gathers —
-  the faithful MPI transliteration).
+* dense single-device (optionally with the Pallas-fused update hot loop),
+* GSPMD-distributed (sharded ``A``; XLA inserts the collectives),
+* explicitly SPMD (the whole iteration inside ONE ``shard_map`` with
+  hand-written ``psum``/gathers — the faithful MPI transliteration; see
+  :func:`repro.core.operator.spmd_solve`),
+* batched (many independent systems; scalars become per-system vectors).
+
+For backward compatibility every driver also accepts a bare ``matvec``
+callable in place of the operator.
 
 All loops are ``lax.while_loop`` with fixed-shape carries, so they jit and
-lower for the production mesh.
+lower for the production mesh.  Convergence uses the recurrence residual
+⟨r,r⟩ carried by the fused update — no extra reduction per iteration.
 """
 from __future__ import annotations
 
@@ -19,57 +26,122 @@ from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
-from jax.experimental.shard_map import shard_map
 
-from repro.core import dist
+from repro.core.operator import LinearOperator, as_operator
 
 
 class SolveResult(NamedTuple):
     x: jax.Array
     iterations: jax.Array
-    residual: jax.Array       # final ||b - Ax|| (2-norm)
+    residual: jax.Array       # final ||b - Ax|| (2-norm; recurrence-based)
     converged: jax.Array
 
 
-def _ident(x):
-    return x
+def _safe_div(num, den):
+    """num/den with 0 where den == 0 — keeps converged systems inert in the
+    batched engine and reproduces the classic BiCGSTAB omega guard."""
+    den_ok = jnp.where(den == 0, jnp.ones_like(den), den)
+    return jnp.where(den == 0, jnp.zeros_like(num), num / den_ok)
+
+
+def _setup(op: LinearOperator, b, x0):
+    x0 = jnp.zeros_like(b) if x0 is None else x0
+    bnorm = op.norm(b)
+    atol = jnp.where(bnorm == 0, jnp.ones_like(bnorm), bnorm)
+    return x0, atol
 
 
 # --------------------------------------------------------------------------
 # Conjugate Gradient (SPD)
 # --------------------------------------------------------------------------
 
-def cg(matvec: Callable, b: jax.Array, x0: jax.Array | None = None, *,
-       tol: float = 1e-6, maxiter: int = 1000,
-       precond: Callable = _ident) -> SolveResult:
-    x0 = jnp.zeros_like(b) if x0 is None else x0
-    bnorm = jnp.linalg.norm(b)
-    atol = tol * jnp.where(bnorm == 0, 1.0, bnorm)
+def cg(op: LinearOperator | Callable, b: jax.Array,
+       x0: jax.Array | None = None, *, tol: float = 1e-6,
+       maxiter: int = 1000, precond: Callable | None = None) -> SolveResult:
+    op = as_operator(op)
+    m = precond
+    x0, atol = _setup(op, b, x0)
+    atol = tol * atol
 
-    r0 = b - matvec(x0)
-    z0 = precond(r0)
+    r0 = b - op.matvec(x0)
+    z0 = r0 if m is None else m(r0)
     p0 = z0
-    rz0 = jnp.vdot(r0, z0)
+    rz0 = op.dot(r0, z0)
+    rr0 = rz0 if m is None else op.dot(r0, r0)
+    alpha0 = jnp.ones_like(rz0)
 
     def cond(c):
-        x, r, p, rz, k = c
-        return (jnp.linalg.norm(r) > atol) & (k < maxiter)
+        x, r, p, rz, rr, alpha, k = c
+        # alpha = 0 only via _safe_div breakdown (⟨p, Ap⟩ vanished — A
+        # singular / not SPD); terminate instead of stalling to maxiter.
+        return op.reduce_any((jnp.sqrt(rr) > atol) & (jnp.abs(alpha) > 0)) \
+            & (k < maxiter)
 
     def body(c):
-        x, r, p, rz, k = c
-        ap = matvec(p)
-        alpha = rz / jnp.vdot(p, ap)
-        x = x + alpha * p
-        r = r - alpha * ap
-        z = precond(r)
-        rz_new = jnp.vdot(r, z)
-        beta = rz_new / rz
-        p = z + beta * p
-        return (x, r, p, rz_new, k + 1)
+        x, r, p, rz, rr, alpha, k = c
+        ap = op.matvec(p)
+        alpha = _safe_div(rz, op.dot(p, ap))
+        x, r, rr = op.update(x, r, p, ap, alpha)    # fused single pass
+        z = r if m is None else m(r)
+        rz_new = rr if m is None else op.dot(r, z)
+        beta = _safe_div(rz_new, rz)
+        p = z + op.scale(beta, p)
+        return (x, r, p, rz_new, rr, alpha, k + 1)
 
-    x, r, _, _, k = jax.lax.while_loop(cond, body, (x0, r0, p0, rz0, 0))
-    res = jnp.linalg.norm(r)
+    x, _, _, _, rr, _, k = jax.lax.while_loop(
+        cond, body, (x0, r0, p0, rz0, rr0, alpha0, 0))
+    res = jnp.sqrt(rr)
+    return SolveResult(x, k, res, res <= atol)
+
+
+# --------------------------------------------------------------------------
+# Pipelined CG (Chronopoulos–Gear; Rupp et al. 1410.4054): one mat-vec and
+# ONE fused reduction (⟨r,u⟩, ⟨w,u⟩, ⟨r,r⟩ in a single pass / single global
+# synchronization) per iteration.
+# --------------------------------------------------------------------------
+
+def pipelined_cg(op: LinearOperator | Callable, b: jax.Array,
+                 x0: jax.Array | None = None, *, tol: float = 1e-6,
+                 maxiter: int = 1000,
+                 precond: Callable | None = None) -> SolveResult:
+    op = as_operator(op)
+    m = precond
+    x0, atol = _setup(op, b, x0)
+    atol = tol * atol
+
+    r0 = b - op.matvec(x0)
+    u0 = r0 if m is None else m(r0)
+    w0 = op.matvec(u0)
+    gamma0, delta0, rr0 = op.pipelined_dots(r0, u0, w0)
+    alpha0 = _safe_div(gamma0, delta0)
+    beta0 = jnp.zeros_like(gamma0)
+    pz = jnp.zeros_like(b)
+
+    def cond(c):
+        x, r, u, w, p, s, gamma, alpha, beta, rr, k = c
+        # alpha = 0 only via _safe_div breakdown (gamma or the CG-CG
+        # denominator vanished) — terminate instead of stalling.
+        return op.reduce_any((jnp.sqrt(rr) > atol) & (jnp.abs(alpha) > 0)) \
+            & (k < maxiter)
+
+    def body(c):
+        x, r, u, w, p, s, gamma, alpha, beta, rr, k = c
+        p = u + op.scale(beta, p)
+        s = w + op.scale(beta, s)              # s = A p, by recurrence
+        x = x + op.scale(alpha, p)
+        r = r - op.scale(alpha, s)
+        u = r if m is None else m(r)
+        w = op.matvec(u)
+        gamma_new, delta, rr = op.pipelined_dots(r, u, w)   # ONE reduction
+        beta = _safe_div(gamma_new, gamma)
+        alpha = _safe_div(gamma_new, delta - _safe_div(beta * gamma_new,
+                                                       alpha))
+        return (x, r, u, w, p, s, gamma_new, alpha, beta, rr, k + 1)
+
+    out = jax.lax.while_loop(
+        cond, body, (x0, r0, u0, w0, pz, pz, gamma0, alpha0, beta0, rr0, 0))
+    x, rr, k = out[0], out[9], out[10]
+    res = jnp.sqrt(rr)
     return SolveResult(x, k, res, res <= atol)
 
 
@@ -77,43 +149,49 @@ def cg(matvec: Callable, b: jax.Array, x0: jax.Array | None = None, *,
 # BiCG (general; needs Aᵀ)
 # --------------------------------------------------------------------------
 
-def bicg(matvec: Callable, matvec_t: Callable, b: jax.Array,
+def bicg(op: LinearOperator | Callable, b: jax.Array,
          x0: jax.Array | None = None, *, tol: float = 1e-6,
-         maxiter: int = 1000, precond: Callable = _ident,
-         precond_t: Callable | None = None) -> SolveResult:
-    precond_t = precond if precond_t is None else precond_t
-    x0 = jnp.zeros_like(b) if x0 is None else x0
-    bnorm = jnp.linalg.norm(b)
-    atol = tol * jnp.where(bnorm == 0, 1.0, bnorm)
+         maxiter: int = 1000, precond: Callable | None = None,
+         precond_t: Callable | None = None,
+         matvec_t: Callable | None = None) -> SolveResult:
+    op = as_operator(op, matvec_t=matvec_t)
+    m = precond
+    mt = precond_t if precond_t is not None else precond
+    x0, atol = _setup(op, b, x0)
+    atol = tol * atol
 
-    r0 = b - matvec(x0)
+    r0 = b - op.matvec(x0)
     rt0 = r0                      # shadow residual
-    z0, zt0 = precond(r0), precond_t(rt0)
+    z0 = r0 if m is None else m(r0)
+    zt0 = rt0 if mt is None else mt(rt0)
     p0, pt0 = z0, zt0
-    rz0 = jnp.vdot(rt0, z0)
+    rz0 = op.dot(rt0, z0)
+    rr0 = op.dot(r0, r0)
 
     def cond(c):
-        x, r, rt, p, pt, rz, k = c
-        return (jnp.linalg.norm(r) > atol) & (k < maxiter) & (jnp.abs(rz) > 0)
+        x, r, rt, p, pt, rz, rr, k = c
+        return op.reduce_any((jnp.sqrt(rr) > atol) & (jnp.abs(rz) > 0)) \
+            & (k < maxiter)
 
     def body(c):
-        x, r, rt, p, pt, rz, k = c
-        ap = matvec(p)
-        atpt = matvec_t(pt)
-        alpha = rz / jnp.vdot(pt, ap)
-        x = x + alpha * p
-        r = r - alpha * ap
-        rt = rt - jnp.conj(alpha) * atpt
-        z, zt = precond(r), precond_t(rt)
-        rz_new = jnp.vdot(rt, z)
-        beta = rz_new / rz
-        p = z + beta * p
-        pt = zt + jnp.conj(beta) * pt
-        return (x, r, rt, p, pt, rz_new, k + 1)
+        x, r, rt, p, pt, rz, rr, k = c
+        ap = op.matvec(p)
+        atpt = op.matvec_t(pt)
+        alpha = _safe_div(rz, op.dot(pt, ap))
+        x, r, rr = op.update(x, r, p, ap, alpha)    # fused single pass
+        rt = rt - op.scale(jnp.conj(alpha), atpt)
+        z = r if m is None else m(r)
+        zt = rt if mt is None else mt(rt)
+        rz_new = op.dot(rt, z)
+        beta = _safe_div(rz_new, rz)
+        p = z + op.scale(beta, p)
+        pt = zt + op.scale(jnp.conj(beta), pt)
+        return (x, r, rt, p, pt, rz_new, rr, k + 1)
 
-    out = jax.lax.while_loop(cond, body, (x0, r0, rt0, p0, pt0, rz0, 0))
-    x, r, k = out[0], out[1], out[6]
-    res = jnp.linalg.norm(r)
+    out = jax.lax.while_loop(cond, body,
+                             (x0, r0, rt0, p0, pt0, rz0, rr0, 0))
+    x, rr, k = out[0], out[6], out[7]
+    res = jnp.sqrt(rr)
     return SolveResult(x, k, res, res <= atol)
 
 
@@ -121,65 +199,75 @@ def bicg(matvec: Callable, matvec_t: Callable, b: jax.Array,
 # BiCGSTAB (the paper's implemented BiCG variant)
 # --------------------------------------------------------------------------
 
-def bicgstab(matvec: Callable, b: jax.Array, x0: jax.Array | None = None, *,
-             tol: float = 1e-6, maxiter: int = 1000,
-             precond: Callable = _ident) -> SolveResult:
-    x0 = jnp.zeros_like(b) if x0 is None else x0
-    bnorm = jnp.linalg.norm(b)
-    atol = tol * jnp.where(bnorm == 0, 1.0, bnorm)
+def bicgstab(op: LinearOperator | Callable, b: jax.Array,
+             x0: jax.Array | None = None, *, tol: float = 1e-6,
+             maxiter: int = 1000,
+             precond: Callable | None = None) -> SolveResult:
+    op = as_operator(op)
+    m = precond
+    x0, atol = _setup(op, b, x0)
+    atol = tol * atol
 
-    r0 = b - matvec(x0)
+    r0 = b - op.matvec(x0)
     rhat = r0
-    rho0 = alpha0 = omega0 = jnp.asarray(1.0, b.dtype)
+    rr0 = op.dot(r0, r0)
+    one = jnp.ones_like(rr0)
     v0 = p0 = jnp.zeros_like(b)
 
     def cond(c):
-        x, r, p, v, rho, alpha, omega, k = c
-        return (jnp.linalg.norm(r) > atol) & (k < maxiter)
+        x, r, p, v, rho, alpha, omega, rr, k = c
+        # rho = 0 or omega = 0 is the classic BiCGSTAB breakdown; with
+        # _safe_div the iterates stay finite, so terminate explicitly.
+        return op.reduce_any((jnp.sqrt(rr) > atol) & (jnp.abs(rho) > 0)
+                             & (jnp.abs(omega) > 0)) & (k < maxiter)
 
     def body(c):
-        x, r, p, v, rho, alpha, omega, k = c
-        rho_new = jnp.vdot(rhat, r)
-        beta = (rho_new / rho) * (alpha / omega)
-        p = r + beta * (p - omega * v)
-        phat = precond(p)
-        v = matvec(phat)
-        alpha = rho_new / jnp.vdot(rhat, v)
-        s = r - alpha * v
-        shat = precond(s)
-        t = matvec(shat)
-        tt = jnp.vdot(t, t)
-        omega = jnp.where(tt == 0, jnp.asarray(0, tt.dtype), jnp.vdot(t, s) / tt)
-        x = x + alpha * phat + omega * shat
-        r = s - omega * t
-        return (x, r, p, v, rho_new, alpha, omega, k + 1)
+        x, r, p, v, rho, alpha, omega, rr, k = c
+        rho_new = op.dot(rhat, r)
+        # ratio-of-ratios, not a product quotient: rho*omega can underflow
+        beta = _safe_div(rho_new, rho) * _safe_div(alpha, omega)
+        p = r + op.scale(beta, p - op.scale(omega, v))
+        phat = p if m is None else m(p)
+        v = op.matvec(phat)
+        alpha = _safe_div(rho_new, op.dot(rhat, v))
+        s = r - op.scale(alpha, v)
+        shat = s if m is None else m(s)
+        t = op.matvec(shat)
+        omega = _safe_div(*op.dots(((t, s), (t, t))))  # one reduction
+        xh = x + op.scale(alpha, phat)
+        x, r, rr = op.update(xh, s, shat, t, omega)   # x=xh+ωŝ, r=s−ωt, ⟨r,r⟩
+        return (x, r, p, v, rho_new, alpha, omega, rr, k + 1)
 
     out = jax.lax.while_loop(cond, body,
-                             (x0, r0, p0, v0, rho0, alpha0, omega0, 0))
-    x, r, k = out[0], out[1], out[7]
-    res = jnp.linalg.norm(r)
+                             (x0, r0, p0, v0, one, one, one, rr0, 0))
+    x, rr, k = out[0], out[7], out[8]
+    res = jnp.sqrt(rr)
     return SolveResult(x, k, res, res <= atol)
 
 
 # --------------------------------------------------------------------------
 # GMRES(m) with restarts (paper §2, Saad 1996) — right-preconditioned,
-# modified Gram-Schmidt expressed as fixed-shape masked updates.
+# modified Gram-Schmidt expressed as fixed-shape masked updates.  The basis
+# Gram products go through ``op.dotm`` so the same code runs on the
+# explicit-SPMD engine (basis rows are block-row local there).
 # --------------------------------------------------------------------------
 
-def gmres(matvec: Callable, b: jax.Array, x0: jax.Array | None = None, *,
-          tol: float = 1e-6, restart: int = 32, maxiter: int = 100,
-          precond: Callable = _ident) -> SolveResult:
+def gmres(op: LinearOperator | Callable, b: jax.Array,
+          x0: jax.Array | None = None, *, tol: float = 1e-6,
+          restart: int = 32, maxiter: int = 100,
+          precond: Callable | None = None) -> SolveResult:
     """``maxiter`` counts restart cycles; total matvecs <= maxiter*restart."""
-    x0 = jnp.zeros_like(b) if x0 is None else x0
+    op = as_operator(op)
+    m_apply = precond if precond is not None else (lambda v: v)
+    x0, atol = _setup(op, b, x0)
+    atol = tol * atol
     n = b.shape[0]
     m = restart
-    bnorm = jnp.linalg.norm(b)
-    atol = tol * jnp.where(bnorm == 0, 1.0, bnorm)
     tiny = jnp.asarray(1e-30, b.dtype)
 
     def cycle(x):
-        r = b - matvec(x)
-        beta = jnp.linalg.norm(r)
+        r = b - op.matvec(x)
+        beta = op.norm(r)
         v0 = r / jnp.maximum(beta, tiny)
         basis = jnp.zeros((m + 1, n), b.dtype).at[0].set(v0)
         hmat = jnp.zeros((m + 1, m), b.dtype)
@@ -187,16 +275,16 @@ def gmres(matvec: Callable, b: jax.Array, x0: jax.Array | None = None, *,
         def arnoldi(j, c):
             basis, hmat = c
             vj = basis[j]
-            w = matvec(precond(vj))
+            w = op.matvec(m_apply(vj))
             # modified Gram-Schmidt as two masked full-basis passes
             # (classical-with-reorth would also be fine; masked-MGS keeps
             #  fixed shapes: columns > j contribute zero)
             mask = (jnp.arange(m + 1) <= j).astype(w.dtype)
             for _ in range(2):                      # CGS2: re-orthogonalize
-                h = (basis @ w) * mask              # (m+1,)
+                h = op.dotm(basis, w) * mask        # (m+1,)
                 w = w - basis.T @ h
                 hmat = hmat.at[:, j].add(h)
-            hnorm = jnp.linalg.norm(w)
+            hnorm = op.norm(w)
             hmat = hmat.at[j + 1, j].set(hnorm)
             basis = basis.at[j + 1].set(w / jnp.maximum(hnorm, tiny))
             return basis, hmat
@@ -205,7 +293,7 @@ def gmres(matvec: Callable, b: jax.Array, x0: jax.Array | None = None, *,
         # least squares: min || beta*e1 - H y ||
         e1 = jnp.zeros((m + 1,), b.dtype).at[0].set(beta)
         y = jnp.linalg.lstsq(hmat, e1)[0]
-        dx = precond(basis[:m].T @ y)
+        dx = m_apply(basis[:m].T @ y)
         return x + dx
 
     def cond(c):
@@ -215,118 +303,9 @@ def gmres(matvec: Callable, b: jax.Array, x0: jax.Array | None = None, *,
     def body(c):
         x, _, k = c
         x = cycle(x)
-        res = jnp.linalg.norm(b - matvec(x))
+        res = op.norm(b - op.matvec(x))
         return (x, res, k + 1)
 
-    res0 = jnp.linalg.norm(b - matvec(x0))
+    res0 = op.norm(b - op.matvec(x0))
     x, res, k = jax.lax.while_loop(cond, body, (x0, res0, 0))
     return SolveResult(x, k, res, res <= atol)
-
-
-# --------------------------------------------------------------------------
-# Fully-explicit SPMD variants (the MPI-faithful layer): the whole iteration
-# runs inside ONE shard_map; every collective is written by hand.
-# --------------------------------------------------------------------------
-
-def _local_matvec(a_loc, x_loc, row, col, q):
-    """Local block GEMV + explicit collectives (see pblas.pmatvec_spmd)."""
-    x_full = jax.lax.all_gather(x_loc, row, tiled=True)
-    j = jax.lax.axis_index(col)
-    nq = x_full.shape[0] // q
-    x_j = jax.lax.dynamic_slice_in_dim(x_full, j * nq, nq)
-    return jax.lax.psum(a_loc @ x_j, col)
-
-
-def cg_spmd(a: jax.Array, b: jax.Array, mesh, *, tol: float = 1e-6,
-            maxiter: int = 1000) -> SolveResult:
-    """CG with the complete iteration inside shard_map (explicit psum)."""
-    row, col = dist.solver_axes(mesh)
-    q = mesh.shape[col]
-
-    def body(a_loc, b_loc):
-        def dot(u, v):
-            return jax.lax.psum(jnp.vdot(u, v), row)
-
-        bnorm = jnp.sqrt(dot(b_loc, b_loc))
-        atol = tol * jnp.where(bnorm == 0, 1.0, bnorm)
-        x = jnp.zeros_like(b_loc)
-        r = b_loc - _local_matvec(a_loc, x, row, col, q)
-        p = r
-        rz = dot(r, r)
-
-        def cond(c):
-            x, r, p, rz, k = c
-            return (jnp.sqrt(rz) > atol) & (k < maxiter)
-
-        def step(c):
-            x, r, p, rz, k = c
-            ap = _local_matvec(a_loc, p, row, col, q)
-            alpha = rz / dot(p, ap)
-            x = x + alpha * p
-            r = r - alpha * ap
-            rz_new = dot(r, r)
-            beta = rz_new / rz
-            p = r + beta * p
-            return (x, r, p, rz_new, k + 1)
-
-        x, r, _, rz, k = jax.lax.while_loop(cond, step, (x, r, p, rz, 0))
-        res = jnp.sqrt(rz)
-        return x, k, res, res <= atol
-
-    f = shard_map(body, mesh=mesh, in_specs=(P(row, col), P(row)),
-                  out_specs=(P(row), P(), P(), P()))
-    x, k, res, ok = f(a, b)
-    return SolveResult(x, k, res, ok)
-
-
-def bicgstab_spmd(a: jax.Array, b: jax.Array, mesh, *, tol: float = 1e-6,
-                  maxiter: int = 1000) -> SolveResult:
-    """BiCGSTAB with the complete iteration inside shard_map."""
-    row, col = dist.solver_axes(mesh)
-    q = mesh.shape[col]
-
-    def body(a_loc, b_loc):
-        def dot(u, v):
-            return jax.lax.psum(jnp.vdot(u, v), row)
-
-        def mv(v):
-            return _local_matvec(a_loc, v, row, col, q)
-
-        bnorm = jnp.sqrt(dot(b_loc, b_loc))
-        atol = tol * jnp.where(bnorm == 0, 1.0, bnorm)
-        x = jnp.zeros_like(b_loc)
-        r = b_loc - mv(x)
-        rhat = r
-        one = jnp.asarray(1.0, b_loc.dtype)
-        rho = alpha = omega = one
-        v = p = jnp.zeros_like(b_loc)
-
-        def cond(c):
-            x, r, p, v, rho, alpha, omega, k = c
-            return (jnp.sqrt(dot(r, r)) > atol) & (k < maxiter)
-
-        def step(c):
-            x, r, p, v, rho, alpha, omega, k = c
-            rho_new = dot(rhat, r)
-            beta = (rho_new / rho) * (alpha / omega)
-            p = r + beta * (p - omega * v)
-            v = mv(p)
-            alpha = rho_new / dot(rhat, v)
-            s = r - alpha * v
-            t = mv(s)
-            tt = dot(t, t)
-            omega = jnp.where(tt == 0, jnp.zeros_like(tt), dot(t, s) / tt)
-            x = x + alpha * p + omega * s
-            r = s - omega * t
-            return (x, r, p, v, rho_new, alpha, omega, k + 1)
-
-        out = jax.lax.while_loop(cond, step,
-                                 (x, r, p, v, rho, alpha, omega, 0))
-        x, r, k = out[0], out[1], out[7]
-        res = jnp.sqrt(dot(r, r))
-        return x, k, res, res <= atol
-
-    f = shard_map(body, mesh=mesh, in_specs=(P(row, col), P(row)),
-                  out_specs=(P(row), P(), P(), P()))
-    x, k, res, ok = f(a, b)
-    return SolveResult(x, k, res, ok)

@@ -1,0 +1,315 @@
+"""LinearOperator layer — the paper's three distributed primitives as one
+abstraction.
+
+The paper (§2–§3) builds every iterative solver from mat-vec, inner product
+and axpy.  This module makes that architecture literal: a ``LinearOperator``
+exposes the primitive set
+
+* ``matvec`` / ``matvec_t``    — y = A x and y = Aᵀ x,
+* ``dot`` / ``dots`` / ``dotm``— global inner products (``dots`` performs
+  several in ONE reduction — the single-synchronization primitive the
+  pipelined solvers rely on, per Rupp et al. 1410.4054),
+* ``update``                   — the fused x += αp; r -= αAp; ⟨r,r⟩ pass
+  (the memory-bound hot spot; Pallas-fused on the dense engine),
+* ``scale`` / ``norm`` / ``reduce_any`` — layout-aware helpers,
+
+and every Krylov driver in :mod:`repro.core.krylov` is written ONCE against
+it.  Engines:
+
+* :class:`DenseOperator`     — single device; ``backend="pallas"`` routes the
+  hot-loop update through :mod:`repro.kernels.krylov_fused` (interpret mode
+  on CPU, auto-padded to the 128-lane constraint).
+* :class:`GspmdOperator`     — sharded global arrays; XLA schedules the
+  collectives (compiler-scheduled engine).
+* :class:`SpmdLocalOperator` — the MPI-faithful engine: constructed *inside*
+  one ``shard_map`` over local blocks, every collective written by hand via
+  :mod:`repro.core.pblas` local primitives.  :func:`spmd_solve` wraps a
+  whole driver in that shard_map.
+* :class:`BatchedOperator`   — many independent systems at once (leading
+  batch axis); scalars become per-system vectors.
+"""
+from __future__ import annotations
+
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from repro.core import dist, pblas
+from repro.core import precond as precond_mod
+
+
+class LinearOperator:
+    """Primitive set shared by all engines.  Subclasses override the
+    communication-bearing primitives; elementwise algebra stays in the
+    drivers (it is layout-agnostic)."""
+
+    has_transpose = False
+    supports_gram = True      # dotm (GMRES basis Gram products)
+    batched = False
+
+    # -- communication-bearing primitives ---------------------------------
+    def matvec(self, v: jax.Array) -> jax.Array:
+        raise NotImplementedError
+
+    def matvec_t(self, v: jax.Array) -> jax.Array:
+        raise NotImplementedError(f"{type(self).__name__} has no Aᵀx")
+
+    def dot(self, u: jax.Array, v: jax.Array) -> jax.Array:
+        raise NotImplementedError
+
+    def dots(self, pairs: Sequence[tuple[jax.Array, jax.Array]]):
+        """Several inner products; engines override to use ONE reduction."""
+        return tuple(self.dot(u, v) for u, v in pairs)
+
+    def dotm(self, m: jax.Array, w: jax.Array) -> jax.Array:
+        """Stacked dots ``m @ w`` for a (k, n) row-stack m (GMRES Gram)."""
+        raise NotImplementedError
+
+    # -- derived / layout helpers ------------------------------------------
+    def norm(self, v: jax.Array) -> jax.Array:
+        return jnp.sqrt(self.dot(v, v))
+
+    def scale(self, s, v: jax.Array) -> jax.Array:
+        """s * v with s a solver scalar (per-system vector when batched)."""
+        return s * v
+
+    def reduce_any(self, mask) -> jax.Array:
+        """Collapse a per-system predicate to the loop predicate."""
+        return mask
+
+    def update(self, x, r, p, ap, alpha):
+        """Fused Krylov update: (x + αp, r − αAp, ⟨r', r'⟩)."""
+        xn = x + self.scale(alpha, p)
+        rn = r - self.scale(alpha, ap)
+        return xn, rn, self.dot(rn, rn)
+
+    def pipelined_dots(self, r, u, w):
+        """(⟨r,u⟩, ⟨w,u⟩, ⟨r,r⟩) — the single fused reduction of pipelined
+        CG (Chronopoulos–Gear); one pass / one synchronization."""
+        return self.dots(((r, u), (w, u), (r, r)))
+
+
+# --------------------------------------------------------------------------
+# Dense (single device) — optional Pallas-fused hot loop
+# --------------------------------------------------------------------------
+
+class DenseOperator(LinearOperator):
+    """Global arrays on one device.  ``backend="pallas"`` fuses the update
+    and the pipelined reduction into single memory passes (float32 only;
+    other dtypes silently use the jnp reference path)."""
+
+    has_transpose = True
+
+    def __init__(self, a: jax.Array | None = None, *,
+                 matvec: Callable | None = None,
+                 matvec_t: Callable | None = None,
+                 backend: str = "ref"):
+        if backend not in ("ref", "pallas"):
+            raise ValueError(f"unknown backend {backend!r}")
+        if a is None and matvec is None:
+            raise ValueError("need a matrix or a matvec callable")
+        self.a = a
+        self._matvec = matvec
+        self._matvec_t = matvec_t
+        self.backend = backend
+        if a is None and matvec_t is None:
+            self.has_transpose = False
+
+    def matvec(self, v):
+        return self._matvec(v) if self._matvec is not None else self.a @ v
+
+    def matvec_t(self, v):
+        if self._matvec_t is not None:
+            return self._matvec_t(v)
+        if self.a is None:
+            return super().matvec_t(v)
+        return self.a.T @ v
+
+    def dot(self, u, v):
+        return jnp.vdot(u, v)
+
+    def dotm(self, m, w):
+        return m @ w
+
+    def _fusable(self, v):
+        return self.backend == "pallas" and v.dtype == jnp.float32
+
+    def update(self, x, r, p, ap, alpha):
+        if self._fusable(x):
+            from repro.kernels import krylov_fused
+            return krylov_fused.fused_cg_update_auto(x, r, p, ap, alpha)
+        return super().update(x, r, p, ap, alpha)
+
+    def pipelined_dots(self, r, u, w):
+        if self._fusable(r):
+            from repro.kernels import krylov_fused
+            return krylov_fused.fused_pipelined_dots_auto(r, u, w)
+        return super().pipelined_dots(r, u, w)
+
+
+def as_operator(op, *, matvec_t: Callable | None = None) -> LinearOperator:
+    """Adapt a bare matvec callable (the historical driver input) into the
+    operator interface; pass operators through unchanged."""
+    if isinstance(op, LinearOperator):
+        return op
+    if callable(op):
+        return DenseOperator(matvec=op, matvec_t=matvec_t)
+    raise TypeError(f"expected LinearOperator or callable, got {type(op)}")
+
+
+# --------------------------------------------------------------------------
+# GSPMD (compiler-scheduled collectives on sharded global arrays)
+# --------------------------------------------------------------------------
+
+class GspmdOperator(LinearOperator):
+    has_transpose = True
+
+    def __init__(self, a: jax.Array, mesh):
+        self.a = a
+        self.mesh = mesh
+
+    def matvec(self, v):
+        return pblas.pmatvec_gspmd(self.a, v, self.mesh)
+
+    def matvec_t(self, v):
+        return pblas.pmatvec_gspmd(self.a.T, v, self.mesh)
+
+    def dot(self, u, v):
+        return pblas.pdot_gspmd(u, v, self.mesh)
+
+    def dotm(self, m, w):
+        return m @ dist.constrain_vector(w, self.mesh)
+
+
+# --------------------------------------------------------------------------
+# Explicit SPMD (inside one shard_map; hand-written collectives)
+# --------------------------------------------------------------------------
+
+class SpmdLocalOperator(LinearOperator):
+    """Local-block view with explicit collectives.  Only valid inside a
+    ``shard_map`` whose specs match ``repro.core.dist`` layouts; build one
+    via :func:`spmd_solve`."""
+
+    has_transpose = True
+
+    def __init__(self, a_loc: jax.Array, row: str, col: str, q: int, p: int):
+        self.a_loc = a_loc
+        self.row, self.col, self.q, self.p = row, col, q, p
+
+    def matvec(self, v):
+        return pblas.matvec_local(self.a_loc, v, self.row, self.col, self.q)
+
+    def matvec_t(self, v):
+        return pblas.matvec_t_local(self.a_loc, v, self.row, self.col, self.p)
+
+    def dot(self, u, v):
+        return pblas.dot_local(u, v, self.row)
+
+    def dots(self, pairs):
+        return pblas.dots_local(pairs, self.row)     # ONE psum for all pairs
+
+    def dotm(self, m, w):
+        return pblas.dotm_local(m, w, self.row)
+
+
+def spmd_solve(method: Callable, a: jax.Array, b: jax.Array, mesh, *,
+               tol: float = 1e-6, maxiter: int = 1000,
+               precond: "precond_mod.Preconditioner | None" = None,
+               **extra):
+    """Run a single-source Krylov driver with its ENTIRE iteration inside one
+    ``shard_map`` (the MPI-faithful engine).  ``method`` is any driver from
+    :mod:`repro.core.krylov` — the same code that runs on the dense engine.
+
+    Preconditioner state crosses into the shard_map as extra sharded
+    operands (see :func:`repro.core.precond.make`); custom callables cannot
+    cross the shard_map boundary and are rejected.
+    """
+    if precond is not None and (
+            not isinstance(precond, precond_mod.Preconditioner)
+            or precond.kind == "custom"):
+        raise ValueError("engine='spmd' needs a named preconditioner "
+                         "('jacobi'/'block_jacobi'), not a custom callable "
+                         "— callables cannot cross the shard_map boundary")
+    row, col = dist.solver_axes(mesh)
+    p, q = mesh.shape[row], mesh.shape[col]
+    pkind = precond.kind if precond is not None else "identity"
+    pdata = precond.data if precond is not None else ()
+    if pkind == "block_jacobi" and pdata[0].shape[0] % p:
+        raise ValueError(
+            f"block_jacobi has {pdata[0].shape[0]} blocks, not divisible "
+            f"by the {p}-way mesh row axis — choose a block_size so that "
+            "(n / block_size) % mesh_rows == 0")
+    pspecs = precond_mod.data_specs(pkind, row)
+
+    def body(a_loc, b_loc, *pdata_loc):
+        op = SpmdLocalOperator(a_loc, row, col, q, p)
+        apply_m = precond_mod.local_apply(pkind, pdata_loc)
+        res = method(op, b_loc, tol=tol, maxiter=maxiter, precond=apply_m,
+                     **extra)
+        return tuple(res)
+
+    # while_loop has no replication rule on this JAX — disable the check;
+    # out_specs pin the (documented) replication of the scalar outputs.
+    f = shard_map(body, mesh=mesh,
+                  in_specs=(P(row, col), P(row)) + pspecs,
+                  out_specs=(P(row), P(), P(), P()),
+                  check_rep=False)
+    from repro.core.krylov import SolveResult
+    return SolveResult(*f(a, b, *pdata))
+
+
+# --------------------------------------------------------------------------
+# Batched (many independent systems, leading batch axis)
+# --------------------------------------------------------------------------
+
+class BatchedOperator(LinearOperator):
+    """a: (B, n, n), vectors (B, n); solver scalars become (B,) vectors.
+    The loop runs until EVERY system converges (``reduce_any``); per-system
+    division guards in the drivers keep converged systems inert."""
+
+    has_transpose = True
+    supports_gram = False
+    batched = True
+
+    def __init__(self, a: jax.Array):
+        if a.ndim != 3 or a.shape[-1] != a.shape[-2]:
+            raise ValueError(f"batched operator wants (B, n, n), got {a.shape}")
+        self.a = a
+
+    def matvec(self, v):
+        return jnp.einsum("bij,bj->bi", self.a, v)
+
+    def matvec_t(self, v):
+        return jnp.einsum("bji,bj->bi", self.a, v)
+
+    def dot(self, u, v):
+        return jnp.einsum("bi,bi->b", u.conj(), v)   # vdot semantics
+
+    def scale(self, s, v):
+        return jnp.asarray(s)[..., None] * v
+
+    def reduce_any(self, mask):
+        return jnp.any(mask)
+
+
+# --------------------------------------------------------------------------
+# Engine selection
+# --------------------------------------------------------------------------
+
+def make_operator(a: jax.Array, *, mesh=None,
+                  backend: str = "ref") -> LinearOperator:
+    """Pick the engine from the data: batched (B,n,n) → BatchedOperator,
+    mesh given → GspmdOperator, else DenseOperator(backend)."""
+    if a.ndim == 3:
+        if backend == "pallas":
+            raise ValueError("backend='pallas' is dense-only (2-D A)")
+        return BatchedOperator(a)
+    if mesh is not None:
+        if backend == "pallas":
+            raise ValueError("backend='pallas' is single-device only; "
+                             "drop mesh= or use backend='ref'")
+        return GspmdOperator(a, mesh)
+    return DenseOperator(a, backend=backend)

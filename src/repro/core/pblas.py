@@ -26,6 +26,64 @@ from jax.experimental.shard_map import shard_map
 
 from repro.core import dist
 
+# ``pvary`` only exists on JAX versions with varying-manual-axes tracking;
+# on older releases replication bookkeeping is implicit and it is a no-op.
+_pvary = getattr(jax.lax, "pvary", None) or (lambda x, axes: x)
+
+
+# --------------------------------------------------------------------------
+# Local primitives (the bodies that run INSIDE shard_map).  These are what
+# the operator layer (repro.core.operator.SpmdLocalOperator) consumes — the
+# explicit-SPMD Krylov engine is built entirely from them.
+# --------------------------------------------------------------------------
+
+def matvec_local(a_loc: jax.Array, x_loc: jax.Array,
+                 row: str, col: str, q: int) -> jax.Array:
+    """y = A @ x on local blocks.
+
+    MPI analogue: all-gather x along process-grid columns (so every process
+    column owns the slice of x matching its block of A's columns), local
+    GEMV, then sum-reduce partial results along process-grid rows.
+    """
+    x_full = jax.lax.all_gather(x_loc, row, tiled=True)        # (n,)
+    j = jax.lax.axis_index(col)
+    nq = x_full.shape[0] // q
+    x_j = jax.lax.dynamic_slice_in_dim(x_full, j * nq, nq)     # my col slice
+    y_part = a_loc @ x_j                                       # local GEMV
+    return jax.lax.psum(y_part, col)                           # reduce rows
+
+
+def matvec_t_local(a_loc: jax.Array, x_loc: jax.Array,
+                   row: str, col: str, p: int) -> jax.Array:
+    """y = Aᵀ @ x on local blocks (BiCG's dual communication pattern)."""
+    y_part = a_loc.T @ x_loc                                   # (n/q,)
+    # sum partial column-results along rows, then redistribute from the
+    # column layout back to the row layout.
+    y_col = jax.lax.psum(y_part, row)                          # (n/q,) col block
+    y_full = jax.lax.all_gather(y_col, col, tiled=True)        # (n,)
+    i = jax.lax.axis_index(row)
+    np_ = y_full.shape[0] // p
+    return jax.lax.dynamic_slice_in_dim(y_full, i * np_, np_)
+
+
+def dot_local(u: jax.Array, v: jax.Array, row: str) -> jax.Array:
+    """Global inner product of block-row vectors (MPI_Allreduce)."""
+    return jax.lax.psum(jnp.vdot(u, v), row)
+
+
+def dots_local(pairs, row: str):
+    """Several inner products in ONE psum — the single-synchronization
+    reduction that pipelined CG is built on (one allreduce per iteration
+    instead of one per dot)."""
+    partial = jnp.stack([jnp.vdot(u, v) for u, v in pairs])
+    total = jax.lax.psum(partial, row)
+    return tuple(total[i] for i in range(len(pairs)))
+
+
+def dotm_local(m: jax.Array, w: jax.Array, row: str) -> jax.Array:
+    """Stacked dots m @ w for a (k, n_loc) local row-stack (GMRES Gram)."""
+    return jax.lax.psum(m @ w, row)
+
 
 # --------------------------------------------------------------------------
 # shard_map engine (explicit collectives, MPI-style)
@@ -37,23 +95,12 @@ def _wrap(mesh: Mesh, body, in_specs, out_specs, check_vma: bool = True):
 
 
 def pmatvec_spmd(a: jax.Array, x: jax.Array, mesh: Mesh) -> jax.Array:
-    """y = A @ x.
-
-    MPI analogue: all-gather x along process-grid columns (so every process
-    column owns the slice of x matching its block of A's columns), local
-    GEMV, then sum-reduce partial results along process-grid rows.
-    """
+    """y = A @ x with explicit collectives (see ``matvec_local``)."""
     row, col = dist.solver_axes(mesh)
     q = mesh.shape[col]
 
     def body(a_loc, x_loc):
-        # x_loc: my (n/p) block-row, replicated over `col`.
-        x_full = jax.lax.all_gather(x_loc, row, tiled=True)        # (n,)
-        j = jax.lax.axis_index(col)
-        nq = x_full.shape[0] // q
-        x_j = jax.lax.dynamic_slice_in_dim(x_full, j * nq, nq)     # my col slice
-        y_part = a_loc @ x_j                                       # local GEMV
-        return jax.lax.psum(y_part, col)                           # reduce rows
+        return matvec_local(a_loc, x_loc, row, col, q)
 
     return _wrap(mesh, body, (P(row, col), P(row)), P(row))(a, x)
 
@@ -62,18 +109,9 @@ def pmatvec_t_spmd(a: jax.Array, x: jax.Array, mesh: Mesh) -> jax.Array:
     """y = Aᵀ @ x (needed by BiCG).  Dual communication pattern."""
     row, col = dist.solver_axes(mesh)
     p = mesh.shape[row]
-    q = mesh.shape[col]
 
     def body(a_loc, x_loc):
-        # local (n/p) row block of x multiplies my block's rows.
-        y_part = a_loc.T @ x_loc                                   # (n/q,)
-        # sum partial column-results along rows, then redistribute from the
-        # column layout back to the row layout.
-        y_col = jax.lax.psum(y_part, row)                          # (n/q,) col block
-        y_full = jax.lax.all_gather(y_col, col, tiled=True)        # (n,)
-        i = jax.lax.axis_index(row)
-        np_ = y_full.shape[0] // p
-        return jax.lax.dynamic_slice_in_dim(y_full, i * np_, np_)
+        return matvec_t_local(a_loc, x_loc, row, col, p)
 
     # the all_gather along `col` leaves the result replicated over `col`,
     # which the static VMA checker cannot infer — disable the check.
@@ -86,7 +124,7 @@ def pdot_spmd(x: jax.Array, y: jax.Array, mesh: Mesh) -> jax.Array:
     row, _ = dist.solver_axes(mesh)
 
     def body(x_loc, y_loc):
-        return jax.lax.psum(jnp.vdot(x_loc, y_loc), row)
+        return dot_local(x_loc, y_loc, row)
 
     return _wrap(mesh, body, (P(row), P(row)), P())(x, y)
 
@@ -145,7 +183,7 @@ def pgemm_summa(a: jax.Array, b: jax.Array, mesh: Mesh,
             return c_acc + a_pan @ b_pan                 # local GEMM (MXU)
 
         c0 = jnp.zeros((m_loc, n_loc), jnp.promote_types(a_loc.dtype, b_loc.dtype))
-        c0 = jax.lax.pvary(c0, (row, col))   # carry varies across the grid
+        c0 = _pvary(c0, (row, col))   # carry varies across the grid
         return jax.lax.fori_loop(0, steps, step, c0)
 
     return _wrap(mesh, body, (P(row, col), P(row, col)), P(row, col))(a, b)

@@ -4,29 +4,42 @@ Block-Jacobi is the natural distributed preconditioner for the paper's
 layout: each process-grid row owns a diagonal block of A, factorizes it
 locally (the paper's "local acceleration" level), and applies the inverse
 with two batched triangular solves — zero communication.
+
+Engine-awareness: :func:`make` returns a :class:`Preconditioner` carrying
+*both* a global-layout ``apply`` (dense / GSPMD / batched operators) and the
+raw state arrays (``data``).  The explicit-SPMD engine threads ``data``
+through the ``shard_map`` boundary as block-row-sharded operands
+(:func:`data_specs`) and rebuilds a local apply on the other side
+(:func:`local_apply`) — both preconditioners are communication-free in the
+block-row layout, so no collective is ever added to the apply.
 """
 from __future__ import annotations
 
-from typing import Callable
+from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
 from jax.scipy.linalg import lu_factor as jsp_lu_factor, lu_solve as jsp_lu_solve
 
+_EPS = 1e-30
 
-def jacobi(a: jax.Array, eps: float = 1e-30) -> Callable:
-    """Diagonal (point-Jacobi) preconditioner M⁻¹ = diag(A)⁻¹."""
-    d = jnp.diagonal(a)
+
+class Preconditioner(NamedTuple):
+    kind: str                      # "jacobi" | "block_jacobi" | "custom"
+    data: tuple                    # global-layout state arrays
+    apply: Callable                # global-layout M⁻¹ v
+
+
+def _jacobi_data(a: jax.Array, eps: float = _EPS) -> tuple[jax.Array]:
+    d = jnp.diagonal(a, axis1=-2, axis2=-1)      # (n,) or (B, n)
     dinv = jnp.where(jnp.abs(d) > eps, 1.0 / d, 1.0)
-
-    def apply(v):
-        return dinv * v
-
-    return apply
+    return (dinv,)
 
 
-def block_jacobi(a: jax.Array, block_size: int = 128) -> Callable:
-    """Block-diagonal preconditioner; blocks LU-factorized up front (vmapped)."""
+def _block_jacobi_data(a: jax.Array, block_size: int):
+    if a.ndim != 2:
+        raise ValueError("block_jacobi supports 2-D systems only")
     n = a.shape[0]
     nb = min(block_size, n)
     if n % nb:
@@ -35,10 +48,71 @@ def block_jacobi(a: jax.Array, block_size: int = 128) -> Callable:
     blocks = a.reshape(k, nb, k, nb)
     diag_blocks = jnp.stack([blocks[i, :, i, :] for i in range(k)])  # (k, nb, nb)
     lu, piv = jax.vmap(jsp_lu_factor)(diag_blocks)
+    return lu, piv
 
+
+def _apply_jacobi(dinv):
+    return lambda v: dinv * v
+
+
+def _apply_block_jacobi(lu, piv):
     def apply(v):
+        k, nb = piv.shape
         vb = v.reshape(k, nb)
         out = jax.vmap(lambda l, p, rhs: jsp_lu_solve((l, p), rhs))(lu, piv, vb)
-        return out.reshape(n)
-
+        return out.reshape(v.shape)
     return apply
+
+
+def make(spec, a: jax.Array, block_size: int = 128) -> Preconditioner | None:
+    """Build a Preconditioner from a user spec (None / name / callable)."""
+    if spec is None:
+        return None
+    if isinstance(spec, Preconditioner):
+        return spec
+    if callable(spec):
+        return Preconditioner("custom", (), spec)
+    if spec == "jacobi":
+        (dinv,) = _jacobi_data(a)
+        return Preconditioner("jacobi", (dinv,), _apply_jacobi(dinv))
+    if spec == "block_jacobi":
+        lu, piv = _block_jacobi_data(a, block_size)
+        return Preconditioner("block_jacobi", (lu, piv),
+                              _apply_block_jacobi(lu, piv))
+    raise ValueError(f"unknown preconditioner {spec!r}")
+
+
+# -- explicit-SPMD engine support ------------------------------------------
+
+def data_specs(kind: str, row: str) -> tuple[P, ...]:
+    """shard_map in_specs for the state arrays: everything block-row."""
+    if kind == "identity":
+        return ()
+    if kind == "jacobi":
+        return (P(row),)
+    if kind == "block_jacobi":
+        return (P(row), P(row))
+    raise ValueError(f"preconditioner {kind!r} cannot cross shard_map")
+
+
+def local_apply(kind: str, data_loc: tuple) -> Callable | None:
+    """Rebuild the apply from local shards (inside shard_map)."""
+    if kind == "identity":
+        return None
+    if kind == "jacobi":
+        return _apply_jacobi(data_loc[0])
+    if kind == "block_jacobi":
+        return _apply_block_jacobi(*data_loc)
+    raise ValueError(f"preconditioner {kind!r} cannot cross shard_map")
+
+
+# -- historical factory API (returns bare callables) ------------------------
+
+def jacobi(a: jax.Array, eps: float = _EPS) -> Callable:
+    """Diagonal (point-Jacobi) preconditioner M⁻¹ = diag(A)⁻¹."""
+    return _apply_jacobi(*_jacobi_data(a, eps))
+
+
+def block_jacobi(a: jax.Array, block_size: int = 128) -> Callable:
+    """Block-diagonal preconditioner; blocks LU-factorized up front (vmapped)."""
+    return _apply_block_jacobi(*_block_jacobi_data(a, block_size))

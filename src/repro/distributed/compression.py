@@ -65,7 +65,7 @@ def ring_allreduce_int8(x: jax.Array, axis: str) -> jax.Array:
     fp32 block scales.  Must be called inside ``shard_map`` with ``axis``
     mapped.  x is this device's (identical-shape) contribution.
     """
-    n = jax.lax.axis_size(axis)
+    n = jax.lax.psum(1, axis)    # static axis size (lax.axis_size drifted)
     if n == 1:
         return x
     i = jax.lax.axis_index(axis)

@@ -94,3 +94,103 @@ def fused_cg_update(x: jax.Array, r: jax.Array, p: jax.Array, ap: jax.Array,
         **params,
     )(alpha_arr, as2d(x), as2d(r), as2d(p), as2d(ap))
     return xo.reshape(n), ro.reshape(n), rr[0, 0]
+
+
+# --------------------------------------------------------------------------
+# Hot-path dispatch helpers: arbitrary n (auto zero-pad to the 128-lane
+# constraint — padding contributes 0 to every reduction) and automatic
+# interpret-mode fallback off-TPU.  This is what the LinearOperator dense
+# engine calls from inside the solver loops.
+# --------------------------------------------------------------------------
+
+def _auto_interpret(interpret):
+    return jax.default_backend() != "tpu" if interpret is None else interpret
+
+
+def _pad_lanes(vs):
+    # pad to a multiple of 8 rows (f32 min sublane tile), not just _LANE,
+    # so _pick_block_rows never degrades to skinny 1-row blocks when the
+    # row count is prime — zero-pads are exact for all these reductions.
+    n = vs[0].shape[0]
+    pad = (-n) % (8 * _LANE)
+    if pad:
+        vs = [jnp.pad(v, (0, pad)) for v in vs]
+    return vs, n
+
+
+def _pick_block_rows(rows: int, block_rows: int) -> int:
+    br = min(block_rows, rows)
+    while rows % br:
+        br -= 1
+    return br
+
+
+def fused_cg_update_auto(x, r, p, ap, alpha, *, block_rows: int = 256,
+                         interpret: bool | None = None):
+    """``fused_cg_update`` for arbitrary n: zero-pads to a lane multiple
+    (exact — pads add 0 to ⟨r', r'⟩), slices the outputs back."""
+    (x, r, p, ap), n = _pad_lanes([x, r, p, ap])
+    br = _pick_block_rows(x.shape[0] // _LANE, block_rows)
+    xo, ro, rr = fused_cg_update(x, r, p, ap, alpha, block_rows=br,
+                                 interpret=_auto_interpret(interpret))
+    return xo[:n], ro[:n], rr
+
+
+def _dots_kernel(r_ref, u_ref, w_ref, out_ref, acc_ref, *, n_steps: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    r = r_ref[...].astype(jnp.float32)
+    u = u_ref[...].astype(jnp.float32)
+    w = w_ref[...].astype(jnp.float32)
+    acc_ref[...] += jnp.stack(
+        [jnp.sum(r * u), jnp.sum(w * u), jnp.sum(r * r)])[None, :]
+
+    @pl.when(i == n_steps - 1)
+    def _done():
+        out_ref[...] = acc_ref[...]
+
+
+def fused_pipelined_dots(r: jax.Array, u: jax.Array, w: jax.Array, *,
+                         block_rows: int = 256, interpret: bool = False):
+    """Pipelined-CG reduction: (⟨r,u⟩, ⟨w,u⟩, ⟨r,r⟩) in ONE memory pass
+    (3n read, no vector writes) — the single-synchronization step of
+    Chronopoulos–Gear CG (Rupp et al. 1410.4054 kernel fusion)."""
+    (n,) = r.shape
+    if n % _LANE:
+        raise ValueError(f"n={n} must be a multiple of {_LANE}")
+    rows = n // _LANE
+    br = _pick_block_rows(rows, block_rows)
+    n_steps = rows // br
+
+    def as2d(v):
+        return v.reshape(rows, _LANE)
+
+    params = {}
+    if _CompilerParams is not None and not interpret:
+        params["compiler_params"] = _CompilerParams(
+            dimension_semantics=("arbitrary",))
+
+    vec_spec = pl.BlockSpec((br, _LANE), lambda i: (i, 0))
+    out = pl.pallas_call(
+        functools.partial(_dots_kernel, n_steps=n_steps),
+        grid=(n_steps,),
+        in_specs=[vec_spec, vec_spec, vec_spec],
+        out_specs=pl.BlockSpec((1, 3), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, 3), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((1, 3), jnp.float32)],
+        interpret=interpret,
+        **params,
+    )(as2d(r), as2d(u), as2d(w))
+    return out[0, 0], out[0, 1], out[0, 2]
+
+
+def fused_pipelined_dots_auto(r, u, w, *, block_rows: int = 256,
+                              interpret: bool | None = None):
+    """``fused_pipelined_dots`` for arbitrary n (zero-pad is exact)."""
+    (r, u, w), _ = _pad_lanes([r, u, w])
+    return fused_pipelined_dots(r, u, w, block_rows=block_rows,
+                                interpret=_auto_interpret(interpret))

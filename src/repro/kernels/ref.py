@@ -60,3 +60,11 @@ def fused_cg_update(x: jax.Array, r: jax.Array, p: jax.Array,
     rn = r - alpha * ap
     rr = jnp.vdot(rn.astype(jnp.float32), rn.astype(jnp.float32))
     return xn, rn, rr
+
+
+def fused_pipelined_dots(r: jax.Array, u: jax.Array, w: jax.Array):
+    """Pipelined-CG reduction oracle: (<r,u>, <w,u>, <r,r>) in fp32."""
+    rf = r.astype(jnp.float32)
+    uf = u.astype(jnp.float32)
+    wf = w.astype(jnp.float32)
+    return jnp.vdot(rf, uf), jnp.vdot(wf, uf), jnp.vdot(rf, rf)

@@ -46,6 +46,23 @@ OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
                        "experiments", "dryrun")
 
 
+def _cost_analysis(compiled) -> dict:
+    """Normalize compiled.cost_analysis() across JAX versions (older
+    releases return a one-element list of dicts, newer a dict)."""
+    ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca
+
+
+def _ambient_mesh(mesh):
+    """Context manager installing `mesh` as the ambient mesh for bare-
+    PartitionSpec constraint resolution.  ``jax.set_mesh`` on new JAX;
+    the classic ``with mesh:`` resource env on older releases."""
+    set_mesh = getattr(jax, "set_mesh", None)
+    return set_mesh(mesh) if set_mesh is not None else mesh
+
+
 def pick_optimizer(cfg) -> str:
     """Adafactor for ≥50B-param configs (HBM capacity; see optim/adafactor)."""
     return "adafactor" if cfg.param_count() > 50e9 else "adamw"
@@ -56,7 +73,7 @@ def build_and_lower(arch: str, shape_name: str, mesh, *, opt_override=None):
     shape = SHAPES[shape_name]
     # ambient mesh: bare-PartitionSpec constraints inside model code
     # (runtime.mixer_cp) resolve against it during tracing
-    with jax.set_mesh(mesh):
+    with _ambient_mesh(mesh):
         if shape.kind == "train":
             opt_name = opt_override or pick_optimizer(cfg)
             step_fn, sspecs, bspecs, opt = S.make_train_step(
@@ -93,7 +110,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str = "pod", *,
     t_compile = time.time() - t1
 
     ma = compiled.memory_analysis()
-    ca = compiled.cost_analysis() or {}
+    ca = _cost_analysis(compiled)
     cost = hlo_mod.analyze_hlo(compiled.as_text())
     report = rl.roofline(
         f"{arch}/{shape_name}/{mesh_kind}", cost, chips=chips,
@@ -152,7 +169,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str = "pod", *,
 
 def run_solver_cell(mesh_kind: str = "pod", n: int = 61_440, *,
                     method: str = "lu", save: bool = True) -> dict:
-    from repro.core import api, dist, krylov
+    from repro.core import api, dist, krylov, operator
 
     mesh = make_production_mesh(multi_pod=(mesh_kind == "multipod"))
     chips = mesh.devices.size
@@ -168,9 +185,10 @@ def run_solver_cell(mesh_kind: str = "pod", n: int = 61_440, *,
         fn = jax.jit(functools.partial(api.solve, method=method, mesh=None,
                                        block_size=1920),
                      in_shardings=(mspec, vspec), out_shardings=vspec)
-    elif method == "cg":
-        fn = jax.jit(lambda a_, b_: krylov.cg_spmd(
-            a_, b_, mesh, maxiter=100).x,
+    elif method in ("cg", "pipelined_cg"):
+        driver = krylov.cg if method == "cg" else krylov.pipelined_cg
+        fn = jax.jit(lambda a_, b_: operator.spmd_solve(
+            driver, a_, b_, mesh, maxiter=100).x,
             in_shardings=(mspec, vspec), out_shardings=vspec)
     else:
         raise ValueError(method)
@@ -180,7 +198,7 @@ def run_solver_cell(mesh_kind: str = "pod", n: int = 61_440, *,
     compiled = lowered.compile()
     t_all = time.time() - t0
     ma = compiled.memory_analysis()
-    ca = compiled.cost_analysis() or {}
+    ca = _cost_analysis(compiled)
     cost = hlo_mod.analyze_hlo(compiled.as_text())
     model_fl = (2 / 3 * n**3 if method in ("lu",) else
                 1 / 3 * n**3 if method == "cholesky" else
@@ -221,7 +239,7 @@ def main():
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--solver", action="store_true")
     ap.add_argument("--solver-method", default="lu",
-                    choices=["lu", "cholesky", "cg"])
+                    choices=["lu", "cholesky", "cg", "pipelined_cg"])
     ap.add_argument("--optimizer", default=None)
     ap.add_argument("--tag", default="")
     args = ap.parse_args()

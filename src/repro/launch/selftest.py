@@ -24,7 +24,7 @@ from jax.experimental.shard_map import shard_map
 
 from repro.configs import get_config
 from repro.configs.base import ShapeConfig
-from repro.core import api, krylov, pblas
+from repro.core import api, pblas
 from repro.checkpoint import CheckpointManager
 from repro.models import registry
 from repro.train import sharding as sh, steps as S
@@ -52,17 +52,29 @@ def test_solvers(mesh):
     out = api.solve(jnp.asarray(spd), jnp.asarray(b), method="cholesky",
                     mesh=mesh, block_size=64)
     check("dist Cholesky", np.allclose(out, x_sp, atol=1e-3))
-    for method in ("cg", "bicgstab", "gmres", "bicg"):
-        mat = spd if method == "cg" else a
-        ref = x_sp if method == "cg" else x_lu
+    for method in ("cg", "pipelined_cg", "bicgstab", "gmres", "bicg"):
+        mat = spd if method in ("cg", "pipelined_cg") else a
+        ref = x_sp if method in ("cg", "pipelined_cg") else x_lu
         out = api.solve(jnp.asarray(mat), jnp.asarray(b), method=method,
                         mesh=mesh, tol=1e-8)
         check(f"dist {method}", np.allclose(out, ref, atol=1e-3))
-    # explicit-SPMD engine equals GSPMD engine
-    r1 = krylov.cg_spmd(jnp.asarray(spd), jnp.asarray(b), mesh, tol=1e-8)
-    check("cg_spmd == oracle", np.allclose(r1.x, x_sp, atol=1e-3))
-    r2 = krylov.bicgstab_spmd(jnp.asarray(a), jnp.asarray(b), mesh, tol=1e-8)
-    check("bicgstab_spmd == oracle", np.allclose(r2.x, x_lu, atol=1e-3))
+    # explicit-SPMD engine (single-source drivers inside one shard_map)
+    # equals the GSPMD engine / oracle
+    for method in ("cg", "pipelined_cg", "bicgstab", "bicg", "gmres"):
+        mat = spd if method in ("cg", "pipelined_cg") else a
+        ref = x_sp if method in ("cg", "pipelined_cg") else x_lu
+        r = api.solve(jnp.asarray(mat), jnp.asarray(b), method=method,
+                      mesh=mesh, engine="spmd", tol=1e-6, return_info=True)
+        check(f"spmd {method} == oracle", np.allclose(r.x, ref, atol=1e-3))
+    # spmd preconditioning (historically silently ignored) actually applies
+    r_plain = api.solve(jnp.asarray(spd), jnp.asarray(b), method="cg",
+                        mesh=mesh, engine="spmd", tol=1e-8, return_info=True)
+    r_pc = api.solve(jnp.asarray(spd), jnp.asarray(b), method="cg",
+                     mesh=mesh, engine="spmd", tol=1e-8, precond="jacobi",
+                     return_info=True)
+    check("spmd cg jacobi converged",
+          bool(r_pc.converged)
+          and int(r_pc.iterations) <= int(r_plain.iterations) + 5)
     c = pblas.pgemm_summa(jnp.asarray(a), jnp.asarray(spd), mesh)
     check("SUMMA pgemm", np.allclose(c, a @ spd, rtol=2e-4, atol=2e-1))
 

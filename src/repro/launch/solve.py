@@ -35,9 +35,10 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--n", type=int, default=1024)
     ap.add_argument("--method", default="lu",
-                    choices=["lu", "cholesky", "cg", "bicg", "bicgstab",
-                             "gmres"])
+                    choices=["lu", "cholesky", "cg", "pipelined_cg", "bicg",
+                             "bicgstab", "gmres"])
     ap.add_argument("--engine", default="gspmd", choices=["gspmd", "spmd"])
+    ap.add_argument("--backend", default="ref", choices=["ref", "pallas"])
     ap.add_argument("--precond", default=None,
                     choices=[None, "jacobi", "block_jacobi"])
     ap.add_argument("--dtype", default="float32",
@@ -49,14 +50,15 @@ def main(argv=None):
 
     if args.dtype == "float64":
         jax.config.update("jax_enable_x64", True)
-    spd = args.method in ("cholesky", "cg")
+    spd = args.method in ("cholesky", "cg", "pipelined_cg")
     a, b = make_system(args.n, spd=spd, dtype=np.dtype(args.dtype))
     mesh = solver_mesh() if args.distributed else None
 
     t0 = time.time()
     x = api.solve(jnp.asarray(a), jnp.asarray(b), method=args.method,
-                  mesh=mesh, engine=args.engine, tol=args.tol,
-                  block_size=args.block_size, precond=args.precond)
+                  mesh=mesh, engine=args.engine, backend=args.backend,
+                  tol=args.tol, block_size=args.block_size,
+                  precond=args.precond)
     x = jax.block_until_ready(x)
     dt = time.time() - t0
 

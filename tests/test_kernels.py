@@ -105,6 +105,38 @@ def test_fused_cg_update_sweep(n, dtype):
                                rtol=max(tol, 1e-4) * 10)
 
 
+@pytest.mark.parametrize("n", [1024, 128 * 6])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fused_pipelined_dots_sweep(n, dtype):
+    ks = jax.random.split(jax.random.key(8), 3)
+    r, u, w = (jax.random.normal(k, (n,), jnp.float32).astype(dtype)
+               for k in ks)
+    got = krylov_fused.fused_pipelined_dots(r, u, w, block_rows=2,
+                                            interpret=True)
+    want = ref.fused_pipelined_dots(r, u, w)
+    tol = 1e-4 if dtype == jnp.float32 else 3e-2
+    for g, v in zip(got, want):
+        np.testing.assert_allclose(float(g), float(v), rtol=tol,
+                                   atol=tol * n)
+
+
+def test_fused_auto_padding_matches_ref():
+    """Auto-padded dispatch (n not a lane multiple) is exact."""
+    n = 130
+    ks = jax.random.split(jax.random.key(9), 4)
+    x, r, p, ap = (jax.random.normal(k, (n,), jnp.float32) for k in ks)
+    got = krylov_fused.fused_cg_update_auto(x, r, p, ap, 0.41)
+    want = ref.fused_cg_update(x, r, p, ap, 0.41)
+    for g, v in zip(got[:2], want[:2]):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(v), rtol=1e-5,
+                                   atol=1e-5)
+    np.testing.assert_allclose(float(got[2]), float(want[2]), rtol=1e-4)
+    got_d = krylov_fused.fused_pipelined_dots_auto(x, r, p)
+    want_d = ref.fused_pipelined_dots(x, r, p)
+    for g, v in zip(got_d, want_d):
+        np.testing.assert_allclose(float(g), float(v), rtol=1e-4)
+
+
 def test_gemm_rejects_untiled():
     a = jnp.zeros((100, 128))
     b = jnp.zeros((128, 128))
