@@ -1,0 +1,152 @@
+"""Direct-path benchmark (paper §4, factorization half).
+
+Rows emitted:
+
+* ``lu_factor`` / ``cholesky_factor`` GFLOP/s vs the
+  ``jax.scipy.linalg.lu_factor`` / ``cholesky`` baselines,
+* factor + solve wall time per method,
+* an unrolled-vs-fori **trace+lower time** comparison — the point of the
+  PR 2 rewrite: the Python-unrolled block loop's trace grows O(n / nb)
+  while the ``lax.fori_loop`` version is O(1) in ``n``.
+
+Standalone:  PYTHONPATH=src python -m benchmarks.bench_direct [--smoke]
+(also runs as the ``direct`` section of ``benchmarks.run``).
+"""
+from __future__ import annotations
+
+import argparse
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.scipy.linalg import solve_triangular
+
+from benchmarks.common import emit, make_system, timeit
+from repro.core import api, cholesky, lu
+
+
+# --------------------------------------------------------------------------
+# pre-PR-2 reference: Python-unrolled outer block loop (the seed's
+# structure) — kept ONLY for the compile-time comparison row
+# --------------------------------------------------------------------------
+
+def _panel_factor_unrolled(pan):
+    m, nb = pan.shape
+    rows = jnp.arange(m)
+
+    def col_step(j, carry):
+        pan, perm = carry
+        col = pan[:, j]
+        cand = jnp.where(rows >= j, jnp.abs(col), -jnp.inf)
+        p = jnp.argmax(cand)
+        row_j, row_p = pan[j, :], pan[p, :]
+        pan = pan.at[j, :].set(row_p).at[p, :].set(row_j)
+        pj, pp = perm[j], perm[p]
+        perm = perm.at[j].set(pp).at[p].set(pj)
+        pivot = pan[j, j]
+        safe = jnp.where(pivot == 0, jnp.asarray(1, pan.dtype), pivot)
+        col = pan[:, j]
+        mcol = jnp.where(rows > j, col / safe, col)
+        pan = pan.at[:, j].set(mcol)
+        urow = pan[j, :]
+        mmask = jnp.where(rows > j, mcol, 0)
+        umask = jnp.where(jnp.arange(nb) > j, urow, 0)
+        pan = pan - jnp.outer(mmask, umask)
+        return pan, perm
+
+    return jax.lax.fori_loop(0, nb, col_step, (pan, jnp.arange(m)))
+
+
+def _lu_factor_unrolled(a, nb):
+    """Trace-time-unrolled blocked LU: O(n / nb) trace size."""
+    n = a.shape[0]
+    perm_total = jnp.arange(n)
+    for k in range(0, n, nb):
+        pan, perm = _panel_factor_unrolled(a[k:, k:k + nb])
+        rows_blk = jnp.take(a[k:, :], perm, axis=0)
+        rows_blk = rows_blk.at[:, k:k + nb].set(pan)
+        a = a.at[k:, :].set(rows_blk)
+        perm_total = perm_total.at[k:].set(jnp.take(perm_total[k:], perm))
+        if k + nb < n:
+            l11 = a[k:k + nb, k:k + nb]
+            u12 = solve_triangular(l11, a[k:k + nb, k + nb:], lower=True,
+                                   unit_diagonal=True)
+            a = a.at[k:k + nb, k + nb:].set(u12)
+            upd = a[k + nb:, k + nb:] - a[k + nb:, k:k + nb] @ u12
+            a = a.at[k + nb:, k + nb:].set(upd)
+    return a, perm_total
+
+
+def _trace_lower_ms(fn, n):
+    spec = jax.ShapeDtypeStruct((n, n), jnp.float32)
+    t0 = time.perf_counter()
+    jax.jit(fn).lower(spec)
+    return (time.perf_counter() - t0) * 1e3
+
+
+def run(sizes=(512, 1024), compile_sizes=(256, 512, 1024), nb=128):
+    for n in sizes:
+        bs = min(nb, n // 2)
+        a, b = make_system(n, spd=False)
+        spd, _ = make_system(n, spd=True)
+        aj, bj, sj = jnp.asarray(a), jnp.asarray(b), jnp.asarray(spd)
+
+        # -- factor GFLOP/s vs jax.scipy baselines -------------------------
+        for name, fn, base, mat, flops in (
+                ("lu", functools.partial(lu.lu_factor, block_size=bs),
+                 jax.scipy.linalg.lu_factor, aj, 2 / 3 * n ** 3),
+                ("cholesky",
+                 functools.partial(cholesky.cholesky_factor, block_size=bs),
+                 jax.scipy.linalg.cholesky, sj, 1 / 3 * n ** 3)):
+            t = timeit(jax.jit(fn), mat)
+            tb = timeit(jax.jit(base), mat)
+            emit("direct", f"{name}_factor_n{n}", round(flops / t / 1e9, 2),
+                 "gflops", f"baseline_jsp={flops / tb / 1e9:.2f}")
+
+        # -- factor + solve wall time per method/backend -------------------
+        for method, mat, ref_mat in (("lu", aj, a), ("cholesky", sj, spd)):
+            for backend in ("ref", "pallas"):
+                fn = jax.jit(lambda A, B, m=method, be=backend: api.solve(
+                    A, B, method=m, block_size=bs, backend=be))
+                t = timeit(fn, mat, bj)
+                x = np.asarray(fn(mat, bj))
+                res = float(np.linalg.norm(b - ref_mat @ x)
+                            / np.linalg.norm(b))
+                emit("direct", f"{method}_solve_{backend}_n{n}",
+                     round(t * 1e3, 2), "ms", f"rel_res={res:.1e}")
+
+        # -- batched throughput --------------------------------------------
+        B = 8
+        ab = jnp.asarray(np.stack([a] * B))
+        bb = jnp.asarray(np.stack([b] * B))
+        fn = jax.jit(lambda A, Bv: api.solve(A, Bv, method="lu",
+                                             block_size=bs))
+        t = timeit(fn, ab, bb)
+        emit("direct", f"lu_batched_B{B}_n{n}", round(t * 1e3 / B, 2),
+             "ms/system", "vmapped fori_loop factorization")
+
+    # -- unrolled-vs-fori trace+lower time (the compile-time win) ----------
+    for n in compile_sizes:
+        t_unrolled = _trace_lower_ms(
+            functools.partial(_lu_factor_unrolled, nb=nb), n)
+        t_fori = _trace_lower_ms(
+            functools.partial(lu.lu_factor, block_size=nb), n)
+        emit("direct", f"lu_trace_lower_n{n}", round(t_fori, 1), "ms",
+             f"unrolled={t_unrolled:.1f}ms steps={n // nb}")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small sizes for CI (fast, CPU-friendly)")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        run(sizes=(256,), compile_sizes=(256, 512), nb=64)
+    else:
+        run()
+
+
+if __name__ == "__main__":
+    main()

@@ -4,6 +4,7 @@
 
 Sections:
   solvers      — §4 direct-vs-iterative method table (wall + residual)
+  direct       — factor GFLOP/s vs jax.scipy + unrolled-vs-fori compile time
   scaling      — Figs. 3/4: speedup vs node count (modeled v5e + emulated)
   local_accel  — §4 CUDA↔ATLAS ablation (Pallas↔jnp correctness + model)
   train        — LM-stack step throughput + modeled full-scale cells
@@ -25,8 +26,8 @@ def main(argv=None):
         os.path.dirname(__file__), "..", "experiments", "bench.csv"))
     args = ap.parse_args(argv)
 
-    from benchmarks import (bench_local_accel, bench_scaling, bench_solvers,
-                            bench_train)
+    from benchmarks import (bench_direct, bench_local_accel, bench_scaling,
+                            bench_solvers, bench_train)
     from benchmarks.common import ROWS
 
     failures = []
@@ -42,6 +43,10 @@ def main(argv=None):
     section("solvers", bench_solvers.run,
             sizes=(256, 512) if args.quick else (512, 1024),
             dtypes=("float32",) if args.quick else ("float32", "float64"))
+    section("direct", bench_direct.run,
+            sizes=(256,) if args.quick else (512, 1024),
+            compile_sizes=(256, 512) if args.quick else (256, 512, 1024),
+            nb=64 if args.quick else 128)
     section("local_accel", bench_local_accel.run)
     section("train", bench_train.run)
     if not args.quick:

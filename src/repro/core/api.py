@@ -14,8 +14,14 @@ every engine:
 * ``engine="gspmd"``  — compiler-scheduled collectives (default),
 * ``engine="spmd"``   — the whole iteration inside one ``shard_map`` with
   explicit collectives (MPI-faithful; all iterative methods, preconditioned),
-* batched             — pass ``a`` of shape (B, n, n) and ``b`` (B, n),
-* ``backend="pallas"``— dense engine with the fused Pallas update kernels.
+* batched             — pass ``a`` of shape (B, n, n) and ``b`` (B, n);
+  direct methods vmap their fixed-shape fori_loop factorizations,
+* ``backend="pallas"``— fused Pallas update kernels in the iterative hot
+  loop, and Pallas GEMM/TRSM/fused-panel kernels in the direct
+  factorizations (both interpret-mode off-TPU).
+
+Direct methods are registered with a factor/solve split
+(``factor=``/``apply=``), which is what :func:`factorize` dispatches on.
 """
 from __future__ import annotations
 
@@ -26,13 +32,14 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
+from repro.core import blocking as _blocking
 from repro.core import cholesky as _chol
 from repro.core import dist, krylov, lu as _lu, operator as _operator
 from repro.core import precond as _precond
+from repro.core.blocking import BACKENDS
 from repro.core.krylov import SolveResult
 
 ENGINES = ("gspmd", "spmd")
-BACKENDS = ("ref", "pallas")
 
 # capabilities of the explicit-SPMD local operator (checked pre-shard_map,
 # since the operator itself only exists inside the shard_map body)
@@ -46,18 +53,28 @@ class SolverEntry:
     kind: str = "iterative"       # "iterative" | "direct"
     requires: tuple = ()          # subset of {"matvec_t", "gram"}
     extra: tuple = ()             # accepted solver-specific kwargs
+    factor: Callable | None = None   # direct: a -> opaque factor state
+    apply: Callable | None = None    # direct: (state, b) -> x
 
 
 _REGISTRY: dict[str, SolverEntry] = {}
 
 
 def register_method(name: str, fn: Callable, *, kind: str = "iterative",
-                    requires: tuple = (), extra: tuple = ()) -> SolverEntry:
+                    requires: tuple = (), extra: tuple = (),
+                    factor: Callable | None = None,
+                    apply: Callable | None = None) -> SolverEntry:
     """Register a solver.  Iterative ``fn(op, b, *, tol, maxiter, precond,
-    **extra) -> SolveResult``; direct ``fn(a, b, *, block_size, mesh) -> x``.
-    Re-registering a name overwrites it (lets users swap implementations)."""
+    **extra) -> SolveResult``.  Direct methods register a factor/solve
+    split: ``factor(a, *, block_size, mesh, backend) -> state`` and
+    ``apply(state, b, *, block_size, mesh, backend) -> x`` (``fn`` remains
+    the one-shot convenience composition).  Re-registering a name
+    overwrites it (lets users swap implementations)."""
+    if kind == "direct" and (factor is None) != (apply is None):
+        raise ValueError(f"direct method {name!r} needs BOTH factor= and "
+                         "apply= (or neither)")
     entry = SolverEntry(name, fn, kind=kind, requires=tuple(requires),
-                        extra=tuple(extra))
+                        extra=tuple(extra), factor=factor, apply=apply)
     _REGISTRY[name] = entry
     return entry
 
@@ -75,8 +92,10 @@ def available_methods(kind: str | None = None) -> tuple[str, ...]:
                         if kind is None or e.kind == kind))
 
 
-register_method("lu", _lu.solve, kind="direct")
-register_method("cholesky", _chol.solve, kind="direct")
+register_method("lu", _lu.solve, kind="direct",
+                factor=_lu.lu_factor, apply=_lu.lu_apply)
+register_method("cholesky", _chol.solve, kind="direct",
+                factor=_chol.cholesky_factor_state, apply=_chol.cholesky_apply)
 register_method("cg", krylov.cg)
 register_method("pipelined_cg", krylov.pipelined_cg)
 register_method("bicg", krylov.bicg, requires=("matvec_t",))
@@ -106,8 +125,7 @@ def solve(a: jax.Array, b: jax.Array, *, method: str = "lu",
                         f"{list(entry.extra)}")
     if engine not in ENGINES:
         raise ValueError(f"unknown engine {engine!r}; expected {ENGINES}")
-    if backend not in BACKENDS:
-        raise ValueError(f"unknown backend {backend!r}; expected {BACKENDS}")
+    _blocking.check_backend(backend, mesh)
 
     if mesh is not None:
         if a.ndim == 3:
@@ -116,15 +134,39 @@ def solve(a: jax.Array, b: jax.Array, *, method: str = "lu",
         b = dist.shard_vector(b, mesh)
 
     if entry.kind == "direct":
-        if a.ndim == 3:
-            raise ValueError(f"method {method!r} does not support batching")
-        x = entry.fn(a, b, block_size=block_size, mesh=mesh)
+        if engine == "spmd":
+            raise ValueError("direct methods are factorizations on the "
+                             "gspmd engine; engine='spmd' is iterative-only")
+        kw = dict(block_size=block_size, mesh=mesh, backend=backend)
+        if entry.factor is None:
+            # legacy one-shot registration (no factor/apply split)
+            if a.ndim == 3:
+                raise ValueError(f"method {method!r} has no factor/apply "
+                                 "split; batched direct solves need one")
+            if backend != "ref":
+                raise ValueError(f"method {method!r} has no factor/apply "
+                                 f"split; backend={backend!r} unsupported")
+            x = entry.fn(a, b, block_size=block_size, mesh=mesh)
+        elif a.ndim == 3:
+            # batched direct solve: vmap the fixed-shape fori_loop
+            # factorization over the leading axis
+            if b.ndim < 2 or b.shape[0] != a.shape[0]:
+                raise ValueError(f"batched a {a.shape} needs b of shape "
+                                 f"(B, n[, k]), got {b.shape}")
+            x = jax.vmap(lambda A, B: entry.apply(
+                entry.factor(A, **kw), B, **kw))(a, b)
+        else:
+            x = entry.apply(entry.factor(a, **kw), b, **kw)
         if not return_info:
             return x
-        res = jnp.linalg.norm(b - a @ x)
-        bnorm = jnp.linalg.norm(b)
+        ax = a @ x if x.ndim == a.ndim else (a @ x[..., None])[..., 0]
+        axis = None if a.ndim == 2 else tuple(range(1, b.ndim))
+        res = jnp.linalg.norm(b - ax, axis=axis)
+        bnorm = jnp.linalg.norm(b, axis=axis)
         atol = tol * jnp.where(bnorm == 0, 1.0, bnorm)
-        return SolveResult(x, jnp.asarray(0), res, res <= atol)
+        iters = jnp.zeros(res.shape, jnp.int32) if a.ndim == 3 \
+            else jnp.asarray(0)
+        return SolveResult(x, iters, res, res <= atol)
 
     pc = _precond.make(precond, a, block_size)
     extra = {"restart": restart} if "restart" in entry.extra else {}
@@ -155,16 +197,32 @@ def solve(a: jax.Array, b: jax.Array, *, method: str = "lu",
 
 
 def factorize(a: jax.Array, *, method: str = "lu", mesh=None,
-              block_size: int = 128):
-    """Factor once, solve many (paper's two-step direct method, step 1)."""
+              block_size: int = 128, backend: str = "ref"):
+    """Factor once, solve many (paper's two-step direct method, step 1).
+
+    Any method registered with ``kind="direct"`` and a factor/apply split
+    works; the returned callable maps ``b -> x``.  Batched ``a`` of shape
+    (B, n, n) returns a solver over (B, n[, k]) right-hand sides.
+    """
+    entry = get_method(method)
+    with_split = tuple(sorted(n for n, e in _REGISTRY.items()
+                              if e.kind == "direct" and e.factor is not None))
+    if entry.kind != "direct":
+        raise ValueError(f"factorize needs a direct method; {method!r} is "
+                         f"{entry.kind}; available: {with_split}")
+    if entry.factor is None:
+        raise ValueError(f"direct method {method!r} has no factor/apply "
+                         f"split; methods with one: {with_split}")
+    _blocking.check_backend(backend, mesh)
+    if a.ndim == 3:
+        if mesh is not None:
+            raise ValueError("batched solves are single-device (mesh=None)")
+        kw = dict(block_size=block_size, mesh=None, backend=backend)
+        state = jax.vmap(lambda A: entry.factor(A, **kw))(a)
+        return lambda b: jax.vmap(
+            lambda s, B: entry.apply(s, B, **kw))(state, b)
     if mesh is not None:
         a = dist.shard_matrix(a, mesh)
-    if method == "lu":
-        lu_mat, perm = _lu.lu_factor(a, block_size=block_size, mesh=mesh)
-        return functools.partial(_lu.lu_solve, lu_mat, perm,
-                                 block_size=block_size, mesh=mesh)
-    if method == "cholesky":
-        l = _chol.cholesky_factor(a, block_size=block_size, mesh=mesh)
-        return functools.partial(_chol.cholesky_solve, l,
-                                 block_size=block_size, mesh=mesh)
-    raise ValueError(f"factorize supports lu/cholesky, not {method!r}")
+    state = entry.factor(a, block_size=block_size, mesh=mesh, backend=backend)
+    return functools.partial(entry.apply, state, block_size=block_size,
+                             mesh=mesh, backend=backend)

@@ -1,0 +1,77 @@
+"""Shared blocking / padding policy for the direct (factorization) path.
+
+One rule for lu / cholesky / triangular instead of three ad-hoc
+ValueErrors: ``block_size`` is clamped to ``n`` and, when the clamped
+block does not divide ``n``, the operands are padded up to the next block
+multiple.  Padding is *exact*: the padded system is block-diagonal
+``[[A, 0], [0, I]]`` with a zero-padded right-hand side, so the pad rows
+factor/solve trivially (unit pivots, zero solution components) and the
+leading ``n`` components of the solution are unchanged.  Only genuinely
+impossible requests (``block_size < 1``, non-square ``a``) raise.
+
+The padded shapes are static functions of ``(n, block_size)``, so the
+``lax.fori_loop`` factorizations built on top stay O(1) in trace/compile
+cost regardless of ``n``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+BACKENDS = ("ref", "pallas")
+
+
+def check_backend(backend: str, mesh=None) -> None:
+    """Single validation used by every direct-path entry point."""
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; expected {BACKENDS}")
+    if backend == "pallas" and mesh is not None:
+        raise ValueError("backend='pallas' is single-device only; "
+                         "drop mesh= or use backend='ref'")
+
+
+def effective_backend(backend: str, dtype) -> str:
+    """The Pallas kernels cast to f32 and accumulate in f32; any other
+    dtype stays on the exact jnp reference path — the same silent-fallback
+    rule as the iterative ``DenseOperator`` (float64 keeps f64 accuracy)."""
+    return "ref" if backend == "pallas" and dtype != jnp.float32 else backend
+
+
+def choose_block(n: int, block_size: int) -> int:
+    if block_size < 1:
+        raise ValueError(f"block_size={block_size} must be >= 1")
+    return min(block_size, n)
+
+
+def padded_size(n: int, nb: int) -> int:
+    return -(-n // nb) * nb
+
+
+def pad_system(a: jax.Array, block_size: int) -> tuple[jax.Array, int, int]:
+    """Return ``(a_padded, nb, n_padded)`` with an identity pad block.
+
+    The identity pad keeps every structure the factorizations need: LU
+    pivots in the pad block are exact 1s, SPD-ness is preserved for
+    Cholesky, and triangular pads solve trivially.
+    """
+    n = a.shape[-1]
+    if a.ndim != 2 or a.shape[0] != n:
+        raise ValueError(f"expected a square (n, n) matrix, got {a.shape}")
+    nb = choose_block(n, block_size)
+    n_pad = padded_size(n, nb)
+    if n_pad != n:
+        pad = n_pad - n
+        a = jnp.pad(a, ((0, pad), (0, pad)))
+        a = a.at[n:, n:].set(jnp.eye(pad, dtype=a.dtype))
+    return a, nb, n_pad
+
+
+def pad_rhs(b: jax.Array, n_padded: int) -> jax.Array:
+    """Zero-pad the leading axis of a right-hand side up to ``n_padded``."""
+    pad = n_padded - b.shape[0]
+    if pad < 0:
+        raise ValueError(f"rhs has {b.shape[0]} rows; factor only covers "
+                         f"{n_padded}")
+    if pad:
+        b = jnp.pad(b, ((0, pad),) + ((0, 0),) * (b.ndim - 1))
+    return b

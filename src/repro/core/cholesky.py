@@ -3,7 +3,12 @@
 Same delayed-update structure as the LU: per block step, a small replicated
 (nb × nb) Cholesky of the diagonal block, a block TRSM for the panel below
 it, and a rank-``nb`` SYRK trailing update — the Level-3 hot spot that runs
-on the MXU (or the Pallas GEMM kernel on hardware).
+on the MXU (or the Pallas kernels with ``backend="pallas"``).
+
+Like :mod:`repro.core.lu`, block stepping is a fixed-shape
+``lax.fori_loop`` over masked, statically-shaped windows of the full
+matrix, so trace/compile cost is O(1) in ``n``; non-block-multiple sizes
+are identity-padded (exact — see :mod:`repro.core.blocking`).
 """
 from __future__ import annotations
 
@@ -11,45 +16,94 @@ import jax
 import jax.numpy as jnp
 from jax.scipy.linalg import solve_triangular
 
-from repro.core import dist
+from repro.core import blocking, dist
 
 
-def cholesky_factor(a: jax.Array, block_size: int = 128, mesh=None
+def cholesky_factor(a: jax.Array, block_size: int = 128, mesh=None,
+                    backend: str = "ref", fuse_panel: bool = True
                     ) -> jax.Array:
     """Returns L (lower triangular) with A = L @ L.T.  A must be SPD."""
-    n = a.shape[0]
-    nb = min(block_size, n)
-    if n % nb:
-        raise ValueError(f"n={n} must be divisible by block_size={nb}")
+    blocking.check_backend(backend, mesh)
+    backend = blocking.effective_backend(backend, a.dtype)
+    a, nb, n = blocking.pad_system(a, block_size)
+    rows = jnp.arange(n)[:, None]
+    if backend == "pallas":
+        from repro.kernels import factor_fused, gemm, trsm
+        from repro.kernels.krylov_fused import _auto_interpret
+        interp = _auto_interpret(None)
 
-    for k in range(0, n, nb):
-        akk = a[k:k + nb, k:k + nb]
+    def step(s, a):
+        k = s * nb
+        akk = jax.lax.dynamic_slice(a, (k, k), (nb, nb))
         lkk = jnp.linalg.cholesky(akk)                 # tiny, replicated
-        a = a.at[k:k + nb, k:k + nb].set(lkk)
-        if k + nb < n:
-            a21 = a[k + nb:, k:k + nb]
-            # L21 = A21 @ L11^{-T}  (right-side TRSM)
-            l21 = solve_triangular(lkk, a21.T, lower=True).T
-            a = a.at[k + nb:, k:k + nb].set(l21)
-            # trailing SYRK (delayed rank-nb update)
-            upd = a[k + nb:, k + nb:] - l21 @ l21.T
-            a = a.at[k + nb:, k + nb:].set(upd)
+        a = jax.lax.dynamic_update_slice(a, lkk.astype(a.dtype), (k, k))
+        if backend == "pallas" and fuse_panel:
+            # L21 = A21 @ L11^{-T} via the pre-inverted diagonal block
+            linv = solve_triangular(lkk, jnp.eye(nb, dtype=a.dtype),
+                                    lower=True)
+            a = factor_fused.cholesky_panel_update(a, linv, k, nb=nb,
+                                                   interpret=interp)
+        else:
+            # L21 = A21 @ L11^{-T}  (right-side TRSM), masked to the rows
+            # below the panel; history rows / diag block pass through
+            colblk = jax.lax.dynamic_slice(a, (0, k), (n, nb))
+            if backend == "pallas":
+                l21_full = trsm.trsm_lower(lkk, colblk.T, sb=nb, bc=nb,
+                                           interpret=interp).T
+            else:
+                l21_full = solve_triangular(lkk, colblk.T, lower=True).T
+            l21 = jnp.where(rows >= k + nb, l21_full.astype(a.dtype), colblk)
+            a = jax.lax.dynamic_update_slice(a, l21, (0, k))
+            # trailing SYRK (delayed rank-nb update, masked full GEMM)
+            l21m = jnp.where(rows >= k + nb, l21, 0)
+            if backend == "pallas":
+                a = a - gemm.matmul(l21m, l21m.T, bm=nb, bn=nb, bk=nb,
+                                    interpret=interp)
+            else:
+                a = a - l21m @ l21m.T
         if mesh is not None:
             a = dist.constrain_matrix(a, mesh)
+        return a
 
+    a = jax.lax.fori_loop(0, n // nb, step, a)
     return jnp.tril(a)
 
 
 def cholesky_solve(l: jax.Array, b: jax.Array, block_size: int = 128,
-                   mesh=None) -> jax.Array:
-    """Solve A x = b given L from :func:`cholesky_factor`."""
+                   mesh=None, backend: str = "ref") -> jax.Array:
+    """Solve A x = b given L from :func:`cholesky_factor`.
+
+    Accepts a ``b`` shorter than the (padded) factor — pad rows solve to
+    exact zeros and are sliced away.
+    """
     from repro.core.triangular import solve_lower_blocked, solve_upper_blocked
-    y = solve_lower_blocked(l, b, block_size=block_size, mesh=mesh)
+    n0 = b.shape[0]
+    bp = blocking.pad_rhs(b, l.shape[0])
+    y = solve_lower_blocked(l, bp, block_size=block_size, mesh=mesh,
+                            backend=backend)
     # Ux = y with U = L.T : reuse the blocked upper solve on Lᵀ
-    return solve_upper_blocked(l.T, y, block_size=block_size, mesh=mesh)
+    x = solve_upper_blocked(l.T, y, block_size=block_size, mesh=mesh,
+                            backend=backend)
+    return x[:n0]
 
 
-def solve(a: jax.Array, b: jax.Array, block_size: int = 128, mesh=None
-          ) -> jax.Array:
-    l = cholesky_factor(a, block_size=block_size, mesh=mesh)
-    return cholesky_solve(l, b, block_size=block_size, mesh=mesh)
+def cholesky_factor_state(a: jax.Array, *, block_size: int = 128, mesh=None,
+                          backend: str = "ref") -> tuple[jax.Array]:
+    """Registry ``factor`` entry: one-tuple state for :func:`cholesky_apply`."""
+    return (cholesky_factor(a, block_size=block_size, mesh=mesh,
+                            backend=backend),)
+
+
+def cholesky_apply(state, b: jax.Array, *, block_size: int = 128, mesh=None,
+                   backend: str = "ref") -> jax.Array:
+    """Registry ``apply`` entry: solve from a factored state."""
+    (l,) = state
+    return cholesky_solve(l, b, block_size=block_size, mesh=mesh,
+                          backend=backend)
+
+
+def solve(a: jax.Array, b: jax.Array, block_size: int = 128, mesh=None,
+          backend: str = "ref") -> jax.Array:
+    l = cholesky_factor(a, block_size=block_size, mesh=mesh, backend=backend)
+    return cholesky_solve(l, b, block_size=block_size, mesh=mesh,
+                          backend=backend)

@@ -2,113 +2,153 @@
 
 This is the paper's *delayed-update* (Level-3 BLAS) LU: ``k`` rank-1 updates
 are replaced by a single rank-``nb`` update so the hot loop is a large GEMM
-— on TPU that is the MXU hot spot (optionally executed by the Pallas kernel
-in ``repro.kernels.gemm``).
+— on TPU that is the MXU hot spot, optionally executed by the Pallas
+kernels (``backend="pallas"``).
+
+Block stepping is a fixed-shape ``lax.fori_loop``: every step operates on
+statically-shaped windows of the full matrix (masked panel, masked TRSM,
+masked rank-``nb`` trailing update — ScaLAPACK-style), so trace/compile
+cost is O(1) in ``n`` instead of the O(n / nb) of a Python-unrolled loop.
+The masked regions contribute exact zeros; the redundant flops run on the
+MXU at full rate — the classic TPU bargain (see DESIGN.md §2).
+
+``backend="pallas"`` executes the step body with the Pallas kernels: by
+default the fused panel-update kernel (TRSM + rank-nb GEMM in one
+``pallas_call``, :mod:`repro.kernels.factor_fused`), or with
+``fuse_panel=False`` the separate :mod:`repro.kernels.trsm` /
+:mod:`repro.kernels.gemm` kernels.  Off-TPU the kernels run in interpret
+mode (same dispatch rule as the iterative path).
 
 Distribution: the matrix is a global array in the 2-D block layout
 (``dist.matrix_spec``); the factorization is written against the *global*
 view and the XLA SPMD partitioner inserts the row-broadcasts / pivot-swap
-collectives the MPI version performed explicitly.  TPU-adaptation notes are
-in DESIGN.md §2: pivot search is a masked argmax, the per-column swap
+collectives the MPI version performed explicitly.  The per-column swap
 sequence is accumulated into a single row permutation applied as one gather
-per panel, and the panel factorization is a fixed-shape masked update so it
-maps onto vector units instead of data-dependent control flow.
+per panel.
 
 ``lu_factor`` returns (LU_packed, perm) with ``A[perm] = L @ U`` — i.e.
 ``perm`` is the accumulated row permutation (paper's ipiv, converted to
-permutation form).
+permutation form).  When ``n`` is not a block multiple the factors are of
+the identity-padded system (see :mod:`repro.core.blocking`); ``lu_solve``
+pads/slices the right-hand side transparently.
 """
 from __future__ import annotations
-
-import functools
-from typing import Callable
 
 import jax
 import jax.numpy as jnp
 from jax.scipy.linalg import solve_triangular
 
-from repro.core import dist
+from repro.core import blocking, dist
 
 
-def _panel_factor(pan: jax.Array, n_valid: int | None = None):
-    """LU with partial pivoting of an (m, nb) panel, fixed shapes.
+def _panel_factor(pan: jax.Array, k):
+    """LU with partial pivoting of the full (n, nb) column block.
 
-    Returns the packed panel (L unit-lower / U upper in place) and the row
-    permutation ``perm`` (m,) such that pan_in[perm] = L @ U.
+    Rows below the (possibly traced) step offset ``k`` are active; rows
+    above hold U history and pass through untouched (pivot search, swaps,
+    scaling and the rank-1 updates are all masked to the active window).
+    Returns the packed block and the global row permutation ``perm`` (n,)
+    — identity outside ``[k, n)`` — with pan_in[perm] = L @ U.
     """
-    m, nb = pan.shape
-    rows = jnp.arange(m)
+    n, nb = pan.shape
+    rows = jnp.arange(n)
 
     def col_step(j, carry):
         pan, perm = carry
+        g = k + j                      # global pivot row/column
         col = pan[:, j]
-        # -- pivot search: largest |entry| among rows >= j ------------------
-        cand = jnp.where(rows >= j, jnp.abs(col), -jnp.inf)
+        # -- pivot search: largest |entry| among active rows >= g ----------
+        cand = jnp.where(rows >= g, jnp.abs(col), -jnp.inf)
         p = jnp.argmax(cand)
-        # -- row swap j <-> p (also recorded in perm) -----------------------
-        row_j, row_p = pan[j, :], pan[p, :]
-        pan = pan.at[j, :].set(row_p).at[p, :].set(row_j)
-        pj, pp = perm[j], perm[p]
-        perm = perm.at[j].set(pp).at[p].set(pj)
+        # -- row swap g <-> p (also recorded in perm) -----------------------
+        row_g, row_p = pan[g, :], pan[p, :]
+        pan = pan.at[g, :].set(row_p).at[p, :].set(row_g)
+        pg, pp = perm[g], perm[p]
+        perm = perm.at[g].set(pp).at[p].set(pg)
         # -- scale multipliers ----------------------------------------------
-        pivot = pan[j, j]
+        pivot = pan[g, j]
         safe = jnp.where(pivot == 0, jnp.asarray(1, pan.dtype), pivot)
         col = pan[:, j]
-        mcol = jnp.where(rows > j, col / safe, col)
+        mcol = jnp.where(rows > g, col / safe, col)
         pan = pan.at[:, j].set(mcol)
         # -- rank-1 update of the panel's trailing block (masked) -----------
-        urow = pan[j, :]
-        mmask = jnp.where(rows > j, mcol, 0)
+        urow = pan[g, :]
+        mmask = jnp.where(rows > g, mcol, 0)
         umask = jnp.where(jnp.arange(nb) > j, urow, 0)
         pan = pan - jnp.outer(mmask, umask)
         return pan, perm
 
-    perm0 = jnp.arange(m)
-    pan, perm = jax.lax.fori_loop(0, nb, col_step, (pan, perm0))
-    return pan, perm
+    return jax.lax.fori_loop(0, nb, col_step, (pan, jnp.arange(n)))
 
 
-def lu_factor(a: jax.Array, block_size: int = 128, mesh=None
+def lu_factor(a: jax.Array, block_size: int = 128, mesh=None,
+              backend: str = "ref", fuse_panel: bool = True
               ) -> tuple[jax.Array, jax.Array]:
     """Blocked LU with partial pivoting.  Returns (LU_packed, perm)."""
-    n = a.shape[0]
-    nb = min(block_size, n)
-    if n % nb:
-        raise ValueError(f"n={n} must be divisible by block_size={nb}")
-    perm_total = jnp.arange(n)
+    blocking.check_backend(backend, mesh)
+    backend = blocking.effective_backend(backend, a.dtype)
+    a, nb, n = blocking.pad_system(a, block_size)
+    rows = jnp.arange(n)[:, None]
+    cols = jnp.arange(n)[None, :]
+    if backend == "pallas":
+        from repro.kernels import factor_fused, gemm, trsm
+        from repro.kernels.krylov_fused import _auto_interpret
+        interp = _auto_interpret(None)
 
-    for k in range(0, n, nb):
-        pan = a[k:, k:k + nb]                                    # (n-k, nb)
+    def step(s, carry):
+        a, perm_total = carry
+        k = s * nb
+        # ---- panel: one pivoted factorization of the column block --------
+        colblk = jax.lax.dynamic_slice(a, (0, k), (n, nb))
         if mesh is not None:
             # gather the panel across process COLUMNS before the column
             # loop (rows stay sharded): the nb-step pivoted factorization
             # then runs on the row-sharded panel with small psum/argmax
-            # rounds instead of re-gathering the whole panel every column
-            # step — the paper's "panel on one process column" pattern
+            # rounds — the paper's "panel on one process column" pattern
             # (EXPERIMENTS.md §Perf solver hc3)
-            row, _ = dist.solver_axes(mesh)
-            pan = dist.constrain(pan, mesh,
-                                 jax.sharding.PartitionSpec(row, None))
-        pan, perm = _panel_factor(pan)
-        # one gather applies the whole panel's swap sequence to the rest of
-        # the row block (L history + trailing matrix)
-        rows = a[k:, :]
-        rows = jnp.take(rows, perm, axis=0)
-        rows = rows.at[:, k:k + nb].set(pan)
-        a = a.at[k:, :].set(rows)
-        perm_total = perm_total.at[k:].set(jnp.take(perm_total[k:], perm))
-        if k + nb < n:
-            l11 = a[k:k + nb, k:k + nb]
-            a12 = a[k:k + nb, k + nb:]
-            u12 = solve_triangular(l11, a12, lower=True, unit_diagonal=True)
-            a = a.at[k:k + nb, k + nb:].set(u12)
-            l21 = a[k + nb:, k:k + nb]
-            # delayed rank-nb update — the Level-3 hot spot
-            upd = a[k + nb:, k + nb:] - l21 @ u12
-            a = a.at[k + nb:, k + nb:].set(upd)
+            row_ax, _ = dist.solver_axes(mesh)
+            colblk = dist.constrain(colblk, mesh,
+                                    jax.sharding.PartitionSpec(row_ax, None))
+        pan, perm = _panel_factor(colblk, k)
+        # one gather applies the whole panel's swap sequence (identity on
+        # the already-factored rows) to L history + trailing matrix
+        a = jnp.take(a, perm, axis=0)
+        a = jax.lax.dynamic_update_slice(a, pan, (0, k))
+        perm_total = jnp.take(perm_total, perm)
+        # ---- TRSM of the panel row block + rank-nb trailing update -------
+        l11 = jax.lax.dynamic_slice(a, (k, k), (nb, nb))
+        if backend == "pallas" and fuse_panel:
+            linv = solve_triangular(l11, jnp.eye(nb, dtype=a.dtype),
+                                    lower=True, unit_diagonal=True)
+            a = factor_fused.lu_panel_update(a, linv, k, nb=nb,
+                                             interpret=interp)
+        else:
+            rowblk = jax.lax.dynamic_slice(a, (k, 0), (nb, n))
+            if backend == "pallas":
+                u_full = trsm.trsm_lower(l11, rowblk, unit_diagonal=True,
+                                         sb=nb, bc=nb, interpret=interp)
+            else:
+                u_full = solve_triangular(l11, rowblk, lower=True,
+                                          unit_diagonal=True)
+            u_keep = jnp.where(cols >= k + nb, u_full, rowblk)
+            a = jax.lax.dynamic_update_slice(a, u_keep.astype(a.dtype),
+                                             (k, 0))
+            # delayed rank-nb update — the Level-3 hot spot (masked full
+            # GEMM: inactive rows/cols contribute exact zeros)
+            l21 = jnp.where(rows >= k + nb,
+                            jax.lax.dynamic_slice(a, (0, k), (n, nb)), 0)
+            u12 = jnp.where(cols >= k + nb, u_full, 0).astype(a.dtype)
+            if backend == "pallas":
+                a = a - gemm.matmul(l21.astype(a.dtype), u12, bm=nb, bn=nb,
+                                    bk=nb, interpret=interp)
+            else:
+                a = a - l21 @ u12
         if mesh is not None:
             a = dist.constrain_matrix(a, mesh)
+        return a, perm_total
 
+    a, perm_total = jax.lax.fori_loop(0, n // nb, step,
+                                      (a, jnp.arange(n)))
     return a, perm_total
 
 
@@ -120,18 +160,34 @@ def unpack(lu: jax.Array) -> tuple[jax.Array, jax.Array]:
 
 
 def lu_solve(lu: jax.Array, perm: jax.Array, b: jax.Array,
-             block_size: int = 128, mesh=None) -> jax.Array:
-    """Solve A x = b given (LU, perm) from :func:`lu_factor`."""
+             block_size: int = 128, mesh=None, backend: str = "ref"
+             ) -> jax.Array:
+    """Solve A x = b given (LU, perm) from :func:`lu_factor`.
+
+    Accepts a ``b`` shorter than the (padded) factor — pad rows solve to
+    exact zeros and are sliced away.
+    """
     from repro.core.triangular import solve_lower_blocked, solve_upper_blocked
-    bp = jnp.take(b, perm, axis=0)
+    n0 = b.shape[0]
+    bp = jnp.take(blocking.pad_rhs(b, lu.shape[0]), perm, axis=0)
     y = solve_lower_blocked(lu, bp, unit_diagonal=True,
-                            block_size=block_size, mesh=mesh)
-    x = solve_upper_blocked(lu, y, block_size=block_size, mesh=mesh)
-    return x
+                            block_size=block_size, mesh=mesh, backend=backend)
+    x = solve_upper_blocked(lu, y, block_size=block_size, mesh=mesh,
+                            backend=backend)
+    return x[:n0]
 
 
-def solve(a: jax.Array, b: jax.Array, block_size: int = 128, mesh=None
-          ) -> jax.Array:
+def lu_apply(state, b: jax.Array, *, block_size: int = 128, mesh=None,
+             backend: str = "ref") -> jax.Array:
+    """Registry ``apply`` entry: solve from a :func:`lu_factor` state."""
+    lu, perm = state
+    return lu_solve(lu, perm, b, block_size=block_size, mesh=mesh,
+                    backend=backend)
+
+
+def solve(a: jax.Array, b: jax.Array, block_size: int = 128, mesh=None,
+          backend: str = "ref") -> jax.Array:
     """Direct dense solve via blocked, pivoted LU (paper's two-step method)."""
-    lu, perm = lu_factor(a, block_size=block_size, mesh=mesh)
-    return lu_solve(lu, perm, b, block_size=block_size, mesh=mesh)
+    lu, perm = lu_factor(a, block_size=block_size, mesh=mesh, backend=backend)
+    return lu_solve(lu, perm, b, block_size=block_size, mesh=mesh,
+                    backend=backend)

@@ -5,10 +5,16 @@ inner dependence into (nb × nb) diagonal-block solves plus GEMV-style
 rank-updates, so the bulk of the traffic is Level-2/3 BLAS on the 2-D block
 layout.  The diagonal-block solve itself is tiny and replicated.
 
+Block stepping is a fixed-shape ``lax.fori_loop`` (statically-shaped
+diagonal slices + a masked column-block GEMV per step), so trace/compile
+cost is O(1) in ``n``; non-block-multiple sizes are identity/zero padded
+(exact — see :mod:`repro.core.blocking`).
+
 TPU adaptation: instead of the GPU pointer-chasing TRSV, each step is a
 fixed-shape dense ``solve_triangular`` on an (nb, nb) tile + a GEMV update
-of the remaining right-hand side — see also ``repro.kernels.trsm`` for the
-Pallas inverse-based tile kernel used on real hardware.
+of the remaining right-hand side.  ``backend="pallas"`` skips the step loop
+entirely and runs the whole solve in ONE inverse-based Pallas kernel launch
+(:mod:`repro.kernels.trsm`, auto-padded, interpret mode off-TPU).
 """
 from __future__ import annotations
 
@@ -16,46 +22,78 @@ import jax
 import jax.numpy as jnp
 from jax.scipy.linalg import solve_triangular
 
-from repro.core import dist
+from repro.core import blocking, dist
+
+
+def _rows(y, k, nb):
+    return jax.lax.dynamic_slice_in_dim(y, k, nb, 0)
+
+
+def _set_rows(y, yk, k):
+    return jax.lax.dynamic_update_slice_in_dim(y, yk.astype(y.dtype), k, 0)
 
 
 def solve_lower_blocked(a: jax.Array, b: jax.Array, *,
                         unit_diagonal: bool = False, block_size: int = 128,
-                        mesh=None) -> jax.Array:
+                        mesh=None, backend: str = "ref") -> jax.Array:
     """Solve L y = b where L is the lower triangle of ``a``."""
-    n = a.shape[0]
-    nb = min(block_size, n)
-    if n % nb:
-        raise ValueError(f"n={n} must divide block_size={nb}")
-    y = b
-    for k in range(0, n, nb):
-        lkk = a[k:k + nb, k:k + nb]
-        yk = solve_triangular(lkk, y[k:k + nb], lower=True,
+    blocking.check_backend(backend, mesh)
+    if blocking.effective_backend(backend, a.dtype) == "pallas":
+        # ONE inverse-based kernel launch; the auto wrapper applies the
+        # same pad policy itself, so don't pad twice
+        from repro.kernels import trsm
+        return trsm.trsm_lower_auto(
+            a, b, unit_diagonal=unit_diagonal,
+            sb=blocking.choose_block(a.shape[0], block_size))
+    n0 = b.shape[0]
+    a, nb, n = blocking.pad_system(a, block_size)
+    b = blocking.pad_rhs(b, n)
+    rows = jnp.arange(n)[:, None]
+
+    def step(s, y):
+        k = s * nb
+        lkk = jax.lax.dynamic_slice(a, (k, k), (nb, nb))
+        yk = solve_triangular(lkk, _rows(y, k, nb), lower=True,
                               unit_diagonal=unit_diagonal)
-        y = y.at[k:k + nb].set(yk)
-        if k + nb < n:
-            upd = y[k + nb:] - a[k + nb:, k:k + nb] @ yk
-            y = y.at[k + nb:].set(upd)
-            if mesh is not None:
-                y = dist.constrain_vector(y, mesh) if y.ndim == 1 else y
-    return y
+        y = _set_rows(y, yk, k)
+        # masked GEMV update of every row below the diagonal block
+        colblk = jax.lax.dynamic_slice(a, (0, k), (n, nb))
+        m = jnp.where(rows >= k + nb, colblk, 0)
+        y = y - (m @ yk).astype(y.dtype)
+        if mesh is not None and y.ndim == 1:
+            y = dist.constrain_vector(y, mesh)
+        return y
+
+    y = jax.lax.fori_loop(0, n // nb, step, b)
+    return y[:n0]
 
 
 def solve_upper_blocked(a: jax.Array, b: jax.Array, *,
-                        block_size: int = 128, mesh=None) -> jax.Array:
+                        block_size: int = 128, mesh=None,
+                        backend: str = "ref") -> jax.Array:
     """Solve U x = b where U is the upper triangle of ``a``."""
-    n = a.shape[0]
-    nb = min(block_size, n)
-    if n % nb:
-        raise ValueError(f"n={n} must divide block_size={nb}")
-    x = b
-    for k in range(n - nb, -1, -nb):
-        ukk = a[k:k + nb, k:k + nb]
-        xk = solve_triangular(ukk, x[k:k + nb], lower=False)
-        x = x.at[k:k + nb].set(xk)
-        if k > 0:
-            upd = x[:k] - a[:k, k:k + nb] @ xk
-            x = x.at[:k].set(upd)
-            if mesh is not None:
-                x = dist.constrain_vector(x, mesh) if x.ndim == 1 else x
-    return x
+    blocking.check_backend(backend, mesh)
+    if blocking.effective_backend(backend, a.dtype) == "pallas":
+        from repro.kernels import trsm
+        return trsm.trsm_upper_auto(
+            a, b, sb=blocking.choose_block(a.shape[0], block_size))
+    n0 = b.shape[0]
+    a, nb, n = blocking.pad_system(a, block_size)
+    b = blocking.pad_rhs(b, n)
+    rows = jnp.arange(n)[:, None]
+
+    def step(s, x):
+        k = n - (s + 1) * nb
+        ukk = jax.lax.dynamic_slice(a, (k, k), (nb, nb))
+        xk = solve_triangular(ukk, _rows(x, k, nb), lower=False)
+        x = _set_rows(x, xk, k)
+        # masked GEMV update of every row above the diagonal block
+        colblk = jax.lax.dynamic_slice(a, (0, k), (n, nb))
+        m = jnp.where(rows < k, colblk, 0)
+        x = x - (m @ xk).astype(x.dtype)
+        if mesh is not None and x.ndim == 1:
+            x = dist.constrain_vector(x, mesh)
+        return x
+
+    x = jax.lax.fori_loop(0, n // nb, step, b)
+    return x[:n0]

@@ -1,7 +1,9 @@
 """Pallas TPU kernels for the compute hot spots (paper's CUDA level):
 
 * ``gemm``         — MXU-tiled matmul (the delayed rank-k update / CUBLAS role)
-* ``trsm``         — inverse-based block triangular solve
+* ``trsm``         — inverse-based block triangular solve (lower/upper, auto-pad)
+* ``factor_fused`` — fused LU/Cholesky panel update (TRSM + rank-nb GEMM in
+  one launch, masked for fori_loop block stepping)
 * ``attention``    — flash attention fwd (GQA, causal, sliding window)
 * ``krylov_fused`` — fused CG/BiCGSTAB vector update + reduction
 

@@ -61,10 +61,13 @@ def trsm_lower(l: jax.Array, b: jax.Array, *, unit_diagonal: bool = False,
         raise ValueError(f"shapes {(n, m)} not tiled by {(sb, bc)}")
     n_blocks = n // sb
 
-    # invert the diagonal sub-blocks (tiny, once) — "local acceleration"
+    # invert the diagonal sub-blocks (tiny, once) — "local acceleration".
+    # One reshape + jnp.diagonal gather instead of a Python comprehension,
+    # so trace size is O(1) in n_blocks.
     ident = jnp.eye(sb, dtype=jnp.float32)
-    diag = jnp.stack([l[i * sb:(i + 1) * sb, i * sb:(i + 1) * sb]
-                      for i in range(n_blocks)]).astype(jnp.float32)
+    diag = jnp.diagonal(l.reshape(n_blocks, sb, n_blocks, sb),
+                        axis1=0, axis2=2)                    # (sb, sb, nblk)
+    diag = jnp.moveaxis(diag, -1, 0).astype(jnp.float32)     # (nblk, sb, sb)
     linv = jax.vmap(lambda blk: solve_triangular(
         blk, ident, lower=True, unit_diagonal=unit_diagonal))(diag)
 
@@ -87,3 +90,73 @@ def trsm_lower(l: jax.Array, b: jax.Array, *, unit_diagonal: bool = False,
         interpret=interpret,
         **params,
     )(l, linv, b)
+
+
+def trsm_upper(u: jax.Array, b: jax.Array, *, unit_diagonal: bool = False,
+               sb: int = 128, bc: int = 256, interpret: bool = False
+               ) -> jax.Array:
+    """Solve U X = B (U upper-triangular) with the SAME lower kernel.
+
+    Uses the reversal identity: with J the index-reversal permutation,
+    L' = J U J is lower triangular and U x = b  ⇔  L' (J x) = J b — two
+    cheap flips outside the kernel, zero new kernel code.
+    """
+    l = jnp.flip(u, (0, 1))
+    x = trsm_lower(l, jnp.flip(b, 0), unit_diagonal=unit_diagonal,
+                   sb=sb, bc=bc, interpret=interpret)
+    return jnp.flip(x, 0)
+
+
+# --------------------------------------------------------------------------
+# Auto-padding dispatch (same contract as krylov_fused.*_auto): arbitrary
+# (n, m) shapes via an exact identity/zero pad, interpret mode off-TPU.
+# The padded system is block-diagonal [[L, 0], [0, I]] with zero RHS rows,
+# so the pad solves to exact zeros that are sliced away.
+# --------------------------------------------------------------------------
+
+_LANE = 128
+
+
+def _pad_triangular(t: jax.Array, b: jax.Array, sb: int, bc: int):
+    from repro.core import blocking     # lazy: keep kernels importable alone
+    n, m = b.shape
+    t, sb, n_pad = blocking.pad_system(t, sb)       # the ONE pad policy
+    b = blocking.pad_rhs(b, n_pad)
+    bc = min(bc, _LANE)          # lane-aligned column tile that we pad m to
+    m_pad = -(-m // bc) * bc
+    if m_pad != m:
+        b = jnp.pad(b, ((0, 0), (0, m_pad - m)))
+    return t, b, sb, bc, n, m
+
+
+def _trsm_auto(solve_fn, t: jax.Array, b: jax.Array, *, unit_diagonal: bool,
+               sb: int, bc: int, interpret: bool | None) -> jax.Array:
+    from repro.kernels.krylov_fused import _auto_interpret
+    squeeze = b.ndim == 1
+    b2 = b[:, None] if squeeze else b
+    t2, b2, sb, bc, n, m = _pad_triangular(t, b2, sb, bc)
+    x = solve_fn(t2, b2, unit_diagonal=unit_diagonal, sb=sb, bc=bc,
+                 interpret=_auto_interpret(interpret))
+    x = x[:n, :m]
+    return x[:, 0] if squeeze else x
+
+
+def trsm_lower_auto(l: jax.Array, b: jax.Array, *,
+                    unit_diagonal: bool = False, sb: int = 128, bc: int = 256,
+                    interpret: bool | None = None) -> jax.Array:
+    """``trsm_lower`` for arbitrary shapes (zero/identity pad is exact)."""
+    return _trsm_auto(trsm_lower, l, b, unit_diagonal=unit_diagonal,
+                      sb=sb, bc=bc, interpret=interpret)
+
+
+def trsm_upper_auto(u: jax.Array, b: jax.Array, *,
+                    unit_diagonal: bool = False, sb: int = 128, bc: int = 256,
+                    interpret: bool | None = None) -> jax.Array:
+    """``trsm_upper`` for arbitrary shapes.
+
+    Pads *before* the reversal, so after the flip the identity pad is the
+    *leading* block of the lower system: its zero RHS rows solve first to
+    exact zeros and never feed the real rows.
+    """
+    return _trsm_auto(trsm_upper, u, b, unit_diagonal=unit_diagonal,
+                      sb=sb, bc=bc, interpret=interpret)

@@ -142,3 +142,78 @@ def test_gemm_rejects_untiled():
     b = jnp.zeros((128, 128))
     with pytest.raises(ValueError):
         gemm.matmul(a, b, bm=64, bn=64, bk=64, interpret=True)
+
+
+@pytest.mark.parametrize("n,m,sb", [(128, 128, 32), (256, 64, 64)])
+def test_trsm_upper_sweep(n, m, sb):
+    k1, k2 = jax.random.split(jax.random.key(10))
+    u = jnp.triu(jax.random.normal(k1, (n, n), jnp.float32) * 0.1) \
+        + 2.0 * jnp.eye(n)
+    b = jax.random.normal(k2, (n, m), jnp.float32)
+    got = trsm.trsm_upper(u, b, sb=sb, bc=64, interpret=True)
+    want = jax.scipy.linalg.solve_triangular(u, b, lower=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("n,m", [(100, 1), (130, 7)])
+def test_trsm_auto_padding(n, m):
+    """Arbitrary (n, m) via the identity/zero pad wrappers (exact)."""
+    k1, k2 = jax.random.split(jax.random.key(11))
+    l = jnp.tril(jax.random.normal(k1, (n, n), jnp.float32) * 0.1) \
+        + 2.0 * jnp.eye(n)
+    b = jax.random.normal(k2, (n, m), jnp.float32)
+    b = b[:, 0] if m == 1 else b
+    got = trsm.trsm_lower_auto(l, b, sb=32)
+    want = jax.scipy.linalg.solve_triangular(l, b, lower=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-3, atol=1e-3)
+    got_u = trsm.trsm_upper_auto(l.T, b, sb=32)
+    want_u = jax.scipy.linalg.solve_triangular(l.T, b, lower=False)
+    np.testing.assert_allclose(np.asarray(got_u), np.asarray(want_u),
+                               rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("n,nb,k", [(128, 32, 0), (128, 32, 64),
+                                    (128, 32, 96), (256, 64, 64)])
+def test_lu_panel_update_kernel(n, nb, k):
+    """Fused TRSM + rank-nb GEMM step vs the straightforward oracle."""
+    from repro.kernels import factor_fused
+    rng = np.random.default_rng(12)
+    a = rng.standard_normal((n, n)).astype(np.float32)
+    l11 = np.tril(rng.standard_normal((nb, nb)), -1).astype(np.float32) \
+        + np.eye(nb, dtype=np.float32)
+    a[k:k + nb, k:k + nb] = l11 + np.triu(a[k:k + nb, k:k + nb])
+    linv = np.linalg.inv(l11).astype(np.float32)
+
+    want = a.copy()
+    u12 = linv @ a[k:k + nb, k + nb:]
+    want[k:k + nb, k + nb:] = u12
+    want[k + nb:, k + nb:] -= a[k + nb:, k:k + nb] @ u12
+
+    got = factor_fused.lu_panel_update(jnp.asarray(a), jnp.asarray(linv),
+                                       k, nb=nb, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-4,
+                               atol=1e-3)
+
+
+@pytest.mark.parametrize("n,nb,k", [(128, 32, 0), (128, 32, 64),
+                                    (128, 32, 96)])
+def test_cholesky_panel_update_kernel(n, nb, k):
+    from repro.kernels import factor_fused
+    rng = np.random.default_rng(13)
+    a = rng.standard_normal((n, n)).astype(np.float32)
+    a = (a @ a.T / n + 4 * np.eye(n)).astype(np.float32)
+    lkk = np.linalg.cholesky(a[k:k + nb, k:k + nb]).astype(np.float32)
+    a[k:k + nb, k:k + nb] = lkk
+    linv = np.linalg.inv(lkk).astype(np.float32)
+
+    want = a.copy()
+    l21 = a[k + nb:, k:k + nb] @ linv.T
+    want[k + nb:, k:k + nb] = l21
+    want[k + nb:, k + nb:] -= l21 @ l21.T
+
+    got = factor_fused.cholesky_panel_update(jnp.asarray(a),
+                                             jnp.asarray(linv), k, nb=nb,
+                                             interpret=True)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-4, atol=1e-3)
