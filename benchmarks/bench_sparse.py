@@ -1,0 +1,85 @@
+"""Sparse-path benchmark — the O(nnz)-vs-O(n²) payoff (paper's motivation
+for iterative methods) made measurable.
+
+Rows emitted:
+
+* ``spmv_*``     — BSR SpMV effective GB/s (jnp reference and Pallas
+  kernel) vs the dense matvec at the same n,
+* ``cg_sparse_*``— sparse CG wall time at matched n vs the dense CG on the
+  byte-identical Poisson operator (the acceptance row: sparse must win),
+* ``pipelined_ssor_*`` — iteration counts for pipelined CG with the
+  matrix-free block-SSOR vs plain (the Rupp-style fused sparse solve).
+
+Standalone:  PYTHONPATH=src python -m benchmarks.bench_sparse [--quick]
+(also runs as the ``sparse`` section of ``benchmarks.run``).
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.core import api
+from repro.kernels import spmv
+from repro.sparse import BSR, problems
+
+
+def run(grids=(48, 64), nb: int = 64, tol: float = 1e-6):
+    for nx in grids:
+        n = nx * nx
+        a = problems.poisson_2d(nx)
+        b = problems.smooth_rhs(n)
+        bsr = BSR.from_dense(a, block_size=min(nb, nx))
+        aj, bj = jnp.asarray(a), jnp.asarray(b)
+
+        # -- SpMV bandwidth (bytes: stored bricks + x + y, f32) ------------
+        sp_bytes = 4 * (bsr.nnz + 2 * n)
+        dn_bytes = 4 * (n * n + 2 * n)
+        t_dense = timeit(jax.jit(lambda A, v: A @ v), aj, bj)
+        t_ref = timeit(jax.jit(lambda m, v: m.matvec(v)), bsr, bj)
+        t_pal = timeit(jax.jit(lambda m, v: spmv.bsr_matvec(m, v)), bsr, bj)
+        emit("sparse", f"spmv_ref_n{n}", round(sp_bytes / t_ref / 1e9, 3),
+             "GB/s", f"dense_matvec={dn_bytes / t_dense / 1e9:.2f}GB/s")
+        emit("sparse", f"spmv_pallas_n{n}", round(sp_bytes / t_pal / 1e9, 3),
+             "GB/s", "interpret off-TPU")
+
+        # -- sparse vs dense CG wall time at matched n ---------------------
+        f_dense = jax.jit(lambda A, v: api.solve(
+            A, v, method="cg", tol=tol, maxiter=4000, return_info=True))
+        f_sparse = jax.jit(lambda m, v: api.solve(
+            m, v, method="cg", tol=tol, maxiter=4000, return_info=True))
+        td = timeit(f_dense, aj, bj)
+        ts = timeit(f_sparse, bsr, bj)
+        rd, rs = f_dense(aj, bj), f_sparse(bsr, bj)
+        emit("sparse", f"cg_dense_n{n}", round(td * 1e3, 2), "ms",
+             f"iters={int(rd.iterations)} nnz_frac=1.0")
+        emit("sparse", f"cg_sparse_n{n}", round(ts * 1e3, 2), "ms",
+             f"iters={int(rs.iterations)} "
+             f"nnz_frac={bsr.density:.3f} speedup={td / ts:.2f}x")
+
+        # -- pipelined CG + matrix-free SSOR (iteration win) ---------------
+        plain = api.solve(bsr, bj, method="pipelined_cg", tol=tol,
+                          maxiter=4000, return_info=True)
+        ssor = api.solve(bsr, bj, method="pipelined_cg", tol=tol,
+                         maxiter=4000, precond="ssor", return_info=True)
+        emit("sparse", f"pipelined_ssor_n{n}", int(ssor.iterations),
+             "iters", f"plain={int(plain.iterations)} "
+             f"converged={bool(ssor.converged)}")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small grid for CI smoke (fast, CPU-friendly)")
+    args = ap.parse_args(argv)
+    if args.quick:
+        run(grids=(32,), nb=32)
+    else:
+        run()
+
+
+if __name__ == "__main__":
+    main()

@@ -5,6 +5,7 @@
 Sections:
   solvers      — §4 direct-vs-iterative method table (wall + residual)
   direct       — factor GFLOP/s vs jax.scipy + unrolled-vs-fori compile time
+  sparse       — BSR SpMV GB/s + sparse-vs-dense CG wall time at matched n
   scaling      — Figs. 3/4: speedup vs node count (modeled v5e + emulated)
   local_accel  — §4 CUDA↔ATLAS ablation (Pallas↔jnp correctness + model)
   train        — LM-stack step throughput + modeled full-scale cells
@@ -27,7 +28,7 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     from benchmarks import (bench_direct, bench_local_accel, bench_scaling,
-                            bench_solvers, bench_train)
+                            bench_solvers, bench_sparse, bench_train)
     from benchmarks.common import ROWS
 
     failures = []
@@ -47,6 +48,9 @@ def main(argv=None):
             sizes=(256,) if args.quick else (512, 1024),
             compile_sizes=(256, 512) if args.quick else (256, 512, 1024),
             nb=64 if args.quick else 128)
+    section("sparse", bench_sparse.run,
+            grids=(32,) if args.quick else (48, 64),
+            nb=32 if args.quick else 64)
     section("local_accel", bench_local_accel.run)
     section("train", bench_train.run)
     if not args.quick:

@@ -16,9 +16,13 @@ every engine:
   explicit collectives (MPI-faithful; all iterative methods, preconditioned),
 * batched             — pass ``a`` of shape (B, n, n) and ``b`` (B, n);
   direct methods vmap their fixed-shape fori_loop factorizations,
+* sparse              — pass a :class:`repro.sparse.BSR` / ``ELL`` matrix;
+  every iterative method runs unchanged (matrix-free preconditioners
+  included), distributed solves shard block rows through ``engine="spmd"``,
 * ``backend="pallas"``— fused Pallas update kernels in the iterative hot
-  loop, and Pallas GEMM/TRSM/fused-panel kernels in the direct
-  factorizations (both interpret-mode off-TPU).
+  loop, the scalar-prefetch SpMV kernel for BSR systems, and Pallas
+  GEMM/TRSM/fused-panel kernels in the direct factorizations (all
+  interpret-mode off-TPU).
 
 Direct methods are registered with a factor/solve split
 (``factor=``/``apply=``), which is what :func:`factorize` dispatches on.
@@ -126,14 +130,19 @@ def solve(a: jax.Array, b: jax.Array, *, method: str = "lu",
     if engine not in ENGINES:
         raise ValueError(f"unknown engine {engine!r}; expected {ENGINES}")
     _blocking.check_backend(backend, mesh)
+    sparse = getattr(a, "is_sparse", False)
 
-    if mesh is not None:
+    if mesh is not None and not sparse:
         if a.ndim == 3:
             raise ValueError("batched solves are single-device (mesh=None)")
         a = dist.shard_matrix(a, mesh)
         b = dist.shard_vector(b, mesh)
 
     if entry.kind == "direct":
+        if sparse:
+            raise ValueError(f"direct method {method!r} is dense-only; "
+                             "sparse systems use the iterative methods "
+                             "(or densify explicitly with a.to_dense())")
         if engine == "spmd":
             raise ValueError("direct methods are factorizations on the "
                              "gspmd engine; engine='spmd' is iterative-only")
@@ -182,14 +191,22 @@ def solve(a: jax.Array, b: jax.Array, *, method: str = "lu",
         if missing:
             raise ValueError(f"method {method!r} needs {sorted(missing)} "
                              "which the spmd engine lacks")
-        result = _operator.spmd_solve(entry.fn, a, b, mesh, tol=tol,
-                                      maxiter=maxiter, precond=pc, **extra)
+        if sparse:
+            from repro.sparse import operator as _sparse_operator
+            result = _sparse_operator.spmd_solve(
+                entry.fn, a, b, mesh, tol=tol, maxiter=maxiter, precond=pc,
+                **extra)
+        else:
+            result = _operator.spmd_solve(entry.fn, a, b, mesh, tol=tol,
+                                          maxiter=maxiter, precond=pc,
+                                          **extra)
     else:
         op = _operator.make_operator(a, mesh=mesh, backend=backend)
         if "matvec_t" in entry.requires and not op.has_transpose:
             raise ValueError(f"method {method!r} needs Aᵀx on this engine")
         if "gram" in entry.requires and not op.supports_gram:
             raise ValueError(f"method {method!r} does not support batching")
+        op.prepare(entry.requires)
         result = entry.fn(op, b, tol=tol, maxiter=maxiter,
                           precond=pc.apply if pc is not None else None,
                           **extra)
@@ -204,6 +221,9 @@ def factorize(a: jax.Array, *, method: str = "lu", mesh=None,
     works; the returned callable maps ``b -> x``.  Batched ``a`` of shape
     (B, n, n) returns a solver over (B, n[, k]) right-hand sides.
     """
+    if getattr(a, "is_sparse", False):
+        raise ValueError("factorize is dense-only; sparse systems use the "
+                         "iterative methods (or densify with a.to_dense())")
     entry = get_method(method)
     with_split = tuple(sorted(n for n, e in _REGISTRY.items()
                               if e.kind == "direct" and e.factor is not None))

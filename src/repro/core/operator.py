@@ -50,6 +50,11 @@ class LinearOperator:
     supports_gram = True      # dotm (GMRES basis Gram products)
     batched = False
 
+    def prepare(self, requires: tuple = ()) -> None:
+        """Hook called by ``api.solve`` with the method's declared
+        capability needs — lets an engine build optional state (e.g. a
+        transposed sparse structure) once, outside the solver loop."""
+
     # -- communication-bearing primitives ---------------------------------
     def matvec(self, v: jax.Array) -> jax.Array:
         raise NotImplementedError
@@ -215,6 +220,49 @@ class SpmdLocalOperator(LinearOperator):
         return pblas.dotm_local(m, w, self.row)
 
 
+def spmd_named_precond(precond, *, rows: int | None = None,
+                       mesh_rows: int | None = None) -> tuple[str, tuple]:
+    """Shared ``engine='spmd'`` preconditioner validation → (kind, data).
+    Only named preconditioners carry state that can cross a shard_map.
+    ``rows``/``mesh_rows`` additionally validate that block_jacobi factors
+    tile the engine's sharded row space (k·nb == rows, k % mesh_rows == 0)
+    — misaligned factors would silently precondition wrong per shard."""
+    if precond is not None and (
+            not isinstance(precond, precond_mod.Preconditioner)
+            or precond.kind == "custom"):
+        raise ValueError("engine='spmd' needs a named preconditioner "
+                         "('jacobi'/'block_jacobi'), not a custom callable "
+                         "— callables cannot cross the shard_map boundary")
+    if precond is None:
+        return "identity", ()
+    if precond.kind == "block_jacobi":
+        k, nb = precond.data[1].shape
+        if rows is not None and k * nb != rows:
+            raise ValueError(
+                f"block_jacobi factors cover {k * nb} rows but the spmd "
+                f"engine shards {rows} rows — they cannot align; choose a "
+                "block size that tiles the sharded row space")
+        if mesh_rows is not None and k % mesh_rows:
+            raise ValueError(
+                f"block_jacobi has {k} blocks, not divisible by the "
+                f"{mesh_rows}-way mesh row axis — choose a block size so "
+                "that the block count divides the mesh rows")
+    return precond.kind, precond.data
+
+
+def spmd_run(body, mesh, row: str, in_specs: tuple, *operands):
+    """shard_map wrapper shared by the dense and sparse spmd engines.
+
+    while_loop has no replication rule on this JAX — disable the check;
+    out_specs pin the (documented) replication of the scalar outputs.
+    Returns the body's 4-tuple as a :class:`SolveResult`.
+    """
+    f = shard_map(body, mesh=mesh, in_specs=in_specs,
+                  out_specs=(P(row), P(), P(), P()), check_rep=False)
+    from repro.core.krylov import SolveResult
+    return SolveResult(*f(*operands))
+
+
 def spmd_solve(method: Callable, a: jax.Array, b: jax.Array, mesh, *,
                tol: float = 1e-6, maxiter: int = 1000,
                precond: "precond_mod.Preconditioner | None" = None,
@@ -227,21 +275,9 @@ def spmd_solve(method: Callable, a: jax.Array, b: jax.Array, mesh, *,
     operands (see :func:`repro.core.precond.make`); custom callables cannot
     cross the shard_map boundary and are rejected.
     """
-    if precond is not None and (
-            not isinstance(precond, precond_mod.Preconditioner)
-            or precond.kind == "custom"):
-        raise ValueError("engine='spmd' needs a named preconditioner "
-                         "('jacobi'/'block_jacobi'), not a custom callable "
-                         "— callables cannot cross the shard_map boundary")
     row, col = dist.solver_axes(mesh)
     p, q = mesh.shape[row], mesh.shape[col]
-    pkind = precond.kind if precond is not None else "identity"
-    pdata = precond.data if precond is not None else ()
-    if pkind == "block_jacobi" and pdata[0].shape[0] % p:
-        raise ValueError(
-            f"block_jacobi has {pdata[0].shape[0]} blocks, not divisible "
-            f"by the {p}-way mesh row axis — choose a block_size so that "
-            "(n / block_size) % mesh_rows == 0")
+    pkind, pdata = spmd_named_precond(precond, rows=a.shape[0], mesh_rows=p)
     pspecs = precond_mod.data_specs(pkind, row)
 
     def body(a_loc, b_loc, *pdata_loc):
@@ -251,14 +287,8 @@ def spmd_solve(method: Callable, a: jax.Array, b: jax.Array, mesh, *,
                      **extra)
         return tuple(res)
 
-    # while_loop has no replication rule on this JAX — disable the check;
-    # out_specs pin the (documented) replication of the scalar outputs.
-    f = shard_map(body, mesh=mesh,
-                  in_specs=(P(row, col), P(row)) + pspecs,
-                  out_specs=(P(row), P(), P(), P()),
-                  check_rep=False)
-    from repro.core.krylov import SolveResult
-    return SolveResult(*f(a, b, *pdata))
+    return spmd_run(body, mesh, row, (P(row, col), P(row)) + pspecs,
+                    a, b, *pdata)
 
 
 # --------------------------------------------------------------------------
@@ -301,8 +331,16 @@ class BatchedOperator(LinearOperator):
 
 def make_operator(a: jax.Array, *, mesh=None,
                   backend: str = "ref") -> LinearOperator:
-    """Pick the engine from the data: batched (B,n,n) → BatchedOperator,
-    mesh given → GspmdOperator, else DenseOperator(backend)."""
+    """Pick the engine from the data: sparse → SparseOperator, batched
+    (B,n,n) → BatchedOperator, mesh given → GspmdOperator, else
+    DenseOperator(backend)."""
+    if getattr(a, "is_sparse", False):
+        if mesh is not None:
+            raise ValueError("distributed sparse solves are block-row SPMD "
+                             "— use engine='spmd' (repro.sparse.operator"
+                             ".spmd_solve), not a gspmd operator")
+        from repro.sparse.operator import SparseOperator
+        return SparseOperator(a, backend=backend)
     if a.ndim == 3:
         if backend == "pallas":
             raise ValueError("backend='pallas' is dense-only (2-D A)")

@@ -1,4 +1,6 @@
-"""Preconditioners for the Krylov solvers (Jacobi / block-Jacobi).
+"""Preconditioners for the Krylov solvers (Jacobi / block-Jacobi; sparse
+matrices delegate to the matrix-free extractions in
+:mod:`repro.sparse.precond`, which add block-SSOR).
 
 Block-Jacobi is the natural distributed preconditioner for the paper's
 layout: each process-grid row owns a diagonal block of A, factorizes it
@@ -22,6 +24,8 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 from jax.scipy.linalg import lu_factor as jsp_lu_factor, lu_solve as jsp_lu_solve
 
+from repro.core import blocking
+
 _EPS = 1e-30
 
 
@@ -38,34 +42,64 @@ def _jacobi_data(a: jax.Array, eps: float = _EPS) -> tuple[jax.Array]:
 
 
 def _block_jacobi_data(a: jax.Array, block_size: int):
-    if a.ndim != 2:
-        raise ValueError("block_jacobi supports 2-D systems only")
-    n = a.shape[0]
-    nb = min(block_size, n)
-    if n % nb:
-        raise ValueError(f"n={n} must be divisible by block_size={nb}")
-    k = n // nb
-    blocks = a.reshape(k, nb, k, nb)
-    diag_blocks = jnp.stack([blocks[i, :, i, :] for i in range(k)])  # (k, nb, nb)
-    lu, piv = jax.vmap(jsp_lu_factor)(diag_blocks)
-    return lu, piv
+    """LU-factored diagonal blocks of a 2-D (n, n) or batched (B, n, n)
+    system.  Non-block-multiple n goes through the shared identity-pad
+    policy of :mod:`repro.core.blocking` (pad blocks factor to exact unit
+    pivots); extraction is one reshape + ``jnp.diagonal`` gather, O(1)
+    trace size in the block count."""
+    if a.ndim not in (2, 3):
+        raise ValueError(f"block_jacobi wants (n, n) or (B, n, n), "
+                         f"got {a.shape}")
+    n = a.shape[-1]
+    if a.shape[-2] != n:
+        raise ValueError(f"expected square system(s), got {a.shape}")
+    nb = blocking.choose_block(n, block_size)
+    n_pad = blocking.padded_size(n, nb)
+    k = n_pad // nb
+
+    def extract(m):
+        m, _, _ = blocking.pad_system(m, block_size)
+        d = jnp.diagonal(m.reshape(k, nb, k, nb), axis1=0, axis2=2)
+        return jnp.moveaxis(d, -1, 0)               # (k, nb, nb)
+
+    if a.ndim == 2:
+        return jax.vmap(jsp_lu_factor)(extract(a))
+    return jax.vmap(lambda m: jax.vmap(jsp_lu_factor)(extract(m)))(a)
 
 
 def _apply_jacobi(dinv):
     return lambda v: dinv * v
 
 
+def _solve_blocks(lu, piv, vb):
+    return jax.vmap(lambda l, p, rhs: jsp_lu_solve((l, p), rhs))(lu, piv, vb)
+
+
 def _apply_block_jacobi(lu, piv):
+    """M⁻¹ v for (k, nb, …) factors and (n,) v, or batched (B, k, nb, …)
+    factors and (B, n) v.  A factor built on the identity-padded system
+    accepts the logical-length v (zero-pad in, slice out — exact)."""
     def apply(v):
-        k, nb = piv.shape
-        vb = v.reshape(k, nb)
-        out = jax.vmap(lambda l, p, rhs: jsp_lu_solve((l, p), rhs))(lu, piv, vb)
-        return out.reshape(v.shape)
+        k, nb = piv.shape[-2], piv.shape[-1]
+        n = v.shape[-1]
+        pad = k * nb - n
+        vp = jnp.pad(v, ((0, 0),) * (v.ndim - 1) + ((0, pad),))
+        vb = vp.reshape(vp.shape[:-1] + (k, nb))
+        if piv.ndim == 3:                            # batched factors
+            out = jax.vmap(_solve_blocks)(lu, piv, vb)
+        else:
+            out = _solve_blocks(lu, piv, vb)
+        return out.reshape(vp.shape)[..., :n]
     return apply
 
 
 def make(spec, a: jax.Array, block_size: int = 128) -> Preconditioner | None:
-    """Build a Preconditioner from a user spec (None / name / callable)."""
+    """Build a Preconditioner from a user spec (None / name / callable).
+    Sparse matrices delegate to the matrix-free extractions of
+    :mod:`repro.sparse.precond` (same kinds + ``"ssor"``, no densify)."""
+    if getattr(a, "is_sparse", False):
+        from repro.sparse import precond as sparse_precond
+        return sparse_precond.make(spec, a, block_size)
     if spec is None:
         return None
     if isinstance(spec, Preconditioner):

@@ -6,6 +6,8 @@
   one launch, masked for fori_loop block stepping)
 * ``attention``    — flash attention fwd (GQA, causal, sliding window)
 * ``krylov_fused`` — fused CG/BiCGSTAB vector update + reduction
+* ``spmv``         — BSR SpMV/SpMM (scalar-prefetch brick gather +
+  block-GEMM accumulate in one launch)
 
 ``ops`` is the jit'd dispatch layer (TPU native / CPU interpret / jnp
 fallback); ``ref`` holds the pure-jnp oracles the tests sweep against.

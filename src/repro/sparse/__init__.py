@@ -1,0 +1,10 @@
+"""Sparse linear-algebra subsystem: formats (BSR / ELL), stencil problem
+generators, the sparse LinearOperator engines, and matrix-free
+preconditioners.  Plugs into the unified solver stack — ``api.solve`` on a
+:class:`BSR`/:class:`ELL` matrix runs every registered Krylov method on
+every engine (ref / pallas / block-row SPMD) unchanged."""
+from repro.sparse.formats import BSR, ELL, SparseMatrix  # noqa: F401
+from repro.sparse import problems  # noqa: F401
+from repro.sparse.operator import (  # noqa: F401
+    SparseOperator, SparseSpmdLocalOperator, spmd_solve)
+from repro.sparse import precond  # noqa: F401

@@ -1,0 +1,385 @@
+"""Sparse matrix containers: BSR (block-CSR) and ELL (padded) formats.
+
+The paper's iterative solvers exist because the systems that matter are
+*sparse* — dense O(n²) storage and matvecs are exactly what CG/BiCGSTAB are
+meant to avoid.  This module provides the two storage formats the sparse
+engine is built on:
+
+* :class:`BSR`  — block compressed sparse row.  Nonzeros are stored as
+  dense ``nb × nb`` bricks, so every kernel-level operation is a small
+  dense GEMM — the TPU/Pallas-friendly layout (bricks feed the MXU; the
+  lane dimension is the brick's trailing axis).  The *structure*
+  (``indptr`` / ``indices``) is static NumPy — only the brick values are
+  traced — so a BSR crosses ``jit`` boundaries as a pytree with one array
+  leaf and re-compiles only when the sparsity pattern changes.
+* :class:`ELL` — ELLPACK: every row padded to the same number of scalar
+  nonzeros.  The vectorization-friendly scalar format (one gather + one
+  reduction, no indirection depth); kept as the reference point the GPU
+  sparse literature benchmarks against.
+
+Sizes that do not divide the brick size are identity/zero padded with the
+same exact policy as the dense direct path (:mod:`repro.core.blocking`):
+the padded operator is ``[[A, 0], [0, I]]``, pads contribute zeros to every
+product and are sliced away, so ``from_dense``/``to_dense`` round-trip the
+logical ``n``.
+
+Construction requires *concrete* matrices (the sparsity pattern must be
+known at trace time); ``matvec``/``matvec_t``/``to_dense`` are traceable.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import blocking
+
+
+class SparseMatrix:
+    """Marker base: ``getattr(a, "is_sparse", False)`` is the dispatch test
+    used by :mod:`repro.core.api` / ``make_operator`` / ``precond.make``."""
+
+    is_sparse = True
+    ndim = 2
+
+    @property
+    def dtype(self):
+        return self.data.dtype
+
+    def matvec(self, x):
+        raise NotImplementedError
+
+    def matvec_t(self, x):
+        raise NotImplementedError
+
+    def __matmul__(self, x):
+        return self.matvec(x)
+
+
+class _Static:
+    """Immutable, cheaply-hashable wrapper for structure arrays stored in
+    pytree aux (jit cache keys).  The hash is computed ONCE at
+    construction and equality short-circuits on identity, so a jitted call
+    pays O(1) per flatten instead of re-tupling O(nnz) structure."""
+
+    __slots__ = ("arr", "_hash")
+
+    def __init__(self, arr: np.ndarray):
+        arr = np.array(arr)        # own copy — never freeze a caller's array
+        arr.setflags(write=False)
+        self.arr = arr
+        self._hash = hash((arr.shape, arr.dtype.str, arr.tobytes()))
+
+    def __hash__(self):
+        return self._hash
+
+    def __eq__(self, other):
+        return self is other or (
+            isinstance(other, _Static)
+            and self._hash == other._hash
+            and self.arr.shape == other.arr.shape
+            and bool(np.array_equal(self.arr, other.arr)))
+
+
+def _as_concrete(a) -> np.ndarray:
+    if isinstance(a, jax.core.Tracer):
+        raise TypeError("from_dense needs a concrete matrix — the sparsity "
+                        "pattern is static structure and cannot be traced")
+    a = np.asarray(a)
+    if a.ndim != 2 or a.shape[0] != a.shape[1]:
+        raise ValueError(f"expected a square (n, n) matrix, got {a.shape}")
+    if not np.issubdtype(a.dtype, np.floating):
+        raise ValueError(f"expected a floating dtype, got {a.dtype}")
+    return a
+
+
+@jax.tree_util.register_pytree_node_class
+class BSR(SparseMatrix):
+    """Block-CSR: ``data[e]`` is the ``nb × nb`` brick at block-row
+    ``row_ids[e]``, block-col ``indices[e]``; block-row r owns entries
+    ``indptr[r]:indptr[r+1]``.  Structure is static NumPy, values are JAX.
+    """
+
+    def __init__(self, data, indices, indptr, shape, nb):
+        self.data = jnp.asarray(data)
+        self.indices = np.asarray(indices, np.int32)
+        self.indptr = np.asarray(indptr, np.int32)
+        self.shape = tuple(shape)
+        self.nb = int(nb)
+        n = self.shape[0]
+        self.n_pad = blocking.padded_size(n, self.nb)
+        self.nbr = self.n_pad // self.nb
+        if self.data.shape[1:] != (self.nb, self.nb):
+            raise ValueError(f"bricks must be ({nb}, {nb}), got "
+                             f"{self.data.shape[1:]}")
+        if len(self.indptr) != self.nbr + 1 or self.indptr[0] != 0 \
+                or self.indptr[-1] != self.data.shape[0]:
+            raise ValueError("indptr inconsistent with data/nbr")
+        if np.any(np.diff(self.indptr) < 0):
+            raise ValueError("indptr must be non-decreasing")
+        if self.indices.size and (self.indices.min() < 0
+                                  or self.indices.max() >= self.nbr):
+            raise ValueError("block-column indices out of range")
+        # static per-entry block-row ids (segment ids of the reductions)
+        self.row_ids = np.repeat(np.arange(self.nbr, dtype=np.int32),
+                                 np.diff(self.indptr))
+        self._layout = None   # lazy padded (blocked-ELL) view for kernels
+        self._aux = (self.shape, self.nb, _Static(self.indices),
+                     _Static(self.indptr))
+        # the instance arrays ARE the frozen aux copies (kept in sync)
+        self.indices = self._aux[2].arr
+        self.indptr = self._aux[3].arr
+
+    # -- pytree: brick values are the only leaf; structure is prehashed aux
+    def tree_flatten(self):
+        return (self.data,), self._aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        shape, nb, indices, indptr = aux
+        obj = cls.__new__(cls)
+        obj.data = children[0]
+        obj.indices = indices.arr
+        obj.indptr = indptr.arr
+        obj.shape = shape
+        obj.nb = nb
+        obj.n_pad = blocking.padded_size(shape[0], nb)
+        obj.nbr = obj.n_pad // nb
+        obj.row_ids = np.repeat(np.arange(obj.nbr, dtype=np.int32),
+                                np.diff(obj.indptr))
+        obj._layout = None
+        obj._aux = aux
+        return obj
+
+    # -- construction ------------------------------------------------------
+    @classmethod
+    def from_dense(cls, a, block_size: int = 32) -> "BSR":
+        """Convert a concrete dense matrix; bricks that are entirely zero
+        are dropped (diagonal bricks are always kept so the preconditioner
+        extractions are well defined).  ``n % nb`` is handled by the shared
+        identity-pad policy of :mod:`repro.core.blocking`."""
+        a = _as_concrete(a)
+        n = a.shape[0]
+        nb = blocking.choose_block(n, block_size)
+        n_pad = blocking.padded_size(n, nb)
+        if n_pad != n:            # [[A, 0], [0, I]] — blocking.pad_system
+            ap = np.zeros((n_pad, n_pad), a.dtype)
+            ap[:n, :n] = a
+            ap[range(n, n_pad), range(n, n_pad)] = 1
+            a = ap
+        k = n_pad // nb
+        bricks = a.reshape(k, nb, k, nb).transpose(0, 2, 1, 3)
+        mask = np.abs(bricks).max(axis=(2, 3)) > 0
+        mask[np.arange(k), np.arange(k)] = True        # keep diagonal
+        rows, cols = np.nonzero(mask)                  # row-major order
+        indptr = np.zeros(k + 1, np.int64)
+        np.add.at(indptr, rows + 1, 1)
+        indptr = np.cumsum(indptr)
+        return cls(jnp.asarray(bricks[mask]), cols, indptr, (n, n), nb)
+
+    def to_dense(self) -> jax.Array:
+        k = self.nbr
+        full = jnp.zeros((k, k, self.nb, self.nb), self.data.dtype)
+        full = full.at[self.row_ids, self.indices].set(self.data)
+        dense = full.transpose(0, 2, 1, 3).reshape(self.n_pad, self.n_pad)
+        return dense[:self.shape[0], :self.shape[1]]
+
+    # -- algebra (jnp reference; the oracle the Pallas kernel sweeps
+    #    against) ----------------------------------------------------------
+    def _blocks(self, x):
+        """Zero-pad a global (n,) / (n, k) operand into (nbr, nb, k)."""
+        xk = x[:, None] if x.ndim == 1 else x
+        xp = jnp.pad(xk, ((0, self.n_pad - xk.shape[0]), (0, 0)))
+        return xp.reshape(self.nbr, self.nb, xk.shape[1])
+
+    def _unblocks(self, yb, x):
+        y = yb.reshape(self.n_pad, -1)[:self.shape[0]]
+        return y[:, 0] if x.ndim == 1 else y
+
+    def matvec(self, x) -> jax.Array:
+        """y = A x for x of shape (n,) or (n, k) — one gather, one brick
+        batched GEMM, one segment reduction (O(nnz))."""
+        xb = self._blocks(x)
+        contrib = jnp.einsum("eij,ejk->eik", self.data, xb[self.indices])
+        yb = jax.ops.segment_sum(contrib, self.row_ids,
+                                 num_segments=self.nbr)
+        return self._unblocks(yb, x)
+
+    def matvec_t(self, x) -> jax.Array:
+        """y = Aᵀ x — dual gather/scatter pattern."""
+        xb = self._blocks(x)
+        contrib = jnp.einsum("eij,eik->ejk", self.data, xb[self.row_ids])
+        yb = jax.ops.segment_sum(contrib, self.indices,
+                                 num_segments=self.nbr)
+        return self._unblocks(yb, x)
+
+    def transpose(self) -> "BSR":
+        """Aᵀ with the same (static) machinery: permute bricks into
+        col-major-becomes-row-major order and transpose each brick."""
+        perm = np.lexsort((self.row_ids, self.indices))
+        indices_t = self.row_ids[perm]
+        indptr_t = np.zeros(self.nbr + 1, np.int64)
+        np.add.at(indptr_t, self.indices + 1, 1)
+        indptr_t = np.cumsum(indptr_t)
+        return BSR(self.data[perm].transpose(0, 2, 1), indices_t, indptr_t,
+                   self.shape, self.nb)
+
+    @property
+    def T(self) -> "BSR":
+        return self.transpose()
+
+    # -- structure views ---------------------------------------------------
+    def block_diagonal(self) -> jax.Array:
+        """The (nbr, nb, nb) diagonal bricks (zero brick where absent) —
+        the matrix-free source for Jacobi / block-Jacobi / SSOR."""
+        diag_map = np.zeros(self.nbr, np.int32)
+        present = np.zeros(self.nbr, bool)
+        for r in range(self.nbr):
+            lo, hi = self.indptr[r], self.indptr[r + 1]
+            hit = np.nonzero(self.indices[lo:hi] == r)[0]
+            if hit.size:
+                diag_map[r], present[r] = lo + hit[0], True
+        bricks = self.data[diag_map]
+        return jnp.where(jnp.asarray(present)[:, None, None], bricks, 0)
+
+    def diagonal(self) -> jax.Array:
+        """The point diagonal of the logical (n, n) matrix."""
+        d = jnp.diagonal(self.block_diagonal(), axis1=-2, axis2=-1)
+        return d.reshape(self.n_pad)[:self.shape[0]]
+
+    def ell_layout(self):
+        """Padded blocked-ELL view for fixed-grid kernels / SPMD sharding:
+        static ``(brick_map, col_map, valid)`` of shape (nbr, max_blk) —
+        pad slots point at brick 0 / col 0 with valid 0 (contribute 0)."""
+        if self._layout is None:
+            counts = np.diff(self.indptr)
+            max_blk = max(int(counts.max()) if counts.size else 0, 1)
+            brick_map = np.zeros((self.nbr, max_blk), np.int32)
+            col_map = np.zeros((self.nbr, max_blk), np.int32)
+            valid = np.zeros((self.nbr, max_blk), np.int32)
+            for r in range(self.nbr):
+                lo, hi = self.indptr[r], self.indptr[r + 1]
+                brick_map[r, :hi - lo] = np.arange(lo, hi)
+                col_map[r, :hi - lo] = self.indices[lo:hi]
+                valid[r, :hi - lo] = 1
+            self._layout = (brick_map, col_map, valid)
+        return self._layout
+
+    def padded_data(self) -> jax.Array:
+        """Bricks gathered into the (nbr, max_blk, nb, nb) blocked-ELL
+        layout, pad slots zeroed — the block-row-shardable value array."""
+        brick_map, _, valid = self.ell_layout()
+        return self.data[brick_map] * jnp.asarray(
+            valid, self.data.dtype)[:, :, None, None]
+
+    # -- stats -------------------------------------------------------------
+    @property
+    def nnz(self) -> int:
+        """Stored entries (brick granularity): nnzb · nb²."""
+        return int(self.data.shape[0]) * self.nb * self.nb
+
+    @property
+    def density(self) -> float:
+        return self.nnz / (self.shape[0] * self.shape[1])
+
+    def __repr__(self):
+        return (f"BSR(shape={self.shape}, nb={self.nb}, "
+                f"nnzb={self.data.shape[0]}, dtype={self.data.dtype})")
+
+
+@jax.tree_util.register_pytree_node_class
+class ELL(SparseMatrix):
+    """ELLPACK: every row padded to ``max_nnz`` scalar entries.  ``cols`` /
+    ``valid`` are static NumPy; pad slots carry value 0 at col 0."""
+
+    def __init__(self, data, cols, valid, shape):
+        self.data = jnp.asarray(data)
+        self.cols = np.asarray(cols, np.int32)
+        self.valid = np.asarray(valid, bool)
+        self.shape = tuple(shape)
+        n = self.shape[0]
+        if self.data.shape != self.cols.shape or \
+                self.valid.shape != self.cols.shape:
+            raise ValueError("data / cols / valid shapes must match")
+        if self.data.shape[0] != n:
+            raise ValueError(f"expected {n} rows, got {self.data.shape[0]}")
+        if self.cols.size and (self.cols.min() < 0
+                               or self.cols.max() >= self.shape[1]):
+            raise ValueError("column indices out of range")
+        self._row_ids = np.repeat(np.arange(n, dtype=np.int32),
+                                  self.cols.shape[1])
+        self._aux = (self.shape, _Static(self.cols), _Static(self.valid))
+        self.cols = self._aux[1].arr
+        self.valid = self._aux[2].arr
+
+    def tree_flatten(self):
+        return (self.data,), self._aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        shape, cols, valid = aux
+        obj = cls.__new__(cls)
+        obj.data = children[0]
+        obj.cols = cols.arr
+        obj.valid = valid.arr
+        obj.shape = shape
+        obj._row_ids = np.repeat(np.arange(shape[0], dtype=np.int32),
+                                 obj.cols.shape[1])
+        obj._aux = aux
+        return obj
+
+    @classmethod
+    def from_dense(cls, a, max_nnz: int | None = None) -> "ELL":
+        a = _as_concrete(a)
+        n = a.shape[0]
+        nz = a != 0
+        counts = nz.sum(axis=1)
+        width = max(int(counts.max()) if n else 0, 1)
+        if max_nnz is not None:
+            if max_nnz < width:
+                raise ValueError(f"max_nnz={max_nnz} < densest row ({width})")
+            width = max_nnz
+        cols = np.zeros((n, width), np.int32)
+        valid = np.zeros((n, width), bool)
+        data = np.zeros((n, width), a.dtype)
+        for r in range(n):
+            c = np.nonzero(nz[r])[0]
+            cols[r, :c.size] = c
+            valid[r, :c.size] = True
+            data[r, :c.size] = a[r, c]
+        return cls(jnp.asarray(data), cols, valid, a.shape)
+
+    def to_dense(self) -> jax.Array:
+        vals = (self.data * jnp.asarray(self.valid, self.data.dtype)).ravel()
+        dense = jnp.zeros(self.shape, self.data.dtype)
+        return dense.at[self._row_ids, self.cols.ravel()].add(vals)
+
+    def matvec(self, x) -> jax.Array:
+        vals = self.data * jnp.asarray(self.valid, self.data.dtype)
+        if x.ndim == 1:
+            return (vals * x[self.cols]).sum(axis=1)
+        return jnp.einsum("rm,rmk->rk", vals, x[self.cols])
+
+    def matvec_t(self, x) -> jax.Array:
+        vals = self.data * jnp.asarray(self.valid, self.data.dtype)
+        if x.ndim == 1:
+            contrib = (vals * x[:, None]).ravel()
+            return jax.ops.segment_sum(contrib, self.cols.ravel(),
+                                       num_segments=self.shape[1])
+        contrib = (vals[:, :, None] * x[:, None, :]) \
+            .reshape(-1, x.shape[1])
+        return jax.ops.segment_sum(contrib, self.cols.ravel(),
+                                   num_segments=self.shape[1])
+
+    @property
+    def nnz(self) -> int:
+        return int(self.valid.sum())
+
+    @property
+    def density(self) -> float:
+        return self.nnz / (self.shape[0] * self.shape[1])
+
+    def __repr__(self):
+        return (f"ELL(shape={self.shape}, width={self.cols.shape[1]}, "
+                f"nnz={self.nnz}, dtype={self.data.dtype})")

@@ -1,0 +1,86 @@
+"""Stencil / structured problem generators — realistic sparse systems for
+tests and benchmarks.
+
+These are the workloads the paper's iterative solvers were built for: the
+2-D/3-D Poisson operators are the canonical SPD model problems of the
+GPU-cluster sparse-solver literature (Cheik Ahamed & Magoulès 2108.13162
+benchmark exactly these; Rupp et al. 1410.4054 fuse their CG around them).
+
+Every generator returns a *concrete* NumPy matrix (sparsity structure must
+be static — see :mod:`repro.sparse.formats`); convert with
+``BSR.from_dense`` / ``ELL.from_dense``.  Dense return keeps the
+sparse-vs-dense comparisons honest: both solves see byte-identical
+operators.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def _tridiag(n: int, dtype) -> np.ndarray:
+    """The 1-D Dirichlet Laplacian tridiag(-1, 2, -1)."""
+    t = 2.0 * np.eye(n, dtype=dtype)
+    off = -np.eye(n, k=1, dtype=dtype)
+    return t + off + off.T
+
+
+def poisson_2d(nx: int, ny: int | None = None,
+               dtype=np.float32) -> np.ndarray:
+    """5-point finite-difference Laplacian on an ``nx × ny`` grid
+    (Dirichlet): ``A = I ⊗ T + T ⊗ I``, SPD, n = nx·ny, ≤ 5 nnz/row."""
+    ny = nx if ny is None else ny
+    tx, ty = _tridiag(nx, dtype), _tridiag(ny, dtype)
+    a = np.kron(np.eye(ny, dtype=dtype), tx) \
+        + np.kron(ty, np.eye(nx, dtype=dtype))
+    return a.astype(dtype)
+
+
+def poisson_3d(nx: int, ny: int | None = None, nz: int | None = None,
+               dtype=np.float32) -> np.ndarray:
+    """7-point Laplacian on an ``nx × ny × nz`` grid, n = nx·ny·nz."""
+    ny = nx if ny is None else ny
+    nz = nx if nz is None else nz
+    ix, iy, iz = (np.eye(m, dtype=dtype) for m in (nx, ny, nz))
+    a = np.kron(np.kron(iz, iy), _tridiag(nx, dtype)) \
+        + np.kron(np.kron(iz, _tridiag(ny, dtype)), ix) \
+        + np.kron(np.kron(_tridiag(nz, dtype), iy), ix)
+    return a.astype(dtype)
+
+
+def banded(n: int, bandwidth: int = 8, dtype=np.float32,
+           seed: int = 0) -> np.ndarray:
+    """Random symmetric banded matrix, made SPD by diagonal dominance
+    (diag = 1 + Σ|off-diag| per row)."""
+    rng = np.random.default_rng(seed)
+    a = np.zeros((n, n), dtype)
+    for k in range(1, bandwidth + 1):
+        band = rng.standard_normal(n - k).astype(dtype)
+        a += np.diag(band, k) + np.diag(band, -k)
+    np.fill_diagonal(a, 1.0 + np.abs(a).sum(axis=1))
+    return a.astype(dtype)
+
+
+def random_spd_sparse(n: int, density: float = 0.02, dtype=np.float32,
+                      seed: int = 0) -> np.ndarray:
+    """Random sparse SPD matrix: symmetric Erdős–Rényi off-diagonal pattern
+    at roughly ``density``, diagonally dominant."""
+    if not 0.0 < density <= 1.0:
+        raise ValueError(f"density={density} must be in (0, 1]")
+    rng = np.random.default_rng(seed)
+    mask = rng.random((n, n)) < density / 2.0    # symmetrized below → ρ
+    vals = rng.standard_normal((n, n)).astype(dtype) * mask
+    a = vals + vals.T
+    np.fill_diagonal(a, 0.0)
+    np.fill_diagonal(a, 1.0 + np.abs(a).sum(axis=1))
+    return a.astype(dtype)
+
+
+def smooth_rhs(n: int, dtype=np.float32, seed: int = 0) -> np.ndarray:
+    """A smooth right-hand side (superposed low-frequency sines plus a
+    small random component) — the forcing profile Poisson benchmarks use;
+    smoothness keeps ‖x‖/‖b‖ moderate, which tightens parity tests."""
+    rng = np.random.default_rng(seed)
+    t = np.linspace(0.0, 1.0, n, dtype=np.float64)
+    b = np.sin(np.pi * t) + 0.5 * np.sin(3 * np.pi * t) \
+        + 0.1 * rng.standard_normal(n)
+    return (b / np.linalg.norm(b)).astype(dtype)

@@ -165,6 +165,31 @@ def test_pipelined_cg_preconditioned():
     assert int(fast.iterations) < int(plain.iterations)
 
 
+@pytest.mark.parametrize("pc", ["jacobi", "block_jacobi"])
+def test_pipelined_cg_precond_iteration_parity(pc):
+    """Preconditioned pipelined CG spans the same Krylov space as
+    preconditioned classic CG — iteration counts must agree (± rounding),
+    and both must beat the unpreconditioned run."""
+    n = 128
+    rng = np.random.default_rng(7)
+    d = np.diag(10.0 ** rng.uniform(-2, 2, n)).astype(np.float32)
+    a0, b = _system(n, spd=True, seed=7)
+    a = (d @ a0 @ d).astype(np.float32)
+    kw = dict(tol=1e-6, maxiter=2000, precond=pc, block_size=32,
+              return_info=True)
+    classic = api.solve(jnp.asarray(a), jnp.asarray(b), method="cg", **kw)
+    piped = api.solve(jnp.asarray(a), jnp.asarray(b),
+                      method="pipelined_cg", **kw)
+    plain = api.solve(jnp.asarray(a), jnp.asarray(b),
+                      method="pipelined_cg", tol=1e-6, maxiter=2000,
+                      return_info=True)
+    assert bool(classic.converged) and bool(piped.converged)
+    assert abs(int(classic.iterations) - int(piped.iterations)) <= 2
+    assert int(piped.iterations) < int(plain.iterations)
+    np.testing.assert_allclose(np.asarray(piped.x), np.asarray(classic.x),
+                               rtol=1e-3, atol=1e-3)
+
+
 # --------------------------------------------------------------------------
 # explicit-SPMD engine: same single-source drivers inside one shard_map
 # --------------------------------------------------------------------------
@@ -290,6 +315,23 @@ def test_spmd_block_jacobi_divisibility_error():
     pc = pc_mod.make("block_jacobi", a, 128)   # k = 2 blocks
     with pytest.raises(ValueError, match="not divisible"):
         op_mod.spmd_solve(krylov.cg, a, jnp.ones(256), FakeMesh(),
+                          precond=pc)
+
+
+def test_spmd_block_jacobi_padded_factors_rejected():
+    """Factors built on an identity-padded system (n % nb != 0) cannot
+    shard-align with the logical block rows — must raise, not silently
+    run a misaligned preconditioner."""
+    from repro.core import operator as op_mod, precond as pc_mod
+
+    class FakeMesh:
+        shape = {"data": 3, "model": 1}
+        axis_names = ("data", "model")
+
+    a = jnp.eye(120, dtype=jnp.float32)
+    pc = pc_mod.make("block_jacobi", a, 48)    # k = 3 padded blocks (144)
+    with pytest.raises(ValueError, match="cannot align"):
+        op_mod.spmd_solve(krylov.cg, a, jnp.ones(120), FakeMesh(),
                           precond=pc)
 
 
