@@ -7,15 +7,25 @@ Rows emitted:
 * factor + solve wall time per method,
 * an unrolled-vs-fori **trace+lower time** comparison — the point of the
   PR 2 rewrite: the Python-unrolled block loop's trace grows O(n / nb)
-  while the ``lax.fori_loop`` version is O(1) in ``n``.
+  while the ``lax.fori_loop`` version is O(1) in ``n``,
+* ``--spmd``: block-cyclic distributed LU GFLOP/s vs host device count
+  (1 → 8 virtual devices, one subprocess each — XLA fixes the device
+  count at first init).  On this one-CPU container the device scaling is
+  *emulation* (all "devices" share the silicon, so the curve shows
+  collective overhead, not speedup) — the same caveat as bench_scaling.
 
-Standalone:  PYTHONPATH=src python -m benchmarks.bench_direct [--smoke]
-(also runs as the ``direct`` section of ``benchmarks.run``).
+Standalone:  PYTHONPATH=src python -m benchmarks.bench_direct
+[--smoke|--spmd] (also the ``direct`` / ``direct_spmd`` sections of
+``benchmarks.run``).
 """
 from __future__ import annotations
 
 import argparse
 import functools
+import json
+import os
+import subprocess
+import sys
 import time
 
 import jax
@@ -137,12 +147,85 @@ def run(sizes=(512, 1024), compile_sizes=(256, 512, 1024), nb=128):
              f"unrolled={t_unrolled:.1f}ms steps={n // nb}")
 
 
+# --------------------------------------------------------------------------
+# --spmd: distributed (block-cyclic shard_map) LU vs device count
+# --------------------------------------------------------------------------
+
+_SPMD_CHILD = r"""
+import os, sys, json, time
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=%(ndev)d"
+sys.path.insert(0, %(src)r)
+import warnings; warnings.filterwarnings("ignore")
+import numpy as np, jax, jax.numpy as jnp
+from repro.core import lu
+
+n, nb, ndev = %(n)d, %(nb)d, %(ndev)d
+p = int(ndev ** 0.5)
+while ndev %% p: p -= 1
+mesh = jax.make_mesh((p, ndev // p), ("data", "model"))
+rng = np.random.default_rng(0)
+a = (rng.standard_normal((n, n)) + n * np.eye(n)).astype(np.float32)
+b = rng.standard_normal(n).astype(np.float32)
+aj, bj = jnp.asarray(a), jnp.asarray(b)
+
+def timed(fn, *args):
+    jax.block_until_ready(fn(*args))              # warmup / compile
+    ts = []
+    for _ in range(3):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+factor = jax.jit(lambda A: lu.lu_factor_spmd(
+    A, block_size=nb, mesh=mesh).lu)
+t_factor = timed(factor, aj)
+state = lu.lu_factor_spmd(aj, block_size=nb, mesh=mesh)
+apply = jax.jit(lambda B: lu.lu_apply_spmd(state, B))
+t_solve = timed(apply, bj)
+x = np.asarray(apply(bj))
+res = float(np.linalg.norm(b - a @ x) / np.linalg.norm(b))
+print("RESULT " + json.dumps(
+    {"t_factor": t_factor, "t_solve": t_solve, "res": res}))
+"""
+
+
+def run_spmd(device_counts=(1, 2, 4, 8), n=512, nb=64):
+    """GFLOP/s of the distributed LU factorization vs host device count."""
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    flops = 2 / 3 * n ** 3
+    for ndev in device_counts:
+        code = _SPMD_CHILD % {"ndev": ndev, "n": n, "nb": nb,
+                              "src": os.path.abspath(src)}
+        proc = subprocess.run([sys.executable, "-c", code],
+                              capture_output=True, text=True, timeout=900)
+        line = [l for l in proc.stdout.splitlines()
+                if l.startswith("RESULT ")]
+        if not line:
+            emit("direct_spmd", f"lu_spmd_n{n}_ndev{ndev}", "FAIL", "",
+                 proc.stderr.strip()[-200:].replace(",", ";"))
+            continue
+        r = json.loads(line[0][len("RESULT "):])
+        emit("direct_spmd", f"lu_spmd_factor_n{n}_ndev{ndev}",
+             round(flops / r["t_factor"] / 1e9, 2), "gflops",
+             f"wall={r['t_factor'] * 1e3:.1f}ms (CPU emulation)")
+        emit("direct_spmd", f"lu_spmd_solve_n{n}_ndev{ndev}",
+             round(r["t_solve"] * 1e3, 2), "ms",
+             f"rel_res={r['res']:.1e} (CPU emulation)")
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="small sizes for CI (fast, CPU-friendly)")
+    ap.add_argument("--spmd", action="store_true",
+                    help="distributed LU GFLOP/s vs device count (1->8)")
     args = ap.parse_args(argv)
-    if args.smoke:
+    if args.spmd:
+        run_spmd(device_counts=(1, 2, 4, 8),
+                 n=256 if args.smoke else 512,
+                 nb=32 if args.smoke else 64)
+    elif args.smoke:
         run(sizes=(256,), compile_sizes=(256, 512), nb=64)
     else:
         run()

@@ -1,0 +1,110 @@
+"""Benchmark regression gate for CI.
+
+Compares the ``BENCH_<section>.json`` files produced by ``benchmarks.run
+--json-dir`` against the checked-in reference numbers under
+``benchmarks/reference/`` and fails (exit 1) if any row regresses by more
+than ``--factor`` (default 2x):
+
+* time-like rows (ms, ms/system, s)      — fail if current > ref * factor
+* rows below ``--min-ms`` (default 5 ms) — skipped: sub-quantum timings
+  are scheduler noise, not signal
+* throughput rows (gflops, GB/s) and ratio/correctness rows — reported in
+  the artifacts but not gated (hardware-profile numbers; correctness is
+  asserted by tests, and "regression" on a fixed CI runner means wall time)
+* rows whose note says "(CPU emulation)" — skipped: virtual multi-device
+  timings oversubscribe one CPU and swing order-of-magnitude run to run
+  (curve shape only, same caveat as bench_scaling)
+
+Reference numbers are the checked-in worst-of-N observations
+(``benchmarks/reference/``); re-baseline by downloading a CI bench-json
+artifact (or re-running ``benchmarks.run --json-dir``) into that
+directory.
+
+Rows present in only one side are reported but never fail the gate (new
+benchmarks shouldn't need a reference bump to land, and re-baselining is
+one ``benchmarks.run --json-dir benchmarks/reference`` away).
+
+    PYTHONPATH=src python -m benchmarks.check_regression \
+        --current bench-out [--reference benchmarks/reference] [--factor 2]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+TIME_UNITS = {"ms", "ms/system", "s"}
+THROUGHPUT_UNITS = {"gflops", "GB/s", "gbs"}
+
+
+def load(directory: str) -> dict[tuple[str, str], tuple[float, str]]:
+    rows = {}
+    for path in sorted(glob.glob(os.path.join(directory, "BENCH_*.json"))):
+        with open(path) as f:
+            data = json.load(f)
+        for r in data.get("rows", []):
+            if "CPU emulation" in r.get("note", ""):
+                continue                  # ungateable on shared silicon
+            try:
+                value = float(r["value"])
+            except (TypeError, ValueError):
+                continue                  # "FAIL" markers etc.
+            rows[(data["section"], r["name"])] = (value, r.get("unit", ""))
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--current", required=True,
+                    help="directory with freshly produced BENCH_*.json")
+    ap.add_argument("--reference",
+                    default=os.path.join(os.path.dirname(__file__),
+                                         "reference"),
+                    help="directory with checked-in reference BENCH_*.json")
+    ap.add_argument("--factor", type=float, default=2.0,
+                    help="allowed slowdown factor (default 2x)")
+    ap.add_argument("--min-ms", type=float, default=5.0,
+                    help="skip time rows whose reference is below this "
+                         "(sub-quantum timings are noise)")
+    args = ap.parse_args(argv)
+
+    cur = load(args.current)
+    ref = load(args.reference)
+    if not ref:
+        print(f"no reference rows under {args.reference}; nothing to gate")
+        return
+    if not cur:
+        raise SystemExit(f"no BENCH_*.json under {args.current}")
+
+    for key in sorted(set(cur) - set(ref)):
+        print(f"  (new row {key[0]}/{key[1]} has no reference — ungated)")
+    regressions, checked = [], 0
+    for key, (rv, unit) in sorted(ref.items()):
+        if key not in cur:
+            print(f"  (no current row for {key[0]}/{key[1]} — skipped)")
+            continue
+        cv, _ = cur[key]
+        if unit not in TIME_UNITS:
+            continue
+        rv_ms = rv * 1e3 if unit == "s" else rv
+        if rv_ms < args.min_ms:
+            continue
+        checked += 1
+        if rv > 0 and cv > rv * args.factor:
+            regressions.append((key, rv, cv, unit))
+
+    print(f"checked {checked} gated rows against {args.reference} "
+          f"(factor {args.factor}x)")
+    if regressions:
+        for (section, name), rv, cv, unit in regressions:
+            print(f"REGRESSION {section}/{name}: {rv} -> {cv} {unit} "
+                  f"(> {args.factor}x)", file=sys.stderr)
+        raise SystemExit(f"{len(regressions)} benchmark row(s) regressed "
+                         f">{args.factor}x")
+    print("benchmark regression gate: PASS")
+
+
+if __name__ == "__main__":
+    main()

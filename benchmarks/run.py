@@ -1,19 +1,26 @@
 """Benchmark entry point — one section per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--quick]
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--sections a,b]
+                                            [--json-dir DIR]
 
 Sections:
   solvers      — §4 direct-vs-iterative method table (wall + residual)
   direct       — factor GFLOP/s vs jax.scipy + unrolled-vs-fori compile time
+  direct_spmd  — block-cyclic distributed LU GFLOP/s vs device count (1→8)
   sparse       — BSR SpMV GB/s + sparse-vs-dense CG wall time at matched n
   scaling      — Figs. 3/4: speedup vs node count (modeled v5e + emulated)
   local_accel  — §4 CUDA↔ATLAS ablation (Pallas↔jnp correctness + model)
   train        — LM-stack step throughput + modeled full-scale cells
+
+``--json-dir`` writes one ``BENCH_<section>.json`` per section (the CI
+smoke artifacts; ``benchmarks.check_regression`` gates them against the
+checked-in ``benchmarks/reference/`` numbers).
 """
 from __future__ import annotations
 
 import argparse
 import csv
+import json
 import os
 import sys
 import traceback
@@ -23,9 +30,23 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="smaller sizes / skip subprocess scaling runs")
+    ap.add_argument("--sections", default=None,
+                    help="comma-separated subset of sections to run "
+                         "(default: all)")
+    ap.add_argument("--json-dir", default=None,
+                    help="also write BENCH_<section>.json files here")
     ap.add_argument("--out", default=os.path.join(
         os.path.dirname(__file__), "..", "experiments", "bench.csv"))
     args = ap.parse_args(argv)
+    known = {"solvers", "direct", "direct_spmd", "sparse", "local_accel",
+             "train", "scaling"}
+    enabled = None
+    if args.sections:
+        enabled = {s.strip() for s in args.sections.split(",") if s.strip()}
+        unknown = enabled - known
+        if unknown:
+            raise SystemExit(f"unknown sections {sorted(unknown)}; "
+                             f"known: {sorted(known)}")
 
     from benchmarks import (bench_direct, bench_local_accel, bench_scaling,
                             bench_solvers, bench_sparse, bench_train)
@@ -34,6 +55,8 @@ def main(argv=None):
     failures = []
 
     def section(name, fn, *a, **kw):
+        if enabled is not None and name not in enabled:
+            return
         print(f"== {name} ==", flush=True)
         try:
             fn(*a, **kw)
@@ -48,6 +71,10 @@ def main(argv=None):
             sizes=(256,) if args.quick else (512, 1024),
             compile_sizes=(256, 512) if args.quick else (256, 512, 1024),
             nb=64 if args.quick else 128)
+    section("direct_spmd", bench_direct.run_spmd,
+            device_counts=(1, 2, 8) if args.quick else (1, 2, 4, 8),
+            n=256 if args.quick else 512,
+            nb=32 if args.quick else 64)
     section("sparse", bench_sparse.run,
             grids=(32,) if args.quick else (48, 64),
             nb=32 if args.quick else 64)
@@ -63,6 +90,19 @@ def main(argv=None):
         w.writerow(["bench", "name", "value", "unit", "note"])
         w.writerows(ROWS)
     print(f"wrote {len(ROWS)} rows to {args.out}")
+
+    if args.json_dir:
+        os.makedirs(args.json_dir, exist_ok=True)
+        by_section: dict[str, list] = {}
+        for bench, name, value, unit, note in ROWS:
+            by_section.setdefault(bench, []).append(
+                {"name": name, "value": value, "unit": unit, "note": note})
+        for bench, rows in by_section.items():
+            path = os.path.join(args.json_dir, f"BENCH_{bench}.json")
+            with open(path, "w") as f:
+                json.dump({"section": bench, "rows": rows}, f, indent=1)
+            print(f"wrote {path}")
+
     if failures:
         raise SystemExit(f"benchmark sections failed: {failures}")
 

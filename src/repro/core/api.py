@@ -12,8 +12,11 @@ driver function written against the :class:`repro.core.operator
 every engine:
 
 * ``engine="gspmd"``  — compiler-scheduled collectives (default),
-* ``engine="spmd"``   — the whole iteration inside one ``shard_map`` with
-  explicit collectives (MPI-faithful; all iterative methods, preconditioned),
+* ``engine="spmd"``   — explicit collectives inside one ``shard_map``
+  (MPI-faithful): every iterative method (preconditioned) runs its whole
+  loop in one shard_map, and the direct methods run the block-cyclic
+  distributed factorization (one shard_map-wrapped fori_loop; ScaLAPACK
+  layout) plus distributed triangular substitutions,
 * batched             — pass ``a`` of shape (B, n, n) and ``b`` (B, n);
   direct methods vmap their fixed-shape fori_loop factorizations,
 * sparse              — pass a :class:`repro.sparse.BSR` / ``ELL`` matrix;
@@ -59,6 +62,8 @@ class SolverEntry:
     extra: tuple = ()             # accepted solver-specific kwargs
     factor: Callable | None = None   # direct: a -> opaque factor state
     apply: Callable | None = None    # direct: (state, b) -> x
+    spmd_factor: Callable | None = None  # direct, engine="spmd" split
+    spmd_apply: Callable | None = None
 
 
 _REGISTRY: dict[str, SolverEntry] = {}
@@ -67,20 +72,34 @@ _REGISTRY: dict[str, SolverEntry] = {}
 def register_method(name: str, fn: Callable, *, kind: str = "iterative",
                     requires: tuple = (), extra: tuple = (),
                     factor: Callable | None = None,
-                    apply: Callable | None = None) -> SolverEntry:
+                    apply: Callable | None = None,
+                    spmd_factor: Callable | None = None,
+                    spmd_apply: Callable | None = None) -> SolverEntry:
     """Register a solver.  Iterative ``fn(op, b, *, tol, maxiter, precond,
     **extra) -> SolveResult``.  Direct methods register a factor/solve
     split: ``factor(a, *, block_size, mesh, backend) -> state`` and
     ``apply(state, b, *, block_size, mesh, backend) -> x`` (``fn`` remains
-    the one-shot convenience composition).  Re-registering a name
-    overwrites it (lets users swap implementations)."""
+    the one-shot convenience composition), plus optionally the distributed
+    pair ``spmd_factor``/``spmd_apply`` (same signatures; mesh required)
+    that ``engine="spmd"`` dispatches to — one shard_map-wrapped
+    block-cyclic factorization.  Re-registering a name overwrites it (lets
+    users swap implementations)."""
     if kind == "direct" and (factor is None) != (apply is None):
         raise ValueError(f"direct method {name!r} needs BOTH factor= and "
                          "apply= (or neither)")
+    if (spmd_factor is None) != (spmd_apply is None):
+        raise ValueError(f"method {name!r} needs BOTH spmd_factor= and "
+                         "spmd_apply= (or neither)")
     entry = SolverEntry(name, fn, kind=kind, requires=tuple(requires),
-                        extra=tuple(extra), factor=factor, apply=apply)
+                        extra=tuple(extra), factor=factor, apply=apply,
+                        spmd_factor=spmd_factor, spmd_apply=spmd_apply)
     _REGISTRY[name] = entry
     return entry
+
+
+def _spmd_direct_methods() -> tuple[str, ...]:
+    return tuple(sorted(n for n, e in _REGISTRY.items()
+                        if e.kind == "direct" and e.spmd_factor is not None))
 
 
 def get_method(name: str) -> SolverEntry:
@@ -97,9 +116,13 @@ def available_methods(kind: str | None = None) -> tuple[str, ...]:
 
 
 register_method("lu", _lu.solve, kind="direct",
-                factor=_lu.lu_factor, apply=_lu.lu_apply)
+                factor=_lu.lu_factor, apply=_lu.lu_apply,
+                spmd_factor=_lu.lu_factor_spmd,
+                spmd_apply=_lu.lu_apply_spmd)
 register_method("cholesky", _chol.solve, kind="direct",
-                factor=_chol.cholesky_factor_state, apply=_chol.cholesky_apply)
+                factor=_chol.cholesky_factor_state, apply=_chol.cholesky_apply,
+                spmd_factor=_chol.cholesky_factor_spmd,
+                spmd_apply=_chol.cholesky_apply_spmd)
 register_method("cg", krylov.cg)
 register_method("pipelined_cg", krylov.pipelined_cg)
 register_method("bicg", krylov.bicg, requires=("matvec_t",))
@@ -129,25 +152,38 @@ def solve(a: jax.Array, b: jax.Array, *, method: str = "lu",
                         f"{list(entry.extra)}")
     if engine not in ENGINES:
         raise ValueError(f"unknown engine {engine!r}; expected {ENGINES}")
-    _blocking.check_backend(backend, mesh)
+    # the distributed direct path runs the Pallas kernels per-shard, so
+    # backend='pallas' + mesh is legal there (name check only)
+    direct_spmd = entry.kind == "direct" and engine == "spmd"
+    _blocking.check_backend(backend, None if direct_spmd else mesh)
     sparse = getattr(a, "is_sparse", False)
 
     if mesh is not None and not sparse:
         if a.ndim == 3:
             raise ValueError("batched solves are single-device (mesh=None)")
-        a = dist.shard_matrix(a, mesh)
-        b = dist.shard_vector(b, mesh)
+        if not direct_spmd:
+            # the spmd direct path pads + lays out cyclically itself (a
+            # non-block-multiple n cannot pre-shard on the 2-D layout)
+            a = dist.shard_matrix(a, mesh)
+            b = dist.shard_vector(b, mesh)
 
     if entry.kind == "direct":
         if sparse:
             raise ValueError(f"direct method {method!r} is dense-only; "
                              "sparse systems use the iterative methods "
                              "(or densify explicitly with a.to_dense())")
-        if engine == "spmd":
-            raise ValueError("direct methods are factorizations on the "
-                             "gspmd engine; engine='spmd' is iterative-only")
         kw = dict(block_size=block_size, mesh=mesh, backend=backend)
-        if entry.factor is None:
+        if engine == "spmd":
+            if mesh is None:
+                raise ValueError("engine='spmd' requires a mesh")
+            if entry.spmd_factor is None:
+                raise ValueError(
+                    f"direct method {method!r} has no distributed "
+                    f"(engine='spmd') factorization; methods with one: "
+                    f"{_spmd_direct_methods()} — engine='gspmd' runs any "
+                    "direct method on sharded global arrays")
+            x = entry.spmd_apply(entry.spmd_factor(a, **kw), b, **kw)
+        elif entry.factor is None:
             # legacy one-shot registration (no factor/apply split)
             if a.ndim == 3:
                 raise ValueError(f"method {method!r} has no factor/apply "
@@ -214,12 +250,16 @@ def solve(a: jax.Array, b: jax.Array, *, method: str = "lu",
 
 
 def factorize(a: jax.Array, *, method: str = "lu", mesh=None,
-              block_size: int = 128, backend: str = "ref"):
+              block_size: int = 128, backend: str = "ref",
+              engine: str = "gspmd"):
     """Factor once, solve many (paper's two-step direct method, step 1).
 
     Any method registered with ``kind="direct"`` and a factor/apply split
     works; the returned callable maps ``b -> x``.  Batched ``a`` of shape
     (B, n, n) returns a solver over (B, n[, k]) right-hand sides.
+    ``engine="spmd"`` (mesh required) factors once with the block-cyclic
+    distributed factorization; the returned solver runs the distributed
+    substitutions against the sharded factor state.
     """
     if getattr(a, "is_sparse", False):
         raise ValueError("factorize is dense-only; sparse systems use the "
@@ -230,6 +270,26 @@ def factorize(a: jax.Array, *, method: str = "lu", mesh=None,
     if entry.kind != "direct":
         raise ValueError(f"factorize needs a direct method; {method!r} is "
                          f"{entry.kind}; available: {with_split}")
+    if engine not in ENGINES:
+        raise ValueError(f"unknown engine {engine!r}; expected {ENGINES}")
+    # spmd dispatch happens before the local-split check: a method may
+    # legitimately register ONLY the distributed pair
+    if engine == "spmd":
+        if mesh is None:
+            raise ValueError("engine='spmd' requires a mesh")
+        if entry.spmd_factor is None:
+            raise ValueError(
+                f"direct method {method!r} has no distributed "
+                f"(engine='spmd') factorization; methods with one: "
+                f"{_spmd_direct_methods()}")
+        _blocking.check_backend_name(backend)
+        if a.ndim == 3:
+            raise ValueError("batched solves are single-device (mesh=None)")
+        state = entry.spmd_factor(a, block_size=block_size, mesh=mesh,
+                                  backend=backend)
+        return functools.partial(entry.spmd_apply, state,
+                                 block_size=block_size, mesh=mesh,
+                                 backend=backend)
     if entry.factor is None:
         raise ValueError(f"direct method {method!r} has no factor/apply "
                          f"split; methods with one: {with_split}")

@@ -23,11 +23,19 @@ BACKENDS = ("ref", "pallas")
 
 def check_backend(backend: str, mesh=None) -> None:
     """Single validation used by every direct-path entry point."""
+    check_backend_name(backend)
+    if backend == "pallas" and mesh is not None:
+        raise ValueError("backend='pallas' is single-device only on this "
+                         "path; drop mesh=, use backend='ref', or use the "
+                         "distributed direct path (engine='spmd'), which "
+                         "runs the Pallas kernels per-shard")
+
+
+def check_backend_name(backend: str) -> None:
+    """Name-only validation (the spmd direct path allows 'pallas' with a
+    mesh — the kernels run on each shard's local blocks)."""
     if backend not in BACKENDS:
         raise ValueError(f"unknown backend {backend!r}; expected {BACKENDS}")
-    if backend == "pallas" and mesh is not None:
-        raise ValueError("backend='pallas' is single-device only; "
-                         "drop mesh= or use backend='ref'")
 
 
 def effective_backend(backend: str, dtype) -> str:
@@ -59,6 +67,24 @@ def pad_system(a: jax.Array, block_size: int) -> tuple[jax.Array, int, int]:
         raise ValueError(f"expected a square (n, n) matrix, got {a.shape}")
     nb = choose_block(n, block_size)
     n_pad = padded_size(n, nb)
+    if n_pad != n:
+        pad = n_pad - n
+        a = jnp.pad(a, ((0, pad), (0, pad)))
+        a = a.at[n:, n:].set(jnp.eye(pad, dtype=a.dtype))
+    return a, nb, n_pad
+
+
+def pad_system_spmd(a: jax.Array, block_size: int, nprocs: int
+                    ) -> tuple[jax.Array, int, int]:
+    """Identity-pad for the block-cyclic distributed path: same policy as
+    :func:`pad_system`, but the padded size is a multiple of
+    ``nb * nprocs`` so every process owns the same number of block
+    columns (ScaLAPACK-style uniform local storage)."""
+    n = a.shape[-1]
+    if a.ndim != 2 or a.shape[0] != n:
+        raise ValueError(f"expected a square (n, n) matrix, got {a.shape}")
+    nb = choose_block(n, block_size)
+    n_pad = padded_size(n, nb * nprocs)
     if n_pad != n:
         pad = n_pad - n
         a = jnp.pad(a, ((0, pad), (0, pad)))

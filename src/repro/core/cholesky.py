@@ -12,11 +12,14 @@ are identity-padded (exact — see :mod:`repro.core.blocking`).
 """
 from __future__ import annotations
 
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 from jax.scipy.linalg import solve_triangular
+from jax.experimental.shard_map import shard_map
 
-from repro.core import blocking, dist
+from repro.core import blocking, dist, pblas
 
 
 def cholesky_factor(a: jax.Array, block_size: int = 128, mesh=None,
@@ -107,3 +110,116 @@ def solve(a: jax.Array, b: jax.Array, block_size: int = 128, mesh=None,
     l = cholesky_factor(a, block_size=block_size, mesh=mesh, backend=backend)
     return cholesky_solve(l, b, block_size=block_size, mesh=mesh,
                           backend=backend)
+
+
+# --------------------------------------------------------------------------
+# Distributed-memory Cholesky: block-cyclic columns, ONE shard_map.
+#
+# Same structure as the distributed LU (see :mod:`repro.core.lu`), minus
+# pivoting: per block step the owner broadcasts its raw column block, every
+# process computes the replicated (nb, nb) Cholesky + panel TRSM, and the
+# rank-nb SYRK trailing update runs on each process's local block columns
+# (gathering the L21 rows matching its global column set — the SYRK's
+# "transpose side" of the cyclic layout).  The cyclic column permutation is
+# pure STORAGE: the body indexes blocks by global position, so the math
+# eliminates natural A in natural order — SPD-ness is untouched and
+# b/x need no permuting.
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class CholeskySpmdState:
+    """L factor of the padded system, columns stored in cyclic
+    (process-major) order: ``state.l == L[:, layout.colperm]``."""
+    layout: dist.CyclicLayout
+    l: jax.Array
+
+
+def cholesky_factor_spmd(a: jax.Array, *, block_size: int = 128, mesh=None,
+                         backend: str = "ref") -> CholeskySpmdState:
+    """Block-cyclic distributed Cholesky (ONE shard_map)."""
+    from repro.core.lu import _spmd_prep
+    a, lay, backend = _spmd_prep(a, block_size, mesh, backend)
+    nb, n, procs = lay.nb, lay.n, lay.nprocs
+    row, col = dist.solver_axes(mesh)
+    q = mesh.shape[col]
+    axes = (row, col)
+    rows_g = jnp.arange(n)[:, None]
+    if backend == "pallas":
+        from repro.kernels import gemm
+        from repro.kernels.krylov_fused import _auto_interpret
+        interp = _auto_interpret(None)
+
+    def body(a_loc):
+        d = pblas.flat_index_local(row, col, q)
+        gcol = lay.local_gcol(d, a_loc.shape[1])
+
+        def step(s, a_loc):
+            k = s * nb
+            owner, t = s % procs, s // procs
+            # -- panel broadcast + replicated diag Cholesky / panel TRSM --
+            raw = jax.lax.dynamic_slice(a_loc, (0, t * nb), (n, nb))
+            raw = pblas.bcast_local(raw, owner, d, axes)
+            akk = jax.lax.dynamic_slice(raw, (k, 0), (nb, nb))
+            lkk = jnp.linalg.cholesky(akk)
+            pan0 = jax.lax.dynamic_update_slice(raw, lkk.astype(raw.dtype),
+                                                (k, 0))
+            l21_full = solve_triangular(lkk, pan0.T, lower=True).T
+            pan = jnp.where(rows_g >= k + nb, l21_full.astype(raw.dtype),
+                            pan0)
+            a_loc = jnp.where(
+                d == owner,
+                jax.lax.dynamic_update_slice(a_loc, pan.astype(a_loc.dtype),
+                                             (0, t * nb)),
+                a_loc)
+            # -- rank-nb SYRK update of MY columns ------------------------
+            l21m = jnp.where(rows_g >= k + nb, pan, 0).astype(a_loc.dtype)
+            l21_cols = jnp.take(l21m, gcol, axis=0)       # rows j = my cols
+            if backend == "pallas":
+                a_loc = a_loc - gemm.matmul(l21m, l21_cols.T, bm=nb, bn=nb,
+                                            bk=nb, interpret=interp)
+            else:
+                a_loc = a_loc - l21m @ l21_cols.T
+            return a_loc
+
+        a_loc = jax.lax.fori_loop(0, n // nb, step, a_loc)
+        # global tril on the cyclic layout: keep (i, gcol) with i >= gcol
+        return jnp.where(rows_g >= gcol[None, :], a_loc, 0)
+
+    spec = lay.matrix_spec()
+    l_cyc = shard_map(body, mesh=mesh, in_specs=(spec,),
+                      out_specs=spec, check_rep=False)(a[:, lay.colperm])
+    return CholeskySpmdState(lay, l_cyc)
+
+
+def cholesky_apply_spmd(state: CholeskySpmdState, b: jax.Array, *,
+                        block_size: int = 128, mesh=None,
+                        backend: str = "ref") -> jax.Array:
+    """Distributed L y = b then Lᵀ x = y from :func:`cholesky_factor_spmd`
+    (both substitutions inside one shard_map)."""
+    from repro.core import triangular as tri
+    lay = state.layout
+    mesh = lay.mesh
+    n0 = b.shape[0]
+    bp, vec = tri._as_2d(blocking.pad_rhs(b, lay.n))
+    row, col = dist.solver_axes(mesh)
+    q = mesh.shape[col]
+    procs = lay.nprocs
+
+    def body(a_loc, b_rep):
+        d = pblas.flat_index_local(row, col, q)
+        gcol = lay.local_gcol(d, a_loc.shape[1])
+        kw = dict(nb=lay.nb, procs=procs, d=d, axes=(row, col))
+        y = tri.fsub_cyclic_local(a_loc, b_rep, **kw)
+        return tri.bsub_t_cyclic_local(a_loc, y, gcol=gcol, **kw)
+
+    x = tri._cyclic_call(mesh, lay, body, state.l, bp)[:n0]
+    return x[:, 0] if vec else x
+
+
+def solve_spmd(a: jax.Array, b: jax.Array, *, block_size: int = 128,
+               mesh=None, backend: str = "ref") -> jax.Array:
+    """One-shot distributed SPD solve (factor + substitutions)."""
+    state = cholesky_factor_spmd(a, block_size=block_size, mesh=mesh,
+                                 backend=backend)
+    return cholesky_apply_spmd(state, b)

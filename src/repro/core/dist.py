@@ -18,11 +18,13 @@ explicit (see ``pblas``).
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 ROW_AXIS = "data"   # mesh rows  (process-grid i)
@@ -119,3 +121,82 @@ def _gcd(a: int, b: int) -> int:
     while b:
         a, b = b, a % b
     return a
+
+
+# --------------------------------------------------------------------------
+# Block-cyclic column layout (distributed direct path, ScaLAPACK-style)
+# --------------------------------------------------------------------------
+#
+# The distributed factorizations flatten the 2-D process mesh into a 1-D
+# ring of P = p·q processes and distribute COLUMN blocks cyclically:
+# global block g lives on process g % P as its local block g // P.  Every
+# process therefore owns full columns — the pivot search of the panel
+# factorization is communication-free — and the cyclic assignment keeps
+# the trailing-update work balanced as the factorization shrinks the
+# active window (the reason ScaLAPACK is cyclic, not contiguous).
+#
+# ``shard_map`` hands each process a CONTIGUOUS chunk of the array, so the
+# cyclic assignment is realized by a static column permutation: the global
+# matrix is stored with process 0's blocks first, then process 1's, etc.
+# (``colperm``), which makes chunk d exactly process d's cyclic block set.
+
+
+@dataclasses.dataclass(frozen=True)
+class CyclicLayout:
+    """Static description of a block-cyclic column distribution.
+
+    ``colperm`` maps permuted → original column index (``a_cyclic =
+    a[:, colperm]``); ``inv_colperm`` undoes it (``x = x_cyclic[inv_colperm]``
+    for column/solution vectors).  Both are concrete NumPy (the layout is
+    static structure, like a BSR sparsity pattern).
+    """
+    mesh: Mesh
+    nprocs: int        # P = p * q flattened processes
+    nb: int            # block size
+    n0: int            # logical system size
+    n: int             # padded size (multiple of nb * P)
+    colperm: np.ndarray
+    inv_colperm: np.ndarray
+
+    @property
+    def nblocks(self) -> int:
+        return self.n // self.nb
+
+    def local_gcol(self, d, nloc: int) -> jax.Array:
+        """Global (natural-order) column index of each local column slot,
+        for the process with (traced) flat index ``d`` — the inverse of
+        the :func:`cyclic_col_perm` storage map, used inside shard_map
+        bodies.  Local slot ``t*nb + w`` holds global column
+        ``(d + t*P)*nb + w``."""
+        t = jnp.arange(nloc) // self.nb
+        return (d + t * self.nprocs) * self.nb + jnp.arange(nloc) % self.nb
+
+    def matrix_spec(self) -> P:
+        """Columns sharded jointly over both mesh axes (row-major flatten,
+        matching ``flat_index_local``); rows fully local."""
+        r, c = solver_axes(self.mesh)
+        return P(None, (r, c))
+
+
+def nprocs(mesh: Mesh) -> int:
+    p, q = grid_shape(mesh)
+    return p * q
+
+
+def cyclic_col_perm(nblocks: int, nb: int, procs: int) -> np.ndarray:
+    """Permuted → original column map putting each process's cyclic block
+    set (g ≡ d mod P, ascending g) in one contiguous chunk."""
+    order = [g for d in range(procs) for g in range(d, nblocks, procs)]
+    return np.concatenate(
+        [np.arange(g * nb, (g + 1) * nb) for g in order]) if order \
+        else np.arange(0)
+
+
+def cyclic_layout(mesh: Mesh, n0: int, n_pad: int, nb: int) -> CyclicLayout:
+    procs = nprocs(mesh)
+    if n_pad % (nb * procs):
+        raise ValueError(f"padded size {n_pad} is not a multiple of "
+                         f"nb*P = {nb}*{procs}")
+    colperm = cyclic_col_perm(n_pad // nb, nb, procs)
+    return CyclicLayout(mesh=mesh, nprocs=procs, nb=nb, n0=n0, n=n_pad,
+                        colperm=colperm, inv_colperm=np.argsort(colperm))

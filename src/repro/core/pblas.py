@@ -85,6 +85,20 @@ def dotm_local(m: jax.Array, w: jax.Array, row: str) -> jax.Array:
     return jax.lax.psum(m @ w, row)
 
 
+def flat_index_local(row: str, col: str, q: int) -> jax.Array:
+    """This process's index in the flattened 1-D ring (row-major over the
+    2-D grid) — the block-cyclic direct path's process coordinate."""
+    return jax.lax.axis_index(row) * q + jax.lax.axis_index(col)
+
+
+def bcast_local(x: jax.Array, src, d, axes) -> jax.Array:
+    """Broadcast ``x`` from the process whose flat index ``d`` equals
+    ``src`` to every process on ``axes`` (MPI_Bcast as a masked psum — the
+    same collective idiom as SUMMA's panel broadcasts).  Non-source values
+    are ignored."""
+    return jax.lax.psum(jnp.where(d == src, x, jnp.zeros_like(x)), axes)
+
+
 # --------------------------------------------------------------------------
 # shard_map engine (explicit collectives, MPI-style)
 # --------------------------------------------------------------------------

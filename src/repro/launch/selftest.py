@@ -53,6 +53,18 @@ def test_solvers(mesh):
     out = api.solve(jnp.asarray(spd), jnp.asarray(b), method="cholesky",
                     mesh=mesh, block_size=64)
     check("dist Cholesky", np.allclose(out, x_sp, atol=1e-3))
+    # block-cyclic SPMD direct path (ONE shard_map factorization) == the
+    # gspmd/local path (f64 parity battery: repro.launch.selftest_direct)
+    for method, ref in (("lu", x_lu), ("cholesky", x_sp)):
+        mat = a if method == "lu" else spd
+        out = api.solve(jnp.asarray(mat), jnp.asarray(b), method=method,
+                        mesh=mesh, engine="spmd", block_size=32)
+        check(f"spmd direct {method} == oracle",
+              np.allclose(out, ref, atol=1e-3))
+    solver = api.factorize(jnp.asarray(spd), method="cholesky", mesh=mesh,
+                           engine="spmd", block_size=32)
+    check("spmd factorize reuse",
+          np.allclose(solver(jnp.asarray(b)), x_sp, atol=1e-3))
     for method in ("cg", "pipelined_cg", "bicgstab", "gmres", "bicg"):
         mat = spd if method in ("cg", "pipelined_cg") else a
         ref = x_sp if method in ("cg", "pipelined_cg") else x_lu

@@ -226,7 +226,8 @@ def test_direct_rejects_bad_backend_and_engine():
     with pytest.raises(ValueError, match="backend"):
         api.solve(jnp.asarray(a), jnp.asarray(b), method="lu",
                   backend="cuda")
-    with pytest.raises(ValueError, match="iterative-only"):
+    # direct + engine='spmd' is now a real path — but it needs a mesh
+    with pytest.raises(ValueError, match="requires a mesh"):
         api.solve(jnp.asarray(a), jnp.asarray(b), method="lu",
                   engine="spmd")
     with pytest.raises(ValueError, match="backend"):
