@@ -7,6 +7,8 @@ Sections:
   solvers      — §4 direct-vs-iterative method table (wall + residual)
   direct       — factor GFLOP/s vs jax.scipy + unrolled-vs-fori compile time
   direct_spmd  — block-cyclic distributed LU GFLOP/s vs device count (1→8)
+  eigls        — QR GFLOP/s vs jnp.linalg.qr, LSQR/CGLS wall, Lanczos it/s
+  eigls_spmd   — TSQR GFLOP/s vs device count (1→8)
   sparse       — BSR SpMV GB/s + sparse-vs-dense CG wall time at matched n
   scaling      — Figs. 3/4: speedup vs node count (modeled v5e + emulated)
   local_accel  — §4 CUDA↔ATLAS ablation (Pallas↔jnp correctness + model)
@@ -38,8 +40,8 @@ def main(argv=None):
     ap.add_argument("--out", default=os.path.join(
         os.path.dirname(__file__), "..", "experiments", "bench.csv"))
     args = ap.parse_args(argv)
-    known = {"solvers", "direct", "direct_spmd", "sparse", "local_accel",
-             "train", "scaling"}
+    known = {"solvers", "direct", "direct_spmd", "eigls", "eigls_spmd",
+             "sparse", "local_accel", "train", "scaling"}
     enabled = None
     if args.sections:
         enabled = {s.strip() for s in args.sections.split(",") if s.strip()}
@@ -48,8 +50,9 @@ def main(argv=None):
             raise SystemExit(f"unknown sections {sorted(unknown)}; "
                              f"known: {sorted(known)}")
 
-    from benchmarks import (bench_direct, bench_local_accel, bench_scaling,
-                            bench_solvers, bench_sparse, bench_train)
+    from benchmarks import (bench_direct, bench_eigls, bench_local_accel,
+                            bench_scaling, bench_solvers, bench_sparse,
+                            bench_train)
     from benchmarks.common import ROWS
 
     failures = []
@@ -75,6 +78,15 @@ def main(argv=None):
             device_counts=(1, 2, 8) if args.quick else (1, 2, 4, 8),
             n=256 if args.quick else 512,
             nb=32 if args.quick else 64)
+    if args.quick:
+        section("eigls", bench_eigls.run, shapes=((512, 128),), nb=64,
+                ls_shape=(1024, 128), grid=32, ncv=60)
+    else:
+        section("eigls", bench_eigls.run)
+    section("eigls_spmd", bench_eigls.run_spmd,
+            device_counts=(1, 2, 8) if args.quick else (1, 2, 4, 8),
+            m=2048 if args.quick else 8192,
+            n=128 if args.quick else 256)
     section("sparse", bench_sparse.run,
             grids=(32,) if args.quick else (48, 64),
             nb=32 if args.quick else 64)

@@ -4,9 +4,9 @@ GMRES/pipelined-CG non-stationary iterative methods) as a composable JAX
 module.  Solvers are written once against the LinearOperator primitive set
 and dispatched through the ``api`` registry."""
 from repro.core.api import (  # noqa: F401
-    solve, factorize, register_method, available_methods)
+    solve, factorize, eigsolve, register_method, available_methods)
 from repro.core.krylov import (  # noqa: F401
-    SolveResult, cg, bicg, bicgstab, gmres, pipelined_cg)
+    SolveResult, cg, bicg, bicgstab, gmres, pipelined_cg, lsqr, cgls)
 from repro.core.operator import (  # noqa: F401
     LinearOperator, DenseOperator, GspmdOperator, SpmdLocalOperator,
     BatchedOperator, make_operator, spmd_solve)

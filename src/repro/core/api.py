@@ -29,6 +29,12 @@ every engine:
 
 Direct methods are registered with a factor/solve split
 (``factor=``/``apply=``), which is what :func:`factorize` dispatches on.
+
+Rectangular (m, n) systems are least squares and opt in explicitly:
+``method="qr"`` (blocked Householder QR; distributed TSQR under
+``engine="spmd"``) or ``method="lsqr"``/``"cgls"`` (iterative,
+matrix-free — sparse matrices included).  Spectral problems go through
+:func:`eigsolve` (Lanczos / Arnoldi on the same operator engine).
 """
 from __future__ import annotations
 
@@ -43,6 +49,7 @@ from repro.core import blocking as _blocking
 from repro.core import cholesky as _chol
 from repro.core import dist, krylov, lu as _lu, operator as _operator
 from repro.core import precond as _precond
+from repro.core import qr as _qr
 from repro.core.blocking import BACKENDS
 from repro.core.krylov import SolveResult
 
@@ -64,6 +71,7 @@ class SolverEntry:
     apply: Callable | None = None    # direct: (state, b) -> x
     spmd_factor: Callable | None = None  # direct, engine="spmd" split
     spmd_apply: Callable | None = None
+    rectangular: bool = False        # accepts (m, n) m != n (least squares)
 
 
 _REGISTRY: dict[str, SolverEntry] = {}
@@ -74,7 +82,8 @@ def register_method(name: str, fn: Callable, *, kind: str = "iterative",
                     factor: Callable | None = None,
                     apply: Callable | None = None,
                     spmd_factor: Callable | None = None,
-                    spmd_apply: Callable | None = None) -> SolverEntry:
+                    spmd_apply: Callable | None = None,
+                    rectangular: bool = False) -> SolverEntry:
     """Register a solver.  Iterative ``fn(op, b, *, tol, maxiter, precond,
     **extra) -> SolveResult``.  Direct methods register a factor/solve
     split: ``factor(a, *, block_size, mesh, backend) -> state`` and
@@ -92,7 +101,8 @@ def register_method(name: str, fn: Callable, *, kind: str = "iterative",
                          "spmd_apply= (or neither)")
     entry = SolverEntry(name, fn, kind=kind, requires=tuple(requires),
                         extra=tuple(extra), factor=factor, apply=apply,
-                        spmd_factor=spmd_factor, spmd_apply=spmd_apply)
+                        spmd_factor=spmd_factor, spmd_apply=spmd_apply,
+                        rectangular=rectangular)
     _REGISTRY[name] = entry
     return entry
 
@@ -115,6 +125,18 @@ def available_methods(kind: str | None = None) -> tuple[str, ...]:
                         if kind is None or e.kind == kind))
 
 
+# the TSQR pair is imported lazily: repro.eigls sits above the core
+# package, so module-level registration must not pull it in at import time
+def _tsqr_factor(a, **kw):
+    from repro.eigls import tsqr
+    return tsqr.tsqr_factor_spmd(a, **kw)
+
+
+def _tsqr_apply(state, b, **kw):
+    from repro.eigls import tsqr
+    return tsqr.tsqr_apply_spmd(state, b, **kw)
+
+
 register_method("lu", _lu.solve, kind="direct",
                 factor=_lu.lu_factor, apply=_lu.lu_apply,
                 spmd_factor=_lu.lu_factor_spmd,
@@ -123,12 +145,19 @@ register_method("cholesky", _chol.solve, kind="direct",
                 factor=_chol.cholesky_factor_state, apply=_chol.cholesky_apply,
                 spmd_factor=_chol.cholesky_factor_spmd,
                 spmd_apply=_chol.cholesky_apply_spmd)
+register_method("qr", _qr.solve, kind="direct", rectangular=True,
+                factor=_qr.qr_factor_state, apply=_qr.qr_apply,
+                spmd_factor=_tsqr_factor, spmd_apply=_tsqr_apply)
 register_method("cg", krylov.cg)
 register_method("pipelined_cg", krylov.pipelined_cg)
 register_method("bicg", krylov.bicg, requires=("matvec_t",))
 register_method("bicgstab", krylov.bicgstab)
 register_method("gmres", krylov.gmres, requires=("gram",),
                 extra=("restart",))
+register_method("lsqr", krylov.lsqr, requires=("matvec_t",),
+                rectangular=True)
+register_method("cgls", krylov.cgls, requires=("matvec_t",),
+                rectangular=True)
 
 # kept as module-level introspection helpers (historical names)
 DIRECT = available_methods("direct")
@@ -157,6 +186,26 @@ def solve(a: jax.Array, b: jax.Array, *, method: str = "lu",
     direct_spmd = entry.kind == "direct" and engine == "spmd"
     _blocking.check_backend(backend, None if direct_spmd else mesh)
     sparse = getattr(a, "is_sparse", False)
+
+    # -- non-square audit: least squares is an explicit opt-in -------------
+    rect = len(a.shape) >= 2 and a.shape[-2] != a.shape[-1]
+    if rect:
+        if not entry.rectangular:
+            raise ValueError(
+                f"matrix is non-square {tuple(a.shape)}; method {method!r} "
+                "solves square systems only — rectangular least squares: "
+                "method='qr' (direct, TSQR under engine='spmd') or "
+                "method='lsqr'/'cgls' (iterative, matrix-free)")
+        if precond is not None:
+            raise ValueError(
+                "preconditioners are square-operator state; the "
+                "least-squares path runs unpreconditioned (cgls accepts a "
+                "normal-equations M via the driver API)")
+        if engine == "spmd" and entry.kind != "direct":
+            raise ValueError(
+                "rectangular engine='spmd' is the TSQR factorization — "
+                "use method='qr'; the iterative least-squares drivers run "
+                "on engine='gspmd' (sharded or local)")
 
     if mesh is not None and not sparse:
         if a.ndim == 3:
@@ -205,9 +254,17 @@ def solve(a: jax.Array, b: jax.Array, *, method: str = "lu",
         if not return_info:
             return x
         ax = a @ x if x.ndim == a.ndim else (a @ x[..., None])[..., 0]
-        axis = None if a.ndim == 2 else tuple(range(1, b.ndim))
-        res = jnp.linalg.norm(b - ax, axis=axis)
-        bnorm = jnp.linalg.norm(b, axis=axis)
+        rvec, refvec = b - ax, b
+        if rect:
+            # least squares: ‖b − Ax‖ does not vanish at the solution —
+            # report the normal-equations residual ‖Aᵀ(b − Ax)‖ instead
+            at = jnp.swapaxes(a, -1, -2)
+            proj = (lambda v: at @ v) if x.ndim == a.ndim else (
+                lambda v: (at @ v[..., None])[..., 0])
+            rvec, refvec = proj(rvec), proj(b)
+        axis = None if a.ndim == 2 else tuple(range(1, rvec.ndim))
+        res = jnp.linalg.norm(rvec, axis=axis)
+        bnorm = jnp.linalg.norm(refvec, axis=axis)
         atol = tol * jnp.where(bnorm == 0, 1.0, bnorm)
         iters = jnp.zeros(res.shape, jnp.int32) if a.ndim == 3 \
             else jnp.asarray(0)
@@ -306,3 +363,22 @@ def factorize(a: jax.Array, *, method: str = "lu", mesh=None,
     state = entry.factor(a, block_size=block_size, mesh=mesh, backend=backend)
     return functools.partial(entry.apply, state, block_size=block_size,
                              mesh=mesh, backend=backend)
+
+
+def eigsolve(a, k: int = 6, *, which: str = "LA", method: str = "lanczos",
+             mesh=None, backend: str = "ref", ncv=None, v0=None,
+             tol: float = 1e-8, n=None, dtype=None):
+    """Compute ``k`` eigenpairs of ``a`` — the spectral half of the
+    level-4 API.  Same opaque-engine contract as :func:`solve`: dense /
+    sparse (BSR, matrix-free) / operator / bare-matvec inputs,
+    ``mesh=`` for the GSPMD-sharded engine, ``backend="pallas"`` for the
+    fused kernels, and a method registry
+    (:func:`repro.eigls.eigen.register_eig_method`) holding ``"lanczos"``
+    (symmetric/SPD) and ``"arnoldi"`` (general).  Returns an
+    :class:`repro.eigls.eigen.EigResult`.
+    """
+    from repro.eigls import eigen
+    kw = {} if dtype is None else {"dtype": dtype}
+    return eigen.eigsolve(a, k, which=which, method=method, mesh=mesh,
+                          backend=backend, ncv=ncv, v0=v0, tol=tol, n=n,
+                          **kw)

@@ -92,6 +92,49 @@ def pad_system_spmd(a: jax.Array, block_size: int, nprocs: int
     return a, nb, n_pad
 
 
+def pad_rect(a: jax.Array, block_size: int
+             ) -> tuple[jax.Array, int, int, int]:
+    """Rectangular pad policy for the least-squares (QR) path: pad rows
+    and columns *independently* up to block multiples.  Returns
+    ``(a_padded, nb, m_padded, n_padded)``.
+
+    The pad is the rectangular generalization of :func:`pad_system`'s
+    identity extension: ``[[A, 0], [0, E]]`` with ``E = [I; 0]`` holding
+    one unit column per pad column, each on its own pad row (rows are
+    padded far enough to host them, so ``m_padded`` may exceed the next
+    block multiple of ``m`` when ``n`` needs more pad than ``m``).  The
+    padded matrix keeps full column rank, its R factor is block-diagonal
+    ``[[R, 0], [0, ±I]]``, and a zero-padded right-hand side solves to
+    exact zeros in the pad components — the leading ``n`` solution
+    components are unchanged.  Only genuinely impossible requests raise:
+    ``block_size < 1``, or an underdetermined ``m < n`` (this path is
+    least squares; transpose and use ``matvec_t``-based methods for
+    minimum-norm problems).
+    """
+    if a.ndim != 2:
+        raise ValueError(f"expected a 2-D (m, n) matrix, got {a.shape}")
+    m, n = a.shape
+    if m < n:
+        raise ValueError(
+            f"underdetermined system {a.shape} (m < n): the QR/LSQR path "
+            "solves least squares for m >= n; solve the transposed system "
+            "for the minimum-norm solution")
+    nb = choose_block(n, block_size)
+    n_pad = padded_size(n, nb)
+    # rows must gain at least one pad row per pad column (to host E's
+    # unit entries); bump by whole blocks until they do
+    m_pad = padded_size(m, nb)
+    while m_pad - m < n_pad - n:
+        m_pad += nb
+    if (m_pad, n_pad) != (m, n):
+        a = jnp.pad(a, ((0, m_pad - m), (0, n_pad - n)))
+        pad_cols = n_pad - n
+        if pad_cols:
+            a = a.at[m + jnp.arange(pad_cols), n + jnp.arange(pad_cols)] \
+                 .set(jnp.ones((pad_cols,), a.dtype))
+    return a, nb, m_pad, n_pad
+
+
 def pad_rhs(b: jax.Array, n_padded: int) -> jax.Array:
     """Zero-pad the leading axis of a right-hand side up to ``n_padded``."""
     pad = n_padded - b.shape[0]

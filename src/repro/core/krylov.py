@@ -246,10 +246,79 @@ def bicgstab(op: LinearOperator | Callable, b: jax.Array,
 
 
 # --------------------------------------------------------------------------
+# Arnoldi process — the shared core of GMRES and of the eigenvalue
+# subsystem's Arnoldi/Lanczos drivers (repro.eigls.eigen): CGS2
+# re-orthogonalized Gram-Schmidt expressed as fixed-shape masked updates.
+# The basis Gram products go through ``op.dotm`` so the same code runs on
+# every engine (basis rows are block-row local on the explicit-SPMD one).
+# --------------------------------------------------------------------------
+
+def arnoldi_process(op: LinearOperator, v0: jax.Array, m: int, *,
+                    apply: Callable | None = None):
+    """Run ``m`` Arnoldi steps from the unit vector ``v0``.
+
+    Returns ``(basis, hmat)`` with ``basis`` the (m+1, n) orthonormal
+    Krylov basis and ``hmat`` the (m+1, m) upper-Hessenberg projection
+    ``A V_m = V_{m+1} H``.  ``apply`` composes a (right) preconditioner
+    into the operator (GMRES's M⁻¹).  Fixed shapes throughout — columns
+    beyond the current step contribute exact zeros — so the loop jits
+    once for the production mesh.
+    """
+    n = v0.shape[0]
+    tiny = jnp.asarray(1e-30, v0.dtype)
+    ap = apply if apply is not None else (lambda v: v)
+    basis = jnp.zeros((m + 1, n), v0.dtype).at[0].set(v0)
+    hmat = jnp.zeros((m + 1, m), v0.dtype)
+
+    def step(j, c):
+        basis, hmat = c
+        vj = basis[j]
+        w = op.matvec(ap(vj))
+        scale = op.norm(w)
+        # modified Gram-Schmidt as two masked full-basis passes
+        # (classical-with-reorth would also be fine; masked-MGS keeps
+        #  fixed shapes: columns > j contribute zero)
+        mask = (jnp.arange(m + 1) <= j).astype(w.dtype)
+        for _ in range(2):                      # CGS2: re-orthogonalize
+            h = op.dotm(basis, w) * mask        # (m+1,)
+            w = w - basis.T @ h
+            hmat = hmat.at[:, j].add(h)
+        hnorm = op.norm(w)
+        # lucky breakdown: A vj ∈ span(basis) — the Krylov space closed.
+        # Normalizing the leftover rounding noise would poison every
+        # later step (the basis loses orthogonality and H picks up
+        # garbage far outside the spectrum), so record β = 0 (H/T
+        # decouples exactly there) and continue with a fresh
+        # deterministic direction orthogonalized into the complement:
+        # GMRES keeps its least-squares solution (the extra block never
+        # mixes with e₁), and the eigensolvers harvest genuine Ritz
+        # pairs from the rest of the space — including the other members
+        # of multiple eigenvalues a single Krylov sequence cannot see.
+        brk = hnorm <= 100 * jnp.finfo(w.dtype).eps * scale
+
+        def continuation(_):
+            # rare path, under lax.cond so the common path pays nothing;
+            # brk derives from the globally-reduced hnorm, so every rank
+            # takes the same branch and the dotm collectives stay lockstep
+            f = jax.random.normal(
+                jax.random.fold_in(jax.random.key(7), j), w.shape, w.dtype)
+            for _ in range(2):
+                f = f - basis.T @ (op.dotm(basis, f) * mask)
+            return f / jnp.maximum(op.norm(f), tiny)
+
+        vnext = jax.lax.cond(
+            brk, continuation,
+            lambda _: w / jnp.maximum(hnorm, tiny), None)
+        hmat = hmat.at[j + 1, j].set(jnp.where(brk, 0, hnorm))
+        basis = basis.at[j + 1].set(vnext)
+        return basis, hmat
+
+    return jax.lax.fori_loop(0, m, step, (basis, hmat))
+
+
+# --------------------------------------------------------------------------
 # GMRES(m) with restarts (paper §2, Saad 1996) — right-preconditioned,
-# modified Gram-Schmidt expressed as fixed-shape masked updates.  The basis
-# Gram products go through ``op.dotm`` so the same code runs on the
-# explicit-SPMD engine (basis rows are block-row local there).
+# built on the shared Arnoldi core above.
 # --------------------------------------------------------------------------
 
 def gmres(op: LinearOperator | Callable, b: jax.Array,
@@ -261,7 +330,6 @@ def gmres(op: LinearOperator | Callable, b: jax.Array,
     m_apply = precond if precond is not None else (lambda v: v)
     x0, atol = _setup(op, b, x0)
     atol = tol * atol
-    n = b.shape[0]
     m = restart
     tiny = jnp.asarray(1e-30, b.dtype)
 
@@ -269,27 +337,7 @@ def gmres(op: LinearOperator | Callable, b: jax.Array,
         r = b - op.matvec(x)
         beta = op.norm(r)
         v0 = r / jnp.maximum(beta, tiny)
-        basis = jnp.zeros((m + 1, n), b.dtype).at[0].set(v0)
-        hmat = jnp.zeros((m + 1, m), b.dtype)
-
-        def arnoldi(j, c):
-            basis, hmat = c
-            vj = basis[j]
-            w = op.matvec(m_apply(vj))
-            # modified Gram-Schmidt as two masked full-basis passes
-            # (classical-with-reorth would also be fine; masked-MGS keeps
-            #  fixed shapes: columns > j contribute zero)
-            mask = (jnp.arange(m + 1) <= j).astype(w.dtype)
-            for _ in range(2):                      # CGS2: re-orthogonalize
-                h = op.dotm(basis, w) * mask        # (m+1,)
-                w = w - basis.T @ h
-                hmat = hmat.at[:, j].add(h)
-            hnorm = op.norm(w)
-            hmat = hmat.at[j + 1, j].set(hnorm)
-            basis = basis.at[j + 1].set(w / jnp.maximum(hnorm, tiny))
-            return basis, hmat
-
-        basis, hmat = jax.lax.fori_loop(0, m, arnoldi, (basis, hmat))
+        basis, hmat = arnoldi_process(op, v0, m, apply=m_apply)
         # least squares: min || beta*e1 - H y ||
         e1 = jnp.zeros((m + 1,), b.dtype).at[0].set(beta)
         y = jnp.linalg.lstsq(hmat, e1)[0]
@@ -309,3 +357,141 @@ def gmres(op: LinearOperator | Callable, b: jax.Array,
     res0 = op.norm(b - op.matvec(x0))
     x, res, k = jax.lax.while_loop(cond, body, (x0, res0, 0))
     return SolveResult(x, k, res, res <= atol)
+
+
+# --------------------------------------------------------------------------
+# Iterative least squares: CGLS and LSQR.  Written once against the
+# operator primitive set like every other driver — they only need
+# ``matvec``/``matvec_t``, so the dense, sparse, batched and SPMD engines
+# all inherit them (fused Pallas ``axpy_pair`` included on the dense
+# engine).  ``x`` lives in the n-space and ``r`` in the m-space, so the
+# drivers never assume the two have the same length; convergence is on the
+# normal-equations residual ‖Aᵀr‖ ≤ tol·‖Aᵀb‖ (the quantity that goes to
+# zero at the least-squares solution even when ‖r‖ does not), and
+# ``SolveResult.residual`` reports ‖Aᵀr‖.
+# --------------------------------------------------------------------------
+
+def _ls_setup(op: LinearOperator, b, x0):
+    """(x0, r0, atol-reference ‖Aᵀb‖) for the least-squares drivers."""
+    sb = op.matvec_t(b)
+    x0 = jnp.zeros_like(sb) if x0 is None else x0
+    r0 = b - op.matvec(x0)
+    ref = op.norm(sb)
+    return x0, r0, jnp.where(ref == 0, jnp.ones_like(ref), ref)
+
+
+def cgls(op: LinearOperator | Callable, b: jax.Array,
+         x0: jax.Array | None = None, *, tol: float = 1e-6,
+         maxiter: int = 1000, precond: Callable | None = None,
+         matvec_t: Callable | None = None) -> SolveResult:
+    """CG on the normal equations AᵀA x = Aᵀb without forming AᵀA
+    (Björck); ``precond`` applies to the n-space normal-equations
+    residual (M ≈ (AᵀA)⁻¹)."""
+    op = as_operator(op, matvec_t=matvec_t)
+    m = precond
+    x0, r0, ref = _ls_setup(op, b, x0)
+    atol = tol * ref
+
+    s0 = op.matvec_t(r0)
+    z0 = s0 if m is None else m(s0)
+    p0 = z0
+    gamma0 = op.dot(s0, z0)
+    ss0 = gamma0 if m is None else op.dot(s0, s0)
+
+    # The normal equations square the conditioning, so in low precision
+    # CGLS hits its attainable-accuracy floor early and then DIVERGES
+    # (the classic CG instability past the floor).  Track the best
+    # iterate and cut off once ‖Aᵀr‖² has grown 100x past its best —
+    # the answer returned is always the best one seen.
+    blow = jnp.asarray(100.0, ss0.dtype)
+
+    def cond(c):
+        x, r, p, gamma, ss, xb, ssb, k = c
+        # gamma = 0 only via breakdown (⟨q, q⟩ or ⟨s, z⟩ vanished —
+        # solution reached or M indefinite); terminate instead of stalling
+        live = (jnp.sqrt(ss) > atol) & (jnp.abs(gamma) > 0) \
+            & (ss <= blow * ssb)
+        return op.reduce_any(live) & (k < maxiter)
+
+    def body(c):
+        x, r, p, gamma, ss, xb, ssb, k = c
+        q = op.matvec(p)
+        alpha = _safe_div(gamma, op.dot(q, q))
+        x, r = op.axpy_pair(x, p, r, q, alpha)      # fused when m == n
+        s = op.matvec_t(r)
+        z = s if m is None else m(s)
+        gamma_new = op.dot(s, z)
+        ss = gamma_new if m is None else op.dot(s, s)
+        improved = (ss < ssb).astype(x.dtype)
+        xb = xb + op.scale(improved, x - xb)
+        ssb = jnp.minimum(ss, ssb)
+        beta = _safe_div(gamma_new, gamma)
+        p = z + op.scale(beta, p)
+        return (x, r, p, gamma_new, ss, xb, ssb, k + 1)
+
+    out = jax.lax.while_loop(cond, body,
+                             (x0, r0, p0, gamma0, ss0, x0, ss0, 0))
+    xb, ssb, k = out[5], out[6], out[7]
+    res = jnp.sqrt(ssb)
+    return SolveResult(xb, k, res, res <= atol)
+
+
+def lsqr(op: LinearOperator | Callable, b: jax.Array,
+         x0: jax.Array | None = None, *, tol: float = 1e-6,
+         maxiter: int = 1000, precond: Callable | None = None,
+         matvec_t: Callable | None = None) -> SolveResult:
+    """LSQR (Paige & Saunders 1982): Golub-Kahan bidiagonalization with
+    the QR factors updated by Givens rotations — analytically equivalent
+    to CGLS but numerically more reliable on ill-conditioned systems."""
+    if precond is not None:
+        raise ValueError("lsqr is unpreconditioned (the bidiagonalization "
+                         "has no symmetric place to put M); use method="
+                         "'cgls', whose preconditioner acts on the normal "
+                         "equations")
+    op = as_operator(op, matvec_t=matvec_t)
+    x0, r0, ref = _ls_setup(op, b, x0)
+    atol = tol * ref
+
+    beta0 = op.norm(r0)
+    u0 = op.scale(_safe_div(jnp.ones_like(beta0), beta0), r0)
+    av = op.matvec_t(u0)
+    alfa0 = op.norm(av)
+    v0 = op.scale(_safe_div(jnp.ones_like(alfa0), alfa0), av)
+    arnorm0 = alfa0 * beta0                    # ‖Aᵀr₀‖ exactly at x₀
+
+    def cond(c):
+        x, w, u, v, alfa, phibar, rhobar, arnorm, k = c
+        return op.reduce_any(arnorm > atol) & (k < maxiter)
+
+    def body(c):
+        x, w, u, v, alfa, phibar, rhobar, arnorm, k = c
+        # -- continue the bidiagonalization --------------------------------
+        u = op.matvec(v) - op.scale(alfa, u)
+        beta = op.norm(u)
+        u = op.scale(_safe_div(jnp.ones_like(beta), beta), u)
+        v_new = op.matvec_t(u) - op.scale(beta, v)
+        alfa_new = op.norm(v_new)
+        v_new = op.scale(_safe_div(jnp.ones_like(alfa_new), alfa_new), v_new)
+        # -- Givens rotation on the lower-bidiagonal R ---------------------
+        rho = jnp.sqrt(rhobar * rhobar + beta * beta)
+        cs = _safe_div(rhobar, rho)
+        sn = _safe_div(beta, rho)
+        theta = sn * alfa_new
+        rhobar_new = -cs * alfa_new
+        phi = cs * phibar
+        phibar_new = sn * phibar
+        # -- solution / direction update -----------------------------------
+        x = x + op.scale(_safe_div(phi, rho), w)
+        w = v_new - op.scale(_safe_div(theta, rho), w)
+        # ‖Aᵀr_k‖ = φ̄_{k+1} α_{k+1} |c_k|; exact breakdown (β or α hit
+        # zero — solution reached) reports as converged
+        arnorm = phibar_new * alfa_new * jnp.abs(cs)
+        arnorm = jnp.where((beta == 0) | (alfa_new == 0),
+                           jnp.zeros_like(arnorm), arnorm)
+        return (x, w, u, v_new, alfa_new, phibar_new, rhobar_new,
+                arnorm, k + 1)
+
+    out = jax.lax.while_loop(
+        cond, body, (x0, v0, u0, v0, alfa0, beta0, alfa0, arnorm0, 0))
+    x, arnorm, k = out[0], out[7], out[8]
+    return SolveResult(x, k, arnorm, arnorm <= atol)

@@ -91,6 +91,14 @@ class LinearOperator:
         rn = r - self.scale(alpha, ap)
         return xn, rn, self.dot(rn, rn)
 
+    def axpy_pair(self, x, p, r, q, alpha):
+        """(x + αp, r − αq) — the paired axpys of the least-squares
+        iterations (CGLS).  ``x``/``p`` live in the solution space and
+        ``r``/``q`` in the residual space, so unlike :meth:`update` the
+        two pairs may have different lengths; engines fuse the pass when
+        the shapes allow."""
+        return x + self.scale(alpha, p), r - self.scale(alpha, q)
+
     def pipelined_dots(self, r, u, w):
         """(⟨r,u⟩, ⟨w,u⟩, ⟨r,r⟩) — the single fused reduction of pipelined
         CG (Chronopoulos–Gear); one pass / one synchronization."""
@@ -153,6 +161,15 @@ class DenseOperator(LinearOperator):
             from repro.kernels import krylov_fused
             return krylov_fused.fused_pipelined_dots_auto(r, u, w)
         return super().pipelined_dots(r, u, w)
+
+    def axpy_pair(self, x, p, r, q, alpha):
+        # one fused memory pass when both pairs share a shape (square
+        # systems); the rectangular case falls back to two jnp axpys
+        if self._fusable(x) and x.shape == r.shape:
+            from repro.kernels import krylov_fused
+            xn, rn, _ = krylov_fused.fused_cg_update_auto(x, r, p, q, alpha)
+            return xn, rn
+        return super().axpy_pair(x, p, r, q, alpha)
 
 
 def as_operator(op, *, matvec_t: Callable | None = None) -> LinearOperator:

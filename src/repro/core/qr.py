@@ -1,0 +1,277 @@
+"""Blocked Householder QR factorization and least-squares solve.
+
+This is the rectangular member of the direct-method family: the same
+fixed-shape ``lax.fori_loop`` block stepping as :mod:`repro.core.lu` /
+:mod:`repro.core.cholesky` (masked panel + rank-``nb`` trailing update —
+ScaLAPACK-style static windows, O(1) trace/compile cost in the matrix
+size), applied to ``min ||b - A x||`` for ``A`` of shape (m, n), m >= n.
+
+Per block step:
+
+1. *panel* — Householder QR of the full (m, nb) column block, masked to
+   the active rows (``_panel_qr``): LAPACK ``geqrf`` packing, R on and
+   above the diagonal, the Householder vectors' tails below it, unit v1
+   implicit, one ``tau`` per column;
+2. *T matrix* — the compact-WY triangular factor of the panel's product
+   of reflectors (LAPACK ``larft``): ``Q_panel = I - V T Vᵀ``;
+3. *trailing update* — the Level-3 hot spot ``A ← (I - V Tᵀ Vᵀ) A``
+   applied to the columns right of the panel, as two rank-``nb`` GEMMs
+   (``W = Vᵀ A``; ``A -= V (Tᵀ W)``).  ``backend="pallas"`` runs it as ONE
+   fused kernel launch (:mod:`repro.kernels.qr_fused`); with
+   ``fuse_panel=False`` it composes :func:`repro.kernels.gemm.matmul`
+   calls instead.
+
+``m % nb`` / ``n % nb`` go through the shared rectangular pad policy
+(:func:`repro.core.blocking.pad_rect`): pads are exact, pad solution
+components are zero and sliced away.
+
+The factor state keeps the packed matrix, the taus, and the per-panel T
+matrices, so ``qr_apply`` (the registry ``apply``) is two passes: apply
+``Qᵀ`` panel by panel (same fori_loop shape), then one blocked triangular
+solve with R (:func:`repro.core.triangular.solve_upper_blocked`, which is
+itself Pallas-backed under ``backend="pallas"``).  Batched (B, m, n)
+systems vmap the whole factorization — fixed shapes make that free.
+
+Distribution: the communication-avoiding distributed factorization is
+TSQR (:mod:`repro.eigls.tsqr`), registered as the method's
+``spmd_factor``/``spmd_apply`` pair — ``qr_factor`` itself is
+single-device and says so when handed a mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import blocking
+
+
+def _panel_qr(pan: jax.Array, k) -> tuple[jax.Array, jax.Array]:
+    """Householder QR of the full (m, nb) column block.
+
+    Rows below the (possibly traced) step offset ``k`` are active; rows
+    above hold R history and pass through untouched.  Returns the packed
+    block (R on/above the diagonal rows ``k + j``, Householder tails
+    below, v1 = 1 implicit) and the (nb,) taus.
+    """
+    m, nb = pan.shape
+    rows = jnp.arange(m)
+    cols = jnp.arange(nb)
+
+    def col_step(j, carry):
+        pan, taus = carry
+        g = k + j                       # global diagonal row of column j
+        col = pan[:, j]
+        # -- Householder vector of the active tail col[g:] -----------------
+        x1 = col[g]
+        xnorm2 = jnp.sum(jnp.where(rows >= g, col * col, 0))
+        xnorm = jnp.sqrt(xnorm2)
+        sign = jnp.where(x1 >= 0, jnp.asarray(1, pan.dtype),
+                         jnp.asarray(-1, pan.dtype))
+        beta = -sign * xnorm            # R diagonal entry
+        denom = x1 - beta               # v1 before normalization
+        degenerate = xnorm == 0         # zero column: H = I, tau = 0
+        safe = jnp.where(degenerate, jnp.asarray(1, pan.dtype), denom)
+        v = jnp.where(rows > g, col / safe, 0)
+        v = v.at[g].set(jnp.where(degenerate, 0, 1).astype(pan.dtype))
+        tau = jnp.where(degenerate, 0, (beta - x1) / beta).astype(pan.dtype)
+        taus = taus.at[j].set(tau)
+        # -- apply H = I - tau v vᵀ to the panel's trailing columns --------
+        w = v @ pan                     # (nb,) row of projections
+        upd = jnp.outer(tau * v, jnp.where(cols > j, w, 0))
+        pan = pan - upd
+        # -- store: beta on the diagonal, the v tail below it --------------
+        newcol = jnp.where(rows > g, v, col).at[g].set(
+            jnp.where(degenerate, x1, beta))
+        pan = pan.at[:, j].set(newcol.astype(pan.dtype))
+        return pan, taus
+
+    return jax.lax.fori_loop(0, nb, col_step,
+                             (pan, jnp.zeros((nb,), pan.dtype)))
+
+
+def _panel_v(pan: jax.Array, k, nb: int) -> jax.Array:
+    """The (m, nb) V of a packed panel: unit diagonal at row ``k + j``,
+    stored tail below, zeros above (masked — ``k`` may be traced)."""
+    m = pan.shape[0]
+    rows = jnp.arange(m)[:, None]
+    diag = k + jnp.arange(nb)[None, :]
+    return jnp.where(rows > diag, pan, 0) + (rows == diag).astype(pan.dtype)
+
+
+def _form_t(v: jax.Array, taus: jax.Array) -> jax.Array:
+    """Compact-WY triangular factor (LAPACK ``larft``): upper-triangular
+    T with ``Q = H_1 ... H_nb = I - V T Vᵀ``."""
+    nb = taus.shape[0]
+    gram = v.T @ v                                        # (nb, nb)
+
+    def step(j, t):
+        col = -taus[j] * (t @ gram[:, j])
+        col = jnp.where(jnp.arange(nb) < j, col, 0)
+        return t.at[:, j].set(col).at[j, j].set(taus[j])
+
+    return jax.lax.fori_loop(0, nb, step, jnp.zeros_like(gram))
+
+
+@dataclasses.dataclass(frozen=True)
+class QrState:
+    """Factor state: LAPACK-style packed QR of the padded system plus the
+    taus and per-panel compact-WY T matrices.  ``m0``/``n0`` are the
+    logical shape; the packed arrays cover the padded one."""
+    qr: jax.Array        # (m_pad, n_pad) packed R / Householder tails
+    taus: jax.Array      # (n_pad,)
+    tmats: jax.Array     # (n_pad // nb, nb, nb)
+    m0: int
+    n0: int
+    nb: int
+
+
+# arrays are leaves, the static shape metadata is aux — so a QrState can
+# cross jit boundaries and be vmapped (the batched direct path)
+jax.tree_util.register_pytree_node(
+    QrState,
+    lambda s: ((s.qr, s.taus, s.tmats), (s.m0, s.n0, s.nb)),
+    lambda aux, ch: QrState(*ch, *aux))
+
+
+def qr_factor(a: jax.Array, *, block_size: int = 128, mesh=None,
+              backend: str = "ref", fuse_panel: bool = True) -> QrState:
+    """Blocked Householder QR of an (m, n) matrix, m >= n."""
+    if mesh is not None:
+        raise ValueError("qr_factor is single-device; the distributed "
+                         "factorization is TSQR — use engine='spmd' "
+                         "(repro.eigls.tsqr)")
+    blocking.check_backend(backend, mesh)
+    backend = blocking.effective_backend(backend, a.dtype)
+    a, nb, m, n = blocking.pad_rect(a, block_size)
+    cols = jnp.arange(n)[None, :]
+    if backend == "pallas":
+        from repro.kernels import gemm, qr_fused
+        from repro.kernels.krylov_fused import _auto_interpret
+        interp = _auto_interpret(None)
+
+    def step(s, carry):
+        a, taus_all, tmats = carry
+        k = s * nb
+        # ---- panel: Householder QR of the column block -------------------
+        colblk = jax.lax.dynamic_slice(a, (0, k), (m, nb))
+        pan, taus = _panel_qr(colblk, k)
+        a = jax.lax.dynamic_update_slice(a, pan.astype(a.dtype), (0, k))
+        v = _panel_v(pan, k, nb)
+        t = _form_t(v, taus)
+        # ---- rank-nb trailing update: A ← (I - V Tᵀ Vᵀ) A ---------------
+        if backend == "pallas" and fuse_panel:
+            a = qr_fused.qr_panel_update(a, v, t, k, nb=nb, interpret=interp)
+        else:
+            if backend == "pallas":
+                w = gemm.matmul(v.T, a, bm=nb, bn=nb, bk=nb,
+                                interpret=interp)
+                upd = gemm.matmul(v, gemm.matmul(t.T, w, bm=nb, bn=nb,
+                                                 bk=nb, interpret=interp),
+                                  bm=nb, bn=nb, bk=nb, interpret=interp)
+            else:
+                w = v.T @ a
+                upd = v @ (t.T @ w)
+            a = jnp.where(cols >= k + nb, a - upd.astype(a.dtype), a)
+        taus_all = jax.lax.dynamic_update_slice(taus_all,
+                                                taus.astype(a.dtype), (k,))
+        tmats = jax.lax.dynamic_update_slice(
+            tmats, t.astype(a.dtype)[None], (s, 0, 0))
+        return a, taus_all, tmats
+
+    a, taus_all, tmats = jax.lax.fori_loop(
+        0, n // nb, step,
+        (a, jnp.zeros((n,), a.dtype), jnp.zeros((n // nb, nb, nb), a.dtype)))
+    return QrState(a, taus_all, tmats, m0=-1, n0=-1, nb=nb)
+
+
+def _with_shape(state: QrState, m0: int, n0: int) -> QrState:
+    return dataclasses.replace(state, m0=m0, n0=n0)
+
+
+def qr_factor_state(a: jax.Array, *, block_size: int = 128, mesh=None,
+                    backend: str = "ref") -> QrState:
+    """Registry ``factor`` entry — records the logical shape on the state."""
+    m0, n0 = a.shape
+    return _with_shape(qr_factor(a, block_size=block_size, mesh=mesh,
+                                 backend=backend), m0, n0)
+
+
+def apply_qt(state: QrState, b: jax.Array) -> jax.Array:
+    """y = Qᵀ b for a (m_pad,) / (m_pad, k) padded right-hand side —
+    panels applied first-to-last, each as two skinny GEMMs."""
+    m, n = state.qr.shape
+    nb = state.nb
+    bv, vec = (b[:, None], True) if b.ndim == 1 else (b, False)
+
+    def step(s, y):
+        k = s * nb
+        pan = jax.lax.dynamic_slice(state.qr, (0, k), (m, nb))
+        v = _panel_v(pan, k, nb)
+        t = jax.lax.dynamic_slice(state.tmats, (s, 0, 0), (1, nb, nb))[0]
+        return y - (v @ (t.T @ (v.T @ y))).astype(y.dtype)
+
+    y = jax.lax.fori_loop(0, n // nb, step, bv)
+    return y[:, 0] if vec else y
+
+
+def apply_q(state: QrState, y: jax.Array) -> jax.Array:
+    """x = Q y (panels applied last-to-first) — Q reconstitution."""
+    m, n = state.qr.shape
+    nb = state.nb
+    yv, vec = (y[:, None], True) if y.ndim == 1 else (y, False)
+    steps = n // nb
+
+    def step(s, x):
+        k = (steps - 1 - s) * nb
+        pan = jax.lax.dynamic_slice(state.qr, (0, k), (m, nb))
+        v = _panel_v(pan, k, nb)
+        t = jax.lax.dynamic_slice(state.tmats,
+                                  (steps - 1 - s, 0, 0), (1, nb, nb))[0]
+        return x - (v @ (t @ (v.T @ x))).astype(x.dtype)
+
+    x = jax.lax.fori_loop(0, steps, step, yv)
+    return x[:, 0] if vec else x
+
+
+def qr_apply(state: QrState, b: jax.Array, *, block_size: int = 128,
+             mesh=None, backend: str = "ref") -> jax.Array:
+    """Registry ``apply``: least-squares solve min ||b - A x|| from a
+    :func:`qr_factor_state` factor — Qᵀ b, then the blocked R solve."""
+    from repro.core.triangular import solve_upper_blocked
+    m, n = state.qr.shape
+    n0 = state.n0 if state.n0 >= 0 else n
+    if state.m0 >= 0 and b.shape[0] != state.m0:
+        raise ValueError(f"rhs has {b.shape[0]} rows; this factor solves "
+                         f"an m = {state.m0} system")
+    bp = blocking.pad_rhs(b, m)
+    y = apply_qt(state, bp)
+    y = y[:n] if y.ndim == 1 else y[:n, :]
+    r = state.qr[:n, :]                  # R lives in the top (n, n) rows
+    x = solve_upper_blocked(r, y, block_size=state.nb, mesh=mesh,
+                            backend=backend)
+    return x[:n0] if x.ndim == 1 else x[:n0, :]
+
+
+def solve(a: jax.Array, b: jax.Array, block_size: int = 128, mesh=None,
+          backend: str = "ref") -> jax.Array:
+    """One-shot least-squares solve via blocked Householder QR."""
+    return qr_apply(qr_factor_state(a, block_size=block_size, mesh=mesh,
+                                    backend=backend), b,
+                    block_size=block_size, mesh=mesh, backend=backend)
+
+
+def reduced(a: jax.Array, *, block_size: int = 128, backend: str = "ref"
+            ) -> tuple[jax.Array, jax.Array]:
+    """Reduced (thin) QR: (m, n) -> Q (m, n), R (n, n), canonicalized to a
+    non-negative R diagonal — the deterministic form the TSQR parity and
+    ``jnp.linalg.qr`` comparison tests use."""
+    m0, n0 = a.shape
+    state = qr_factor_state(a, block_size=block_size, backend=backend)
+    m, n = state.qr.shape
+    eye = jnp.eye(m, n, dtype=state.qr.dtype)
+    q = apply_q(state, eye)[:m0, :n0]
+    r = jnp.triu(state.qr[:n, :])[:n0, :n0]
+    s = jnp.where(jnp.diagonal(r) < 0, -1, 1).astype(r.dtype)
+    return q * s[None, :], r * s[:, None]

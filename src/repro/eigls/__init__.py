@@ -1,0 +1,14 @@
+"""Least-squares & eigenvalue subsystem: distributed TSQR (the
+communication-avoiding factorization behind ``api.solve(..., method="qr",
+engine="spmd")``) and matrix-free Lanczos/Arnoldi eigensolvers on the
+unified operator engine (``api.eigsolve``).  The local blocked Householder
+QR lives in :mod:`repro.core.qr`; the iterative least-squares drivers
+(LSQR/CGLS) in :mod:`repro.core.krylov`."""
+from repro.eigls.eigen import (  # noqa: F401
+    EigResult, arnoldi, available_eig_methods, eigsolve, lanczos,
+    register_eig_method)
+# (the convenience `tsqr.tsqr(a, mesh)` factorization stays addressed
+# through the submodule so the module name keeps working)
+from repro.eigls.tsqr import (  # noqa: F401
+    TsqrState, tsqr_apply_spmd, tsqr_factor_spmd)
+from repro.eigls import tsqr  # noqa: F401

@@ -1,0 +1,217 @@
+"""Eigenvalue drivers: Lanczos (symmetric/SPD) and Arnoldi (general),
+matrix-free on the unified operator engine.
+
+Both are Rayleigh-Ritz extractions from a Krylov subspace built by the
+SAME Arnoldi core GMRES runs on (:func:`repro.core.krylov
+.arnoldi_process` — CGS2 re-orthogonalized, fixed shapes): on a symmetric
+operator the Hessenberg projection *is* tridiagonal and full
+re-orthogonalization is exactly the "Lanczos with reorthogonalization"
+of the classic sparse-eigensolver literature, so the symmetric driver
+reads its α/β off the Hessenberg matrix and solves the small tridiagonal
+eigenproblem, while the general driver takes the small Hessenberg
+eigenproblem as-is.
+
+Everything is written against the :class:`~repro.core.operator
+.LinearOperator` primitive set, so the drivers run matrix-free on dense
+arrays, BSR/ELL sparse matrices (``backend="pallas"`` streams the SpMV
+kernel), bare ``matvec`` callables, and GSPMD-sharded operators — the
+method registry mirrors ``api.solve`` and is what
+:func:`repro.core.api.eigsolve` dispatches on.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import krylov
+from repro.core.operator import LinearOperator, as_operator, make_operator
+
+
+class EigResult(NamedTuple):
+    eigenvalues: jax.Array     # (k,) — ordered per ``which``
+    eigenvectors: jax.Array    # (n, k) Ritz vectors (columns)
+    iterations: jax.Array      # Krylov steps taken (= ncv)
+    residuals: jax.Array       # (k,) ‖A x − λ x‖ Ritz residual estimates
+    converged: jax.Array       # (k,) residuals <= tol * max(|λ|, 1)
+
+
+_WHICH_SYM = ("LA", "SA", "LM", "SM", "BE")
+_WHICH_GEN = ("LM", "SM", "LR", "SR")
+
+
+def _select(evals, k: int, which: str, *, general: bool):
+    """Indices of the k requested Ritz values (static k; traced values)."""
+    allowed = _WHICH_GEN if general else _WHICH_SYM
+    if which not in allowed:
+        raise ValueError(f"unknown which={which!r}; expected one of "
+                         f"{allowed}")
+    if which == "LM":
+        key = -jnp.abs(evals)
+    elif which == "SM":
+        key = jnp.abs(evals)
+    elif which in ("LA", "LR"):
+        key = -(evals.real if general else evals)
+    elif which in ("SA", "SR"):
+        key = evals.real if general else evals
+    else:                                   # BE: both ends, largest first
+        order = jnp.argsort(evals)
+        lo, hi = k // 2, k - k // 2
+        return jnp.concatenate([order[::-1][:hi], order[:lo]])
+    return jnp.argsort(key)[:k]
+
+
+def _start_vector(op: LinearOperator, n: int, dtype, v0):
+    if v0 is None:
+        # deterministic pseudo-random start: full-spectrum overlap without
+        # the accidental orthogonality a constant vector has to the
+        # oscillatory extreme modes of stencil operators
+        v0 = jax.random.normal(jax.random.key(0), (n,), dtype)
+    nrm = op.norm(v0)
+    return v0 / jnp.where(nrm == 0, jnp.ones_like(nrm), nrm)
+
+
+def _ncv(n: int, k: int, ncv) -> int:
+    if ncv is None:
+        ncv = max(4 * k, 32)
+    ncv = min(ncv, n)
+    if not k <= ncv:
+        raise ValueError(f"need k={k} <= ncv={ncv} <= n={n}")
+    return ncv
+
+
+def lanczos(op: LinearOperator | Callable, n: int | None = None, *,
+            k: int = 6, which: str = "LA", ncv: int | None = None,
+            v0: jax.Array | None = None, tol: float = 1e-8,
+            dtype=jnp.float32) -> EigResult:
+    """Extreme eigenpairs of a symmetric (SPD in the paper's workloads)
+    operator by Lanczos with full re-orthogonalization.
+
+    ``op`` may be a LinearOperator, a matrix, or a bare matvec callable
+    (pass ``n``/``dtype`` for callables; otherwise inferred).  ``ncv`` is
+    the Krylov subspace dimension — clustered extreme spectra (stencil
+    operators) want ``ncv >> k``.
+    """
+    op, n, dtype = _as_eig_operator(op, n, dtype, v0)
+    m = _ncv(n, k, ncv)
+    v0 = _start_vector(op, n, dtype, v0)
+    basis, hmat = krylov.arnoldi_process(op, v0, m)
+    # symmetric: H is tridiagonal up to rounding — read α/β off it and
+    # solve the small symmetric tridiagonal eigenproblem
+    alphas = jnp.diagonal(hmat[:m, :m])
+    betas = jnp.diagonal(hmat[1:m + 1, :m])            # β_m = restart bound
+    t = jnp.diag(alphas) + jnp.diag(betas[:m - 1], 1) \
+        + jnp.diag(betas[:m - 1], -1)
+    evals, evecs = jnp.linalg.eigh(t)
+    idx = _select(evals, k, which, general=False)
+    w = evals[idx]
+    y = evecs[:, idx]                                  # (m, k)
+    x = basis[:m].T @ y                                # Ritz vectors (n, k)
+    res = jnp.abs(betas[m - 1] * y[m - 1, :])          # classic bound
+    return EigResult(w, x, jnp.asarray(m), res,
+                     res <= tol * jnp.maximum(jnp.abs(w), 1.0))
+
+
+def arnoldi(op: LinearOperator | Callable, n: int | None = None, *,
+            k: int = 6, which: str = "LM", ncv: int | None = None,
+            v0: jax.Array | None = None, tol: float = 1e-8,
+            dtype=jnp.float32) -> EigResult:
+    """Eigenpairs of a general operator by Arnoldi (the GMRES core) +
+    the small Hessenberg eigenproblem.  Eigenvalues/vectors are complex;
+    the small dense ``eig`` runs on CPU (JAX's eig support)."""
+    op, n, dtype = _as_eig_operator(op, n, dtype, v0)
+    m = _ncv(n, k, ncv)
+    v0 = _start_vector(op, n, dtype, v0)
+    basis, hmat = krylov.arnoldi_process(op, v0, m)
+    evals, evecs = jnp.linalg.eig(hmat[:m, :m])
+    idx = _select(evals, k, which, general=True)
+    w = evals[idx]
+    y = evecs[:, idx]
+    x = basis[:m].T.astype(y.dtype) @ y
+    res = jnp.abs(hmat[m, m - 1] * y[m - 1, :])
+    return EigResult(w, x, jnp.asarray(m), res,
+                     res <= tol * jnp.maximum(jnp.abs(w), 1.0))
+
+
+def _as_eig_operator(op, n, dtype, v0):
+    """Normalize the operator input and recover (n, dtype)."""
+    if isinstance(op, LinearOperator) or callable(op) \
+            and not hasattr(op, "shape"):
+        op = as_operator(op)
+        a = getattr(op, "a", None)
+        sp = getattr(op, "sparse", None)
+        shaped = sp if sp is not None else a
+        if shaped is not None:
+            n, dtype = shaped.shape[0], shaped.dtype
+        elif v0 is not None:
+            n, dtype = v0.shape[0], v0.dtype
+        elif n is None:
+            raise ValueError("matrix-free eigensolve on a bare callable "
+                             "needs n= (and dtype=) or an explicit v0=")
+        return op, n, dtype
+    # a matrix (dense or sparse): delegate engine choice to make_operator
+    if op.shape[-2] != op.shape[-1]:
+        raise ValueError(f"eigenproblems need a square operator, got "
+                         f"{op.shape}; rectangular spectra are singular "
+                         "values — factor with method='qr' instead")
+    return make_operator(op), op.shape[0], op.dtype
+
+
+# --------------------------------------------------------------------------
+# Method registry — mirrors repro.core.api's solver registry, and
+# api.eigsolve dispatches through it.
+# --------------------------------------------------------------------------
+
+_EIG_REGISTRY: dict[str, Callable] = {}
+
+
+def register_eig_method(name: str, fn: Callable) -> None:
+    """Register an eigensolver driver ``fn(op, n=None, *, k, which, ncv,
+    v0, tol, dtype) -> EigResult``.  Re-registering overwrites."""
+    _EIG_REGISTRY[name] = fn
+
+
+def available_eig_methods() -> tuple[str, ...]:
+    return tuple(sorted(_EIG_REGISTRY))
+
+
+register_eig_method("lanczos", lanczos)
+register_eig_method("arnoldi", arnoldi)
+
+
+def eigsolve(a, k: int = 6, *, which: str = "LA", method: str = "lanczos",
+             mesh=None, backend: str = "ref", ncv: int | None = None,
+             v0: jax.Array | None = None, tol: float = 1e-8,
+             n: int | None = None, dtype=jnp.float32) -> EigResult:
+    """Compute ``k`` eigenpairs of ``a`` (matrix, sparse matrix, operator
+    or matvec callable).  ``method="lanczos"`` for symmetric/SPD operators
+    (``which`` in {LA, SA, LM, SM, BE}), ``method="arnoldi"`` for general
+    ones ({LM, SM, LR, SR}).  ``mesh=`` runs the GSPMD-sharded engine;
+    ``backend="pallas"`` streams the fused kernels (SpMV for BSR).
+    """
+    try:
+        fn = _EIG_REGISTRY[method]
+    except KeyError:
+        raise ValueError(f"unknown eig method {method!r}; available: "
+                         f"{available_eig_methods()}") from None
+    if which == "LA" and method == "arnoldi":
+        which = "LR"                    # algebraic == real part, general
+    if hasattr(a, "shape") and not isinstance(a, LinearOperator) \
+            and not getattr(a, "is_sparse", False):
+        a = jnp.asarray(a)
+        if a.ndim != 2 or a.shape[0] != a.shape[1]:
+            raise ValueError(f"eigenproblems need a square (n, n) matrix, "
+                             f"got {a.shape}")
+        op = make_operator(a, mesh=mesh, backend=backend)
+        n, dtype = a.shape[0], a.dtype
+    elif getattr(a, "is_sparse", False):
+        if mesh is not None:
+            raise ValueError("distributed sparse eigensolves are not "
+                             "wired yet; drop mesh= (the matvec is "
+                             "already O(nnz))")
+        op = make_operator(a, backend=backend)
+        n, dtype = a.shape[0], a.dtype
+    else:
+        op = a                          # operator or callable: pass through
+    return fn(op, n, k=k, which=which, ncv=ncv, v0=v0, tol=tol, dtype=dtype)

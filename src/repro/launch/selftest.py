@@ -8,6 +8,8 @@ Covers on an 8-virtual-device mesh:
   1. distributed direct + iterative solvers vs the numpy oracle,
   2. explicit-SPMD (shard_map) solvers == GSPMD solvers, including the
      block-row-sharded sparse (BSR) engine,
+  2b. least squares & eigenvalues: distributed TSQR == local blocked QR,
+     LSQR on the sharded engine, Lanczos through the gspmd operator,
   3. SUMMA pgemm vs local matmul,
   4. sharded train step for one arch per family (loss decreases),
   5. int8 ring all-reduce == psum (within quantization tolerance),
@@ -112,6 +114,39 @@ def test_sparse(mesh):
           bool(r.converged) and np.allclose(r.x, ref, atol=1e-3))
 
 
+def test_eigls(mesh):
+    """Least-squares & eigenvalue cell: TSQR on the real (4, 2) mesh
+    (distributed factor == lstsq oracle) and Lanczos through the sharded
+    gspmd operator."""
+    from repro.core import qr
+    from repro.eigls import tsqr
+    from repro.sparse import problems
+    rng = np.random.default_rng(4)
+    m, n = 512, 32
+    a = rng.standard_normal((m, n)).astype(np.float32)
+    b = rng.standard_normal(m).astype(np.float32)
+    qd, rd = tsqr.tsqr(jnp.asarray(a), mesh)
+    ql, rl = qr.reduced(jnp.asarray(a), block_size=16)
+    check("tsqr == local blocked QR",
+          np.abs(np.asarray(qd) - np.asarray(ql)).max() <= 1e-4
+          and np.abs(np.asarray(rd) - np.asarray(rl)).max() <= 1e-3)
+    x = api.solve(jnp.asarray(a), jnp.asarray(b), method="qr",
+                  engine="spmd", mesh=mesh)
+    xo = np.linalg.lstsq(a, b, rcond=None)[0]
+    check("tsqr api solve == lstsq oracle",
+          np.abs(np.asarray(x) - xo).max() <= 1e-4)
+    x = api.solve(jnp.asarray(a), jnp.asarray(b), method="lsqr", mesh=mesh,
+                  tol=1e-6, maxiter=200)
+    check("lsqr on mesh == lstsq oracle",
+          np.abs(np.asarray(x) - xo).max() <= 1e-3)
+    pa = problems.poisson_2d(16)                   # n = 256, f32
+    res = api.eigsolve(jnp.asarray(pa), k=3, which="LA", ncv=100, mesh=mesh)
+    wtrue = np.linalg.eigvalsh(pa.astype(np.float64))[::-1][:3]
+    check("lanczos on mesh: 3 extreme eigenvalues",
+          np.abs(np.sort(np.asarray(res.eigenvalues))[::-1]
+                 - wtrue).max() <= 1e-3)
+
+
 def test_train(mesh):
     shape = ShapeConfig("tiny", 64, 8, "train")
     for arch in ("qwen3-1.7b", "dbrx-132b", "mamba2-780m", "hymba-1.5b",
@@ -185,6 +220,7 @@ def main():
     print(f"devices: {len(jax.devices())}", flush=True)
     test_solvers(mesh)
     test_sparse(mesh)
+    test_eigls(mesh)
     test_train(mesh)
     test_compression(mesh)
     test_checkpoint_elastic(mesh)

@@ -82,13 +82,14 @@ class _Static:
             and bool(np.array_equal(self.arr, other.arr)))
 
 
-def _as_concrete(a) -> np.ndarray:
+def _as_concrete(a, square: bool = True) -> np.ndarray:
     if isinstance(a, jax.core.Tracer):
         raise TypeError("from_dense needs a concrete matrix — the sparsity "
                         "pattern is static structure and cannot be traced")
     a = np.asarray(a)
-    if a.ndim != 2 or a.shape[0] != a.shape[1]:
-        raise ValueError(f"expected a square (n, n) matrix, got {a.shape}")
+    if a.ndim != 2 or (square and a.shape[0] != a.shape[1]):
+        want = "a square (n, n)" if square else "a 2-D (m, n)"
+        raise ValueError(f"expected {want} matrix, got {a.shape}")
     if not np.issubdtype(a.dtype, np.floating):
         raise ValueError(f"expected a floating dtype, got {a.dtype}")
     return a
@@ -107,9 +108,14 @@ class BSR(SparseMatrix):
         self.indptr = np.asarray(indptr, np.int32)
         self.shape = tuple(shape)
         self.nb = int(nb)
-        n = self.shape[0]
-        self.n_pad = blocking.padded_size(n, self.nb)
+        # rows and columns pad independently — rectangular (m, n) BSR is
+        # the least-squares operand (matvec: n-space -> m-space); for
+        # square matrices the two coincide and ``n_pad`` keeps its
+        # historical row meaning
+        self.n_pad = blocking.padded_size(self.shape[0], self.nb)
+        self.n_pad_cols = blocking.padded_size(self.shape[1], self.nb)
         self.nbr = self.n_pad // self.nb
+        self.nbc = self.n_pad_cols // self.nb
         if self.data.shape[1:] != (self.nb, self.nb):
             raise ValueError(f"bricks must be ({nb}, {nb}), got "
                              f"{self.data.shape[1:]}")
@@ -119,7 +125,7 @@ class BSR(SparseMatrix):
         if np.any(np.diff(self.indptr) < 0):
             raise ValueError("indptr must be non-decreasing")
         if self.indices.size and (self.indices.min() < 0
-                                  or self.indices.max() >= self.nbr):
+                                  or self.indices.max() >= self.nbc):
             raise ValueError("block-column indices out of range")
         # static per-entry block-row ids (segment ids of the reductions)
         self.row_ids = np.repeat(np.arange(self.nbr, dtype=np.int32),
@@ -145,7 +151,9 @@ class BSR(SparseMatrix):
         obj.shape = shape
         obj.nb = nb
         obj.n_pad = blocking.padded_size(shape[0], nb)
+        obj.n_pad_cols = blocking.padded_size(shape[1], nb)
         obj.nbr = obj.n_pad // nb
+        obj.nbc = obj.n_pad_cols // nb
         obj.row_ids = np.repeat(np.arange(obj.nbr, dtype=np.int32),
                                 np.diff(obj.indptr))
         obj._layout = None
@@ -158,43 +166,55 @@ class BSR(SparseMatrix):
         """Convert a concrete dense matrix; bricks that are entirely zero
         are dropped (diagonal bricks are always kept so the preconditioner
         extractions are well defined).  ``n % nb`` is handled by the shared
-        identity-pad policy of :mod:`repro.core.blocking`."""
-        a = _as_concrete(a)
-        n = a.shape[0]
-        nb = blocking.choose_block(n, block_size)
+        identity-pad policy of :mod:`repro.core.blocking`; rectangular
+        (m, n) matrices (the least-squares operands) pad rows and columns
+        independently with zeros — pads contribute nothing to ``A x`` /
+        ``Aᵀ x`` and the identity extension only exists for square
+        matrices, where it keeps solvability/SPD-ness."""
+        a = _as_concrete(a, square=False)
+        m, n = a.shape
+        square = m == n
+        nb = blocking.choose_block(min(m, n), block_size)
+        m_pad = blocking.padded_size(m, nb)
         n_pad = blocking.padded_size(n, nb)
-        if n_pad != n:            # [[A, 0], [0, I]] — blocking.pad_system
-            ap = np.zeros((n_pad, n_pad), a.dtype)
-            ap[:n, :n] = a
-            ap[range(n, n_pad), range(n, n_pad)] = 1
+        if (m_pad, n_pad) != (m, n):
+            ap = np.zeros((m_pad, n_pad), a.dtype)
+            ap[:m, :n] = a
+            if square:        # [[A, 0], [0, I]] — blocking.pad_system
+                ap[range(n, n_pad), range(n, n_pad)] = 1
             a = ap
-        k = n_pad // nb
-        bricks = a.reshape(k, nb, k, nb).transpose(0, 2, 1, 3)
+        kr, kc = m_pad // nb, n_pad // nb
+        bricks = a.reshape(kr, nb, kc, nb).transpose(0, 2, 1, 3)
         mask = np.abs(bricks).max(axis=(2, 3)) > 0
-        mask[np.arange(k), np.arange(k)] = True        # keep diagonal
+        kd = min(kr, kc)
+        mask[np.arange(kd), np.arange(kd)] = True      # keep diagonal
         rows, cols = np.nonzero(mask)                  # row-major order
-        indptr = np.zeros(k + 1, np.int64)
+        indptr = np.zeros(kr + 1, np.int64)
         np.add.at(indptr, rows + 1, 1)
         indptr = np.cumsum(indptr)
-        return cls(jnp.asarray(bricks[mask]), cols, indptr, (n, n), nb)
+        return cls(jnp.asarray(bricks[mask]), cols, indptr, (m, n), nb)
 
     def to_dense(self) -> jax.Array:
-        k = self.nbr
-        full = jnp.zeros((k, k, self.nb, self.nb), self.data.dtype)
+        full = jnp.zeros((self.nbr, self.nbc, self.nb, self.nb),
+                         self.data.dtype)
         full = full.at[self.row_ids, self.indices].set(self.data)
-        dense = full.transpose(0, 2, 1, 3).reshape(self.n_pad, self.n_pad)
+        dense = full.transpose(0, 2, 1, 3).reshape(self.n_pad,
+                                                   self.n_pad_cols)
         return dense[:self.shape[0], :self.shape[1]]
 
     # -- algebra (jnp reference; the oracle the Pallas kernel sweeps
     #    against) ----------------------------------------------------------
-    def _blocks(self, x):
-        """Zero-pad a global (n,) / (n, k) operand into (nbr, nb, k)."""
+    def _blocks(self, x, pad_to: int | None = None):
+        """Zero-pad a global column-space (n,) / (n, k) operand into
+        (nbc, nb, k) bricks (``pad_to`` overrides for row-space input)."""
+        pad_to = self.n_pad_cols if pad_to is None else pad_to
         xk = x[:, None] if x.ndim == 1 else x
-        xp = jnp.pad(xk, ((0, self.n_pad - xk.shape[0]), (0, 0)))
-        return xp.reshape(self.nbr, self.nb, xk.shape[1])
+        xp = jnp.pad(xk, ((0, pad_to - xk.shape[0]), (0, 0)))
+        return xp.reshape(pad_to // self.nb, self.nb, xk.shape[1])
 
-    def _unblocks(self, yb, x):
-        y = yb.reshape(self.n_pad, -1)[:self.shape[0]]
+    def _unblocks(self, yb, x, rows: int | None = None):
+        rows = self.shape[0] if rows is None else rows
+        y = yb.reshape(-1, yb.shape[-1])[:rows]
         return y[:, 0] if x.ndim == 1 else y
 
     def matvec(self, x) -> jax.Array:
@@ -207,23 +227,24 @@ class BSR(SparseMatrix):
         return self._unblocks(yb, x)
 
     def matvec_t(self, x) -> jax.Array:
-        """y = Aᵀ x — dual gather/scatter pattern."""
-        xb = self._blocks(x)
+        """y = Aᵀ x (x in the row space, result in the column space) —
+        dual gather/scatter pattern."""
+        xb = self._blocks(x, pad_to=self.n_pad)
         contrib = jnp.einsum("eij,eik->ejk", self.data, xb[self.row_ids])
         yb = jax.ops.segment_sum(contrib, self.indices,
-                                 num_segments=self.nbr)
-        return self._unblocks(yb, x)
+                                 num_segments=self.nbc)
+        return self._unblocks(yb, x, rows=self.shape[1])
 
     def transpose(self) -> "BSR":
         """Aᵀ with the same (static) machinery: permute bricks into
         col-major-becomes-row-major order and transpose each brick."""
         perm = np.lexsort((self.row_ids, self.indices))
         indices_t = self.row_ids[perm]
-        indptr_t = np.zeros(self.nbr + 1, np.int64)
+        indptr_t = np.zeros(self.nbc + 1, np.int64)
         np.add.at(indptr_t, self.indices + 1, 1)
         indptr_t = np.cumsum(indptr_t)
         return BSR(self.data[perm].transpose(0, 2, 1), indices_t, indptr_t,
-                   self.shape, self.nb)
+                   (self.shape[1], self.shape[0]), self.nb)
 
     @property
     def T(self) -> "BSR":

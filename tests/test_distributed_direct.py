@@ -242,7 +242,7 @@ def test_register_spmd_pair_validation():
 
 
 def test_spmd_methods_listed():
-    assert api._spmd_direct_methods() == ("cholesky", "lu")
+    assert api._spmd_direct_methods() == ("cholesky", "lu", "qr")
 
 
 # --------------------------------------------------------------------------

@@ -87,8 +87,11 @@ def test_bsr_is_a_pytree():
 
 
 def test_bsr_validation_errors():
-    with pytest.raises(ValueError, match="square"):
-        BSR.from_dense(np.ones((4, 6), np.float32))
+    # rectangular matrices are the least-squares operands (PR 5) — they
+    # round-trip; only the scalar-format/dtype/tracing rules still raise
+    rect = BSR.from_dense(np.ones((4, 6), np.float32), block_size=2)
+    np.testing.assert_array_equal(np.asarray(rect.to_dense()),
+                                  np.ones((4, 6), np.float32))
     with pytest.raises(ValueError, match="floating"):
         BSR.from_dense(np.ones((4, 4), np.int32))
     with pytest.raises(TypeError, match="concrete"):
