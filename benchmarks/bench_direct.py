@@ -10,9 +10,12 @@ Rows emitted:
   while the ``lax.fori_loop`` version is O(1) in ``n``,
 * ``--spmd``: block-cyclic distributed LU GFLOP/s vs host device count
   (1 → 8 virtual devices, one subprocess each — XLA fixes the device
-  count at first init).  On this one-CPU container the device scaling is
-  *emulation* (all "devices" share the silicon, so the curve shows
-  collective overhead, not speedup) — the same caveat as bench_scaling.
+  count at first init), each row carrying a ``scaling_efficiency``
+  field plus a ``lu_spmd_mono`` summary row (worst successive-ratio of
+  the curve) that ``check_regression`` gates against collapse.  On this
+  one-CPU container the device scaling is *emulation* (all "devices"
+  share the silicon, so the curve shows collective overhead, not
+  speedup) — the same caveat as bench_scaling.
 
 Standalone:  PYTHONPATH=src python -m benchmarks.bench_direct
 [--smoke|--spmd] (also the ``direct`` / ``direct_spmd`` sections of
@@ -190,10 +193,21 @@ print("RESULT " + json.dumps(
 """
 
 
-def run_spmd(device_counts=(1, 2, 4, 8), n=512, nb=64):
-    """GFLOP/s of the distributed LU factorization vs host device count."""
+def run_spmd(device_counts=(1, 2, 4, 8), n=1024, nb=64):
+    """GFLOP/s of the distributed LU factorization vs host device count.
+
+    Emits one gflops row per device count with a ``scaling_efficiency``
+    field (GFLOP/s at ndev / (ndev * GFLOP/s at 1), the strong-scaling
+    parallel efficiency) plus a ``lu_spmd_mono_n{n}`` summary row: the
+    worst GFLOP/s ratio between successive device counts.  The default
+    n is 1024 — large enough that the per-step panel broadcast is
+    amortized against the O(n^2 nb) trailing update, which is what a
+    strong-scaling measurement needs (at n=512 the curve measures
+    collective latency, not the factorization).
+    """
     src = os.path.join(os.path.dirname(__file__), "..", "src")
     flops = 2 / 3 * n ** 3
+    curve = []                      # (ndev, gflops) for the summary row
     for ndev in device_counts:
         code = _SPMD_CHILD % {"ndev": ndev, "n": n, "nb": nb,
                               "src": os.path.abspath(src)}
@@ -206,12 +220,24 @@ def run_spmd(device_counts=(1, 2, 4, 8), n=512, nb=64):
                  proc.stderr.strip()[-200:].replace(",", ";"))
             continue
         r = json.loads(line[0][len("RESULT "):])
+        gflops = flops / r["t_factor"] / 1e9
+        curve.append((ndev, gflops))
+        g1 = curve[0][1] if curve[0][0] == 1 else None
+        eff = (f" scaling_efficiency={gflops / (ndev * g1):.2f}"
+               if g1 else "")
         emit("direct_spmd", f"lu_spmd_factor_n{n}_ndev{ndev}",
-             round(flops / r["t_factor"] / 1e9, 2), "gflops",
-             f"wall={r['t_factor'] * 1e3:.1f}ms (CPU emulation)")
+             round(gflops, 2), "gflops",
+             f"wall={r['t_factor'] * 1e3:.1f}ms{eff} (CPU emulation)")
         emit("direct_spmd", f"lu_spmd_solve_n{n}_ndev{ndev}",
              round(r["t_solve"] * 1e3, 2), "ms",
              f"rel_res={r['res']:.1e} (CPU emulation)")
+    if len(curve) >= 2:
+        ratios = [curve[i + 1][1] / curve[i][1]
+                  for i in range(len(curve) - 1)]
+        shape = " -> ".join(f"{g:.2f}@{d}" for d, g in curve)
+        emit("direct_spmd", f"lu_spmd_mono_n{n}", round(min(ratios), 3),
+             "ratio", f"worst successive-device-count GFLOP/s ratio; "
+             f"curve {shape} (CPU emulation)")
 
 
 def main(argv=None):
@@ -222,9 +248,8 @@ def main(argv=None):
                     help="distributed LU GFLOP/s vs device count (1->8)")
     args = ap.parse_args(argv)
     if args.spmd:
-        run_spmd(device_counts=(1, 2, 4, 8),
-                 n=256 if args.smoke else 512,
-                 nb=32 if args.smoke else 64)
+        run_spmd(device_counts=(1, 2, 8) if args.smoke else (1, 2, 4, 8),
+                 n=1024, nb=64)
     elif args.smoke:
         run(sizes=(256,), compile_sizes=(256, 512), nb=64)
     else:

@@ -4,8 +4,20 @@ Paper finding to reproduce: direct (factorization) methods have the higher
 *arithmetic intensity* (Level-3 BLAS) and iterative methods are
 matvec-bound — measured here as wall time vs n and flops/byte, fp32 + fp64
 (the paper tested both precisions).
+
+``run_spmd`` (the ``solvers_spmd`` section / ``--spmd`` flag) adds the
+communication-avoiding sweep: ``cg`` vs ``ca_cg(s=4)`` vs
+``ca_gmres(s=8)`` wall time per host device count, with the trace-time
+reduction tally in each note — the number that motivates s-step methods
+(one Gram psum per s iterations vs two psums per iteration).
 """
 from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
 
 import jax
 import jax.numpy as jnp
@@ -29,10 +41,13 @@ def run(sizes=(512, 1024), dtypes=("float32",)):
             for method, mat, ref in (
                     ("lu", aj, x_ref), ("cholesky", sj, xs_ref),
                     ("cg", sj, xs_ref), ("pipelined_cg", sj, xs_ref),
-                    ("bicgstab", aj, x_ref),
-                    ("gmres", aj, x_ref), ("bicg", aj, x_ref)):
-                fn = jax.jit(lambda A, B, m=method: api.solve(
-                    A, B, method=m, tol=1e-8, block_size=min(128, n // 4)))
+                    ("ca_cg", sj, xs_ref), ("bicgstab", aj, x_ref),
+                    ("gmres", aj, x_ref), ("ca_gmres", aj, x_ref),
+                    ("bicg", aj, x_ref)):
+                extra = {"s": 4} if method.startswith("ca_") else {}
+                fn = jax.jit(lambda A, B, m=method, kw=extra: api.solve(
+                    A, B, method=m, tol=1e-8, block_size=min(128, n // 4),
+                    **kw))
                 t = timeit(fn, mat, bj)
                 x = np.asarray(fn(mat, bj))
                 res = float(np.linalg.norm(b - np.asarray(mat) @ x)
@@ -62,3 +77,98 @@ def run(sizes=(512, 1024), dtypes=("float32",)):
                          f"converged={bool(r.converged)}")
         if dtype == "float64":
             jax.config.update("jax_enable_x64", False)
+
+
+# --------------------------------------------------------------------------
+# --spmd: communication-avoiding Krylov vs device count
+# --------------------------------------------------------------------------
+
+_SPMD_CHILD = r"""
+import os, sys, json, time
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=%(ndev)d"
+sys.path.insert(0, %(src)r)
+import warnings; warnings.filterwarnings("ignore")
+import numpy as np, jax, jax.numpy as jnp
+from repro.core import api, pblas
+
+n, ndev = %(n)d, %(ndev)d
+p = int(ndev ** 0.5)
+while ndev %% p: p -= 1
+mesh = jax.make_mesh((p, ndev // p), ("data", "model"))
+rng = np.random.default_rng(0)
+a = rng.standard_normal((n, n)).astype(np.float32)
+spd = (a @ a.T / n + 4 * np.eye(n)).astype(np.float32)
+nonsym = (a + n * np.eye(n)).astype(np.float32)
+b = rng.standard_normal(n).astype(np.float32)
+bj = jnp.asarray(b)
+
+out = {}
+for method, mat, kw in (("cg", spd, {}), ("ca_cg", spd, {"s": 4}),
+                        ("ca_gmres", nonsym, {"s": 8})):
+    mj = jnp.asarray(mat)
+    with pblas.collective_counts() as c:
+        fn = jax.jit(lambda A, B, m=method, k=kw: api.solve(
+            A, B, method=m, tol=1e-6, maxiter=400, mesh=mesh,
+            engine="spmd", **k))
+        jax.block_until_ready(fn(mj, bj))          # trace+compile+warmup
+    dots = c["dots"]
+    ts = []
+    for _ in range(3):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(mj, bj))
+        ts.append(time.perf_counter() - t0)
+    x = np.asarray(fn(mj, bj))
+    res = float(np.linalg.norm(b - mat @ x) / np.linalg.norm(b))
+    out[method] = {"t": float(np.median(ts)), "dots": dots, "res": res}
+print("RESULT " + json.dumps(out))
+"""
+
+
+def run_spmd(device_counts=(1, 2, 4, 8), n=1024):
+    """cg vs ca_cg/ca_gmres wall time per host device count.
+
+    Each row's note carries the trace-time reduction ("dots") tally —
+    the communication-avoiding claim as a counted number — and a
+    ``scaling_efficiency`` field (t at 1 dev / (ndev * t at ndev)).
+    """
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    t1 = {}                               # method -> wall at 1 device
+    for ndev in device_counts:
+        code = _SPMD_CHILD % {"ndev": ndev, "n": n,
+                              "src": os.path.abspath(src)}
+        proc = subprocess.run([sys.executable, "-c", code],
+                              capture_output=True, text=True, timeout=900)
+        line = [l for l in proc.stdout.splitlines()
+                if l.startswith("RESULT ")]
+        if not line:
+            emit("solvers_spmd", f"ca_sweep_n{n}_ndev{ndev}", "FAIL", "",
+                 proc.stderr.strip()[-200:].replace(",", ";"))
+            continue
+        for method, r in json.loads(line[0][len("RESULT "):]).items():
+            if ndev == device_counts[0]:
+                t1[method] = r["t"]
+            eff = (f" scaling_efficiency={t1[method] / (ndev * r['t']):.2f}"
+                   if method in t1 else "")
+            emit("solvers_spmd", f"{method}_spmd_n{n}_ndev{ndev}",
+                 round(r["t"] * 1e3, 2), "ms",
+                 f"dots_trace={r['dots']} rel_res={r['res']:.1e}{eff}"
+                 " (CPU emulation)")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--spmd", action="store_true",
+                    help="CA-Krylov wall time vs device count (1->8)")
+    args = ap.parse_args(argv)
+    if args.spmd:
+        run_spmd(device_counts=(1, 8) if args.smoke else (1, 2, 4, 8),
+                 n=512 if args.smoke else 1024)
+    elif args.smoke:
+        run(sizes=(256,), dtypes=("float32",))
+    else:
+        run()
+
+
+if __name__ == "__main__":
+    main()

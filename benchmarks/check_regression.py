@@ -15,6 +15,13 @@ than ``--factor`` (default 2x):
   timings oversubscribe one CPU and swing order-of-magnitude run to run
   (curve shape only, same caveat as bench_scaling)
 
+The one thing gated on those emulated rows is exactly their *shape*:
+the ``direct_spmd`` strong-scaling curve must stay (tolerance-)monotone
+in device count — GFLOP/s at each successive device count must retain
+``--mono-tol`` (default 0.7) of the previous point, so the lookahead
+strong-scaling fix can't silently regress back to the pre-lookahead
+collapse (which dropped to 0.09x from 2 to 8 devices).
+
 Reference numbers are the checked-in worst-of-N observations
 (``benchmarks/reference/``); re-baseline by downloading a CI bench-json
 artifact (or re-running ``benchmarks.run --json-dir``) into that
@@ -33,10 +40,23 @@ import argparse
 import glob
 import json
 import os
+import re
 import sys
 
 TIME_UNITS = {"ms", "ms/system", "s"}
 THROUGHPUT_UNITS = {"gflops", "GB/s", "gbs"}
+
+# Strong-scaling monotonicity gate (direct_spmd): successive device
+# counts must retain at least this fraction of the previous GFLOP/s.
+# On real parallel hardware the expectation is >= 1.0 (monotone); the
+# 0.7 tolerance exists because CI's virtual devices share one CPU core,
+# so each doubling pays pure collective overhead with zero added
+# silicon (~0.8 measured at n=1024 post-lookahead).  The gate exists to
+# catch collapse-class regressions — the pre-lookahead curve dropped to
+# 0.09x from 2 to 8 devices and fails this check by an order of
+# magnitude.
+MONO_TOL = 0.70
+_SPMD_ROW = re.compile(r"lu_spmd_factor_n(\d+)_ndev(\d+)$")
 
 
 def load(directory: str) -> dict[tuple[str, str], tuple[float, str]]:
@@ -55,6 +75,46 @@ def load(directory: str) -> dict[tuple[str, str], tuple[float, str]]:
     return rows
 
 
+def check_spmd_monotonicity(directory: str, tol: float = MONO_TOL):
+    """Gate the direct_spmd strong-scaling curve of ``directory``.
+
+    Unlike :func:`load`, this reads the "(CPU emulation)" rows — they
+    are exempt from the absolute-time gate (shared-silicon noise) but
+    their *shape* is the whole point of the section: GFLOP/s must not
+    collapse as the device count grows.  Returns a list of violation
+    strings (empty = pass).
+    """
+    path = os.path.join(directory, "BENCH_direct_spmd.json")
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        data = json.load(f)
+    curves: dict[int, list[tuple[int, float]]] = {}
+    for r in data.get("rows", []):
+        m = _SPMD_ROW.search(r["name"])
+        if not m or r.get("unit") != "gflops":
+            continue
+        try:
+            curves.setdefault(int(m.group(1)), []).append(
+                (int(m.group(2)), float(r["value"])))
+        except (TypeError, ValueError):
+            return [f"direct_spmd: non-numeric row {r['name']} "
+                    f"(value {r['value']!r})"]
+    violations = []
+    for n, pts in sorted(curves.items()):
+        pts.sort()
+        shape = " -> ".join(f"{g:.2f}@{d}dev" for d, g in pts)
+        print(f"  direct_spmd n={n}: {shape} (gate: successive ratio "
+              f">= {tol})")
+        for (d0, g0), (d1, g1) in zip(pts, pts[1:]):
+            if g0 > 0 and g1 < g0 * tol:
+                violations.append(
+                    f"direct_spmd n={n}: GFLOP/s collapses {g0:.2f} at "
+                    f"{d0} dev -> {g1:.2f} at {d1} dev "
+                    f"(ratio {g1 / g0:.2f} < {tol})")
+    return violations
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--current", required=True,
@@ -68,6 +128,10 @@ def main(argv=None):
     ap.add_argument("--min-ms", type=float, default=5.0,
                     help="skip time rows whose reference is below this "
                          "(sub-quantum timings are noise)")
+    ap.add_argument("--mono-tol", type=float, default=MONO_TOL,
+                    help="direct_spmd strong-scaling gate: successive "
+                         "device counts must retain this fraction of "
+                         "GFLOP/s (no-collapse monotonicity)")
     args = ap.parse_args(argv)
 
     cur = load(args.current)
@@ -75,8 +139,11 @@ def main(argv=None):
     if not ref:
         print(f"no reference rows under {args.reference}; nothing to gate")
         return
-    if not cur:
+    if not glob.glob(os.path.join(args.current, "BENCH_*.json")):
         raise SystemExit(f"no BENCH_*.json under {args.current}")
+    # cur may still be empty: a run that produced only "(CPU emulation)"
+    # rows (e.g. --sections direct_spmd) has nothing for the absolute
+    # gate but still goes through the curve-shape gate below.
 
     for key in sorted(set(cur) - set(ref)):
         print(f"  (new row {key[0]}/{key[1]} has no reference — ungated)")
@@ -97,12 +164,15 @@ def main(argv=None):
 
     print(f"checked {checked} gated rows against {args.reference} "
           f"(factor {args.factor}x)")
-    if regressions:
+    mono = check_spmd_monotonicity(args.current, tol=args.mono_tol)
+    if regressions or mono:
         for (section, name), rv, cv, unit in regressions:
             print(f"REGRESSION {section}/{name}: {rv} -> {cv} {unit} "
                   f"(> {args.factor}x)", file=sys.stderr)
-        raise SystemExit(f"{len(regressions)} benchmark row(s) regressed "
-                         f">{args.factor}x")
+        for msg in mono:
+            print(f"REGRESSION {msg}", file=sys.stderr)
+        raise SystemExit(f"{len(regressions) + len(mono)} benchmark "
+                         f"check(s) failed")
     print("benchmark regression gate: PASS")
 
 

@@ -5,6 +5,7 @@
 
 Sections:
   solvers      — §4 direct-vs-iterative method table (wall + residual)
+  solvers_spmd — CA-Krylov (ca_cg/ca_gmres) wall vs device count (1→8)
   direct       — factor GFLOP/s vs jax.scipy + unrolled-vs-fori compile time
   direct_spmd  — block-cyclic distributed LU GFLOP/s vs device count (1→8)
   eigls        — QR GFLOP/s vs jnp.linalg.qr, LSQR/CGLS wall, Lanczos it/s
@@ -40,8 +41,8 @@ def main(argv=None):
     ap.add_argument("--out", default=os.path.join(
         os.path.dirname(__file__), "..", "experiments", "bench.csv"))
     args = ap.parse_args(argv)
-    known = {"solvers", "direct", "direct_spmd", "eigls", "eigls_spmd",
-             "sparse", "local_accel", "train", "scaling"}
+    known = {"solvers", "solvers_spmd", "direct", "direct_spmd", "eigls",
+             "eigls_spmd", "sparse", "local_accel", "train", "scaling"}
     enabled = None
     if args.sections:
         enabled = {s.strip() for s in args.sections.split(",") if s.strip()}
@@ -74,10 +75,15 @@ def main(argv=None):
             sizes=(256,) if args.quick else (512, 1024),
             compile_sizes=(256, 512) if args.quick else (256, 512, 1024),
             nb=64 if args.quick else 128)
+    section("solvers_spmd", bench_solvers.run_spmd,
+            device_counts=(1, 8) if args.quick else (1, 2, 4, 8),
+            n=512 if args.quick else 1024)
+    # n stays 1024 even under --quick: the monotonicity gate in
+    # check_regression needs enough work per panel step to amortize the
+    # broadcast (at n<=512 the sweep measures collective latency only).
     section("direct_spmd", bench_direct.run_spmd,
             device_counts=(1, 2, 8) if args.quick else (1, 2, 4, 8),
-            n=256 if args.quick else 512,
-            nb=32 if args.quick else 64)
+            n=1024, nb=64)
     if args.quick:
         section("eigls", bench_eigls.run, shapes=((512, 128),), nb=64,
                 ls_shape=(1024, 128), grid=32, ncv=60)

@@ -154,6 +154,9 @@ register_method("bicg", krylov.bicg, requires=("matvec_t",))
 register_method("bicgstab", krylov.bicgstab)
 register_method("gmres", krylov.gmres, requires=("gram",),
                 extra=("restart",))
+register_method("ca_cg", krylov.ca_cg, requires=("gram",), extra=("s",))
+register_method("ca_gmres", krylov.ca_gmres, requires=("gram",),
+                extra=("s",))
 register_method("lsqr", krylov.lsqr, requires=("matvec_t",),
                 rectangular=True)
 register_method("cgls", krylov.cgls, requires=("matvec_t",),

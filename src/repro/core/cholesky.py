@@ -115,13 +115,22 @@ def solve(a: jax.Array, b: jax.Array, block_size: int = 128, mesh=None,
 # --------------------------------------------------------------------------
 # Distributed-memory Cholesky: block-cyclic columns, ONE shard_map.
 #
-# Same structure as the distributed LU (see :mod:`repro.core.lu`), minus
-# pivoting: per block step the owner broadcasts its raw column block, every
-# process computes the replicated (nb, nb) Cholesky + panel TRSM, and the
-# rank-nb SYRK trailing update runs on each process's local block columns
-# (gathering the L21 rows matching its global column set — the SYRK's
-# "transpose side" of the cyclic layout).  The cyclic column permutation is
-# pure STORAGE: the body indexes blocks by global position, so the math
+# Same owner-factors / split-update / lookahead structure as the
+# distributed LU (see :mod:`repro.core.lu`), minus pivoting: per block
+# step the OWNER alone computes the (nb, nb) diagonal Cholesky + panel
+# TRSM of its local column block (``lax.cond`` on the flat rank) and
+# broadcasts the factored panel — one (n, nb) collective, no perm column
+# to pack.  The rank-nb SYRK trailing update is split exactly like the
+# LU's: the NEXT panel's block column is updated eagerly (owner-only
+# cond) so its factorization can overlap the bulk update, and the rest
+# runs as the masked Level-3 GEMM over each process's local block
+# columns (gathering the L21 rows matching its global column set — the
+# SYRK's "transpose side" of the cyclic layout).  ``lookahead=True``
+# (default) factors panel k+1 inside step k's eager branch; both
+# schedules consume byte-identical panel inputs, so the factors agree
+# BITWISE, and the lookahead trace carries exactly one extra
+# pipeline-fill broadcast.  The cyclic column permutation is pure
+# STORAGE: the body indexes blocks by global position, so the math
 # eliminates natural A in natural order — SPD-ness is untouched and
 # b/x need no permuting.
 # --------------------------------------------------------------------------
@@ -136,11 +145,18 @@ class CholeskySpmdState:
 
 
 def cholesky_factor_spmd(a: jax.Array, *, block_size: int = 128, mesh=None,
-                         backend: str = "ref") -> CholeskySpmdState:
-    """Block-cyclic distributed Cholesky (ONE shard_map)."""
+                         backend: str = "ref",
+                         lookahead: bool = True) -> CholeskySpmdState:
+    """Block-cyclic distributed Cholesky (ONE shard_map).
+
+    ``lookahead=True`` factors+broadcasts panel k+1 during step k's bulk
+    SYRK update (pipeline overlap; see the section comment) — the
+    resulting factor is bitwise identical to ``lookahead=False``.
+    """
     from repro.core.lu import _spmd_prep
     a, lay, backend = _spmd_prep(a, block_size, mesh, backend)
     nb, n, procs = lay.nb, lay.n, lay.nprocs
+    nblocks = lay.nblocks
     row, col = dist.solver_axes(mesh)
     q = mesh.shape[col]
     axes = (row, col)
@@ -150,39 +166,94 @@ def cholesky_factor_spmd(a: jax.Array, *, block_size: int = 128, mesh=None,
         from repro.kernels.krylov_fused import _auto_interpret
         interp = _auto_interpret(None)
 
+    def _chol_panel(raw, k):
+        """Diag Cholesky + panel TRSM of one (n, nb) block column: rows
+        below the panel become L21, the diag block becomes Lkk, history
+        rows pass through."""
+        akk = jax.lax.dynamic_slice(raw, (k, 0), (nb, nb))
+        lkk = jnp.linalg.cholesky(akk)
+        pan0 = jax.lax.dynamic_update_slice(raw, lkk.astype(raw.dtype),
+                                            (k, 0))
+        l21_full = solve_triangular(lkk, pan0.T, lower=True).T
+        return jnp.where(rows_g >= k + nb, l21_full.astype(raw.dtype), pan0)
+
     def body(a_loc):
         d = pblas.flat_index_local(row, col, q)
         gcol = lay.local_gcol(d, a_loc.shape[1])
 
-        def step(s, a_loc):
+        def factor_bcast(a_loc, s):
+            """Owner-only panel factorization of global block column ``s``
+            + ONE (n, nb) broadcast (no perm to pack, unlike the LU)."""
+            owner, t = lay.owner_of(s), lay.slot_of(s)
+            pan = jax.lax.cond(
+                d == owner,
+                lambda _: _chol_panel(
+                    jax.lax.dynamic_slice(a_loc, (0, t * nb), (n, nb)),
+                    s * nb),
+                lambda _: jnp.zeros((n, nb), a_loc.dtype), None)
+            return pblas.bcast_local(pan, owner, d, axes)
+
+        def consume(a_loc, pan, s, factor_next: bool):
+            """Owner store + SPLIT rank-nb SYRK: next panel's block column
+            eagerly (owner-only cond, with the lookahead factorization
+            when ``factor_next``), rest via the masked Level-3 GEMM."""
             k = s * nb
-            owner, t = s % procs, s // procs
-            # -- panel broadcast + replicated diag Cholesky / panel TRSM --
-            raw = jax.lax.dynamic_slice(a_loc, (0, t * nb), (n, nb))
-            raw = pblas.bcast_local(raw, owner, d, axes)
-            akk = jax.lax.dynamic_slice(raw, (k, 0), (nb, nb))
-            lkk = jnp.linalg.cholesky(akk)
-            pan0 = jax.lax.dynamic_update_slice(raw, lkk.astype(raw.dtype),
-                                                (k, 0))
-            l21_full = solve_triangular(lkk, pan0.T, lower=True).T
-            pan = jnp.where(rows_g >= k + nb, l21_full.astype(raw.dtype),
-                            pan0)
+            owner, t = lay.owner_of(s), lay.slot_of(s)
+            owner2, t2 = lay.owner_of(s + 1), lay.slot_of(s + 1)
+            k2 = k + nb
+            valid = s + 1 < nblocks
             a_loc = jnp.where(
                 d == owner,
                 jax.lax.dynamic_update_slice(a_loc, pan.astype(a_loc.dtype),
                                              (0, t * nb)),
                 a_loc)
-            # -- rank-nb SYRK update of MY columns ------------------------
             l21m = jnp.where(rows_g >= k + nb, pan, 0).astype(a_loc.dtype)
+            # -- eager update of the NEXT panel's block column ------------
+            sel = (d == owner2) & valid
+
+            def eager(_):
+                raw2 = jax.lax.dynamic_slice(a_loc, (0, t2 * nb), (n, nb))
+                lrow2 = jax.lax.dynamic_slice(l21m, (k2, 0), (nb, nb))
+                nxt = raw2 - l21m @ lrow2.T
+                if factor_next:
+                    return nxt, _chol_panel(nxt, k2)
+                return nxt
+
+            def skip(_):
+                z = jnp.zeros((n, nb), a_loc.dtype)
+                return (z, z) if factor_next else z
+
+            out = jax.lax.cond(sel, eager, skip, None)
+            nxt = out[0] if factor_next else out
+            a_loc = jnp.where(
+                sel, jax.lax.dynamic_update_slice(a_loc, nxt, (0, t2 * nb)),
+                a_loc)
+            # -- rest of the SYRK (in-flight columns excluded) ------------
+            is_next = valid & (gcol >= k2) & (gcol < k2 + nb)
             l21_cols = jnp.take(l21m, gcol, axis=0)       # rows j = my cols
+            l21_rest = jnp.where(is_next[:, None], 0, l21_cols)
             if backend == "pallas":
-                a_loc = a_loc - gemm.matmul(l21m, l21_cols.T, bm=nb, bn=nb,
+                a_loc = a_loc - gemm.matmul(l21m, l21_rest.T, bm=nb, bn=nb,
                                             bk=nb, interpret=interp)
             else:
-                a_loc = a_loc - l21m @ l21_cols.T
-            return a_loc
+                a_loc = a_loc - l21m @ l21_rest.T
+            if not factor_next:
+                return a_loc
+            return a_loc, pblas.bcast_local(out[1], owner2, d, axes)
 
-        a_loc = jax.lax.fori_loop(0, n // nb, step, a_loc)
+        if lookahead:
+            def step(s, carry):
+                a_loc, pan = carry
+                return consume(a_loc, pan, s, factor_next=True)
+
+            pan1 = factor_bcast(a_loc, 0)                 # pipeline fill
+            a_loc = jax.lax.fori_loop(0, nblocks, step, (a_loc, pan1))[0]
+        else:
+            def step(s, a_loc):
+                pan = factor_bcast(a_loc, s)
+                return consume(a_loc, pan, s, factor_next=False)
+
+            a_loc = jax.lax.fori_loop(0, nblocks, step, a_loc)
         # global tril on the cyclic layout: keep (i, gcol) with i >= gcol
         return jnp.where(rows_g >= gcol[None, :], a_loc, 0)
 

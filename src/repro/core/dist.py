@@ -162,6 +162,15 @@ class CyclicLayout:
     def nblocks(self) -> int:
         return self.n // self.nb
 
+    def owner_of(self, s):
+        """Flat ring rank owning global block column ``s`` (``s`` may be a
+        traced loop index)."""
+        return s % self.nprocs
+
+    def slot_of(self, s):
+        """Local block slot of global block column ``s`` on its owner."""
+        return s // self.nprocs
+
     def local_gcol(self, d, nloc: int) -> jax.Array:
         """Global (natural-order) column index of each local column slot,
         for the process with (traced) flat index ``d`` — the inverse of

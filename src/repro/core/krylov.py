@@ -26,6 +26,7 @@ from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
+import jax.scipy.linalg  # noqa: F401  (solve_triangular in ca_gmres)
 
 from repro.core.operator import LinearOperator, as_operator
 
@@ -142,6 +143,255 @@ def pipelined_cg(op: LinearOperator | Callable, b: jax.Array,
         cond, body, (x0, r0, u0, w0, pz, pz, gamma0, alpha0, beta0, rr0, 0))
     x, rr, k = out[0], out[9], out[10]
     res = jnp.sqrt(rr)
+    return SolveResult(x, k, res, res <= atol)
+
+
+# --------------------------------------------------------------------------
+# s-step / communication-avoiding Krylov (Chronopoulos–Gear s-step CG,
+# Hoemmen 2010 CA-GMRES): ONE global reduction per s iterations.  Where
+# pipelined_cg fuses each iteration's reductions into one synchronization,
+# the CA methods go further — a matrix-powers sweep builds s basis vectors
+# with no reductions at all, a single Gram-matrix ``block_dots`` psum
+# captures every inner product the next s iterations will need, and the
+# iterations themselves run on (2s+1)-long COEFFICIENT vectors, which are
+# replicated scalars on every engine (communication-free).  The price is
+# the conditioning of the monomial basis K_s, which grows like cond(A)^s —
+# hence the Gram-factor condition check and the shrink-s fallback below.
+# --------------------------------------------------------------------------
+
+def _matrix_powers(op: LinearOperator, v: jax.Array, deg: int) -> list:
+    """[v, Av, …, A^deg v] — the communication-free matrix-powers sweep
+    (matvecs only; on the spmd engine these are halo exchanges, never
+    global reductions)."""
+    rows = [v]
+    for _ in range(deg):
+        rows.append(op.matvec(rows[-1]))
+    return rows
+
+
+def _no_ca_precond(precond, name):
+    if precond is not None:
+        raise ValueError(
+            f"{name} is unpreconditioned (M would have to enter the "
+            "matrix-powers basis as (MA)^k, changing the operator); use "
+            "method='pipelined_cg' or 'gmres' for preconditioned solves")
+
+
+def ca_cg(op: LinearOperator | Callable, b: jax.Array,
+          x0: jax.Array | None = None, *, tol: float = 1e-6,
+          maxiter: int = 1000, precond: Callable | None = None,
+          s: int = 4) -> SolveResult:
+    """s-step CG on the monomial basis: per OUTER step, 2s−1 matvecs build
+    [p, Ap, …, Aˢp, r, Ar, …, Aˢ⁻¹r], ONE ``block_dots`` reduction forms
+    the (2s+1)² Gram matrix, and s plain-CG iterations run on coefficient
+    vectors with every inner product read out of the Gram matrix — so the
+    reduction count per iteration is 1/s of classical CG's 2.
+
+    Numerical breakdown (the monomial basis losing rank in finite
+    precision) is detected per outer step by Cholesky-factoring nested
+    leading Gram blocks; the step falls back to the largest s' ≤ s whose
+    factor is well-conditioned, and terminates if even s' = 1 fails.
+    ``maxiter`` counts CG iterations (inner steps), as in ``cg``.
+    """
+    _no_ca_precond(precond, "ca_cg")
+    if s < 1:
+        raise ValueError(f"ca_cg needs s >= 1, got s={s}")
+    op = as_operator(op)
+    x0, atol = _setup(op, b, x0)
+    atol = tol * atol
+    nn = 2 * s + 1
+    eps = jnp.finfo(b.dtype).eps
+
+    # shift matrix: A·(basisᵀ c) = basisᵀ (B c).  Two independent
+    # sub-diagonals — one per power chain; the chains never mix.
+    bshift = jnp.zeros((nn, nn), b.dtype)
+    bshift = bshift.at[jnp.arange(1, s + 1), jnp.arange(s)].set(1)
+    if s > 1:
+        bshift = bshift.at[jnp.arange(s + 2, nn),
+                           jnp.arange(s + 1, nn - 1)].set(1)
+
+    r0 = b - op.matvec(x0)
+    rr0 = op.dot(r0, r0)
+    k0 = jnp.asarray(0, jnp.int32)
+
+    def cond(c):
+        x, r, p, rr, k, alive, xb, rrb = c
+        return op.reduce_any(
+            (jnp.sqrt(jnp.maximum(rr, 0)) > atol) & alive) & (k < maxiter)
+
+    def body(c):
+        x, r, p, rr_in, k, _, xb, rrb = c
+        rows = _matrix_powers(op, p, s) + _matrix_powers(op, r, s - 1)
+        basis = jnp.stack(rows)                     # (2s+1, n) row-stack
+        g = op.block_dots(basis)                    # ONE reduction
+        g = 0.5 * (g + g.T)
+
+        # implicit basis scaling: monomial columns span ~kappa(A)^s in
+        # norm, so the RAW coefficient-space quadratic forms lose all
+        # accuracy in f32 (and the iteration diverges).  Rescaling every
+        # basis vector to unit norm is free — it folds into the Gram
+        # (D g D), the shift matrix (D^-1 B D) and the seed/readout
+        # coefficients, costing ZERO extra reductions.
+        d = jax.lax.rsqrt(jnp.maximum(jnp.diagonal(g),
+                                      jnp.finfo(b.dtype).tiny))
+        gs = g * d[:, None] * d[None, :]            # unit-diagonal Gram
+        bs = bshift * (d[None, :] / d[:, None])
+
+        # breakdown fallback: largest s' for which BOTH power chains keep
+        # numerical rank — each basis vector must retain > sqrt(eps) of
+        # its norm after orthogonalization against its chain (Cholesky
+        # diagonal vs sqrt of the Gram diagonal).  Per-chain, not joint:
+        # the chains legitimately overlap (p = r on the first step) and
+        # the Gram quadratic forms stay exact for a redundant basis.
+        s_eff = jnp.asarray(0, jnp.int32)
+        for cand in range(1, s + 1):
+            ok = jnp.asarray(True)
+            for lo, size in ((0, cand + 1), (s + 1, cand)):
+                sub = jax.lax.dynamic_slice(g, (lo, lo), (size, size))
+                dd = jnp.diagonal(jnp.linalg.cholesky(sub))
+                ok &= jnp.all(jnp.isfinite(dd)) & jnp.all(
+                    dd > jnp.sqrt(eps) * jnp.sqrt(jnp.diagonal(sub)))
+            s_eff = jnp.where(ok, jnp.asarray(cand, jnp.int32), s_eff)
+
+        # s communication-free CG steps on SCALED coefficient vectors.
+        # Unrolled (s is static and small); masked steps carry state
+        # unchanged.  Seeds carry 1/d (c_hat = c / d maps unscaled e_i).
+        pc = jnp.zeros((nn,), b.dtype).at[0].set(1 / d[0])       # p coeffs
+        rc = jnp.zeros((nn,), b.dtype).at[s + 1].set(1 / d[s + 1])
+        xc = jnp.zeros((nn,), b.dtype)
+        rr = g[s + 1, s + 1]                        # fresh ⟨r,r⟩ from Gram
+        kk = k
+        for j in range(s):
+            active = (j < s_eff) & (rr > 0)
+            w = bs @ pc                             # coeffs of A p
+            alpha = _safe_div(rr, pc @ (gs @ w))
+            xc_n = xc + alpha * pc
+            rc_n = rc - alpha * w
+            rr_n = jnp.maximum(rc_n @ (gs @ rc_n), 0)
+            beta = _safe_div(rr_n, rr)
+            pc_n = rc_n + beta * pc
+            xc = jnp.where(active, xc_n, xc)
+            rc = jnp.where(active, rc_n, rc)
+            pc = jnp.where(active, pc_n, pc)
+            rr = jnp.where(active, rr_n, rr)
+            kk = kk + active.astype(jnp.int32)
+
+        # map coefficients back to vectors (local linear combinations;
+        # un-scale with d)
+        x = x + (xc * d) @ basis
+        r = (rc * d) @ basis
+        p = (pc * d) @ basis
+        # best-so-far + divergence guard: at the attainable-accuracy
+        # floor of the working precision the s-step recurrence DIVERGES
+        # (a known CA-CG property) rather than stalling like classic CG.
+        # Track the best iterate and stop once the residual has run 1e4x
+        # past it — generous enough for CG's legitimate non-monotone
+        # residual norms, a hard stop for genuine blow-up.
+        better = rr < rrb
+        xb = jnp.where(better, x, xb)
+        rrb = jnp.where(better, rr, rrb)
+        alive = (s_eff > 0) & (rr < 1e4 * rrb)
+        return (x, r, p, rr, kk, alive, xb, rrb)
+
+    _, _, _, _, k, _, xb, rrb = jax.lax.while_loop(
+        cond, body, (x0, r0, r0, rr0, k0, jnp.asarray(True), x0, rr0))
+    res = jnp.sqrt(jnp.maximum(rrb, 0))
+    return SolveResult(xb, k, res, res <= atol)
+
+
+def ca_gmres(op: LinearOperator | Callable, b: jax.Array,
+             x0: jax.Array | None = None, *, tol: float = 1e-6,
+             maxiter: int = 100, precond: Callable | None = None,
+             s: int = 8) -> SolveResult:
+    """s-step GMRES: per cycle, a matrix-powers sweep builds the s+1
+    monomial basis vectors (matvecs only), then ONE ``block_dots``
+    reduction feeds CholeskyQR — the block orthogonalization that replaces
+    the ~2s synchronizations of Arnoldi's Gram-Schmidt.  The Hessenberg
+    projection comes from the shift identity A·K[:s] = K[1:] as
+    H = R[:,1:] R[:s,:s]⁻¹, and the cycle's least-squares residual is read
+    off locally (no extra reduction).  A prefix condition mask on the
+    Cholesky factor truncates the cycle to the numerically independent
+    basis columns (the shrink-s fallback).  ``maxiter`` counts cycles."""
+    _no_ca_precond(precond, "ca_gmres")
+    if s < 1:
+        raise ValueError(f"ca_gmres needs s >= 1, got s={s}")
+    op = as_operator(op)
+    x0, atol = _setup(op, b, x0)
+    atol = tol * atol
+    eps = jnp.finfo(b.dtype).eps
+    eye = jnp.eye(s + 1, dtype=b.dtype)
+
+    def cycle(x):
+        r = b - op.matvec(x)
+        kmat = jnp.stack(_matrix_powers(op, r, s))  # (s+1, n) row-stack
+        g = op.block_dots(kmat)                     # ONE reduction
+        g = 0.5 * (g + g.T)
+        # implicit column scaling to a unit-diagonal Gram (same trick as
+        # ca_cg, zero extra reductions): the raw monomial Gram spans
+        # ~|A|^{2s} decades, where the nested-block PD probe below is
+        # meaningless — a borderline-indefinite block can pass or NaN
+        # depending on how it is embedded (observed at s=8).  On the
+        # scaled Gram the Cholesky pivots ARE the surviving fraction of
+        # each basis vector's norm.
+        d = jax.lax.rsqrt(jnp.maximum(jnp.diagonal(g),
+                                      jnp.finfo(b.dtype).tiny))
+        gs = g * d[:, None] * d[None, :]
+        # shrink-s fallback by probing nested leading Gram blocks (jax's
+        # cholesky is all-or-nothing — a non-PD input NaNs the WHOLE
+        # factor, so a single factorization cannot yield a prefix mask):
+        # basis vector i survives iff it keeps > sqrt(eps) of its norm
+        # after orthogonalization against its predecessors.
+        s_eff = jnp.asarray(0, jnp.int32)
+        for cand in range(1, s + 1):
+            dd = jnp.diagonal(jnp.linalg.cholesky(gs[:cand + 1, :cand + 1]))
+            ok = jnp.all(jnp.isfinite(dd)) & jnp.all(dd > jnp.sqrt(eps))
+            s_eff = jnp.where(ok, jnp.asarray(cand, jnp.int32), s_eff)
+        msk = ((jnp.arange(s + 1) <= s_eff) & (g[0, 0] > 0)).astype(b.dtype)
+        g_safe = jnp.where(jnp.outer(msk, msk) > 0, gs, eye)
+        l = jnp.linalg.cholesky(g_safe)     # PD by construction: finite
+        # CholeskyQR of the SCALED basis Ks = diag(d)·K: rows of q are
+        # orthonormal, Ksᵀ = Q̃·rc with rc = Lᵀ upper-triangular
+        q = jax.scipy.linalg.solve_triangular(l, d[:, None] * kmat,
+                                              lower=True)
+        rc = l.T
+        # shift identity on the scaled basis: A·Ks[j] = (d[j]/d[j+1])
+        # Ks[j+1], so H picks up the diagonal scale ratio.  A basis
+        # vector whose norm² overflowed has d = rsqrt(inf) = 0, making
+        # the ratio inf — zero it (those columns are masked anyway)
+        # BEFORE the matmul, where one inf would NaN all of h.
+        ratio = d[:s] / d[1:]
+        ratio = jnp.where(jnp.isfinite(ratio), ratio, 0)
+        h = (rc[:, 1:] * ratio[None, :]
+             ) @ jnp.linalg.inv(rc[:s, :s])         # (s+1, s) Hessenberg
+        mask2d = (jnp.outer(msk, msk[1:]) > 0) & jnp.isfinite(h)
+        h = jnp.where(mask2d, h, 0)                 # where, not *: 0·inf=nan
+        # r's coordinates in the Q̃ basis: r = Ks[0]/d[0] = Q̃ᵀrc[:,0]/d[0]
+        c = jnp.where(msk[0] > 0, rc[:, 0] / d[0],
+                      jnp.zeros_like(rc[:, 0]))
+        y = jnp.linalg.lstsq(h, c)[0]
+        y = jnp.where(jnp.isfinite(y), y, 0)
+        res = jnp.linalg.norm(c - h @ y)
+        return x + y @ q[:s], res, s_eff >= 1
+
+    def cond(st):
+        x, res, alive, k = st
+        return (res > atol) & alive & (k < maxiter)
+
+    def body(st):
+        x, res, _, k = st
+        x2, res2, ok = cycle(x)
+        # restart-monotonicity backstop: a cycle that fails to strictly
+        # improve the least-squares residual (stagnation, or NaNs past
+        # every mask) is discarded and ends the iteration — the best
+        # iterate is kept.  Strict <, else a frozen cycle (y == 0)
+        # would spin to maxiter on its own constant residual.
+        better = jnp.isfinite(res2) & (res2 < res)
+        return (jnp.where(better, x2, x), jnp.where(better, res2, res),
+                ok & better, k + 1)
+
+    res0 = op.norm(b - op.matvec(x0))
+    x, res, _, k = jax.lax.while_loop(
+        cond, body, (x0, res0, jnp.asarray(True), 0))
     return SolveResult(x, k, res, res <= atol)
 
 

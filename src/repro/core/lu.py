@@ -223,14 +223,28 @@ def solve(a: jax.Array, b: jax.Array, block_size: int = 128, mesh=None,
 #
 # Per block step, entirely inside one ``lax.fori_loop`` inside ONE
 # ``shard_map`` (no per-step re-entry, no host round-trips):
-#   1. the owner's raw column block broadcasts ring-wide (masked psum);
-#   2. every process runs the pivoted panel factorization REPLICATED
-#      (identical results; the classic factor-then-broadcast with the two
-#      steps commuted, which costs the same bytes and keeps lockstep);
-#   3. every process applies the swap gather + writes the panel if owner;
-#   4. every process TRSMs ITS row block and applies the rank-nb trailing
-#      update to ITS local block columns — the Level-3 hot spot, executed
-#      by the Pallas GEMM kernel per-shard when ``backend="pallas"``.
+#   1. the OWNER alone factors its local pivoted panel (``lax.cond`` on
+#      the flat rank — no collectives inside the branch) and the packed
+#      result (panel ‖ pivot permutation) broadcasts ring-wide in one
+#      masked psum — factor-then-broadcast, O(n·nb²) panel work done
+#      once instead of P times;
+#   2. every process applies the swap gather + writes the panel if owner;
+#   3. every process TRSMs ITS row block, then applies the rank-nb
+#      trailing update SPLIT in two: the next panel's column block is
+#      updated eagerly (a small GEMM on its owner only, again under
+#      ``lax.cond``), and the rest of the local columns take the masked
+#      Level-3 GEMM — per-shard Pallas when ``backend="pallas"``.
+#
+# ``lookahead=True`` (default) exploits the split for the classic
+# ScaLAPACK/HPL lookahead pipeline: the owner of panel k+1 factors and
+# broadcasts it right after the eager update — i.e. while every other
+# rank is still busy with step k's bulk trailing GEMM — and the factored
+# panel rides in the loop carry to be consumed next step.
+# ``lookahead=False`` runs the same split computation but factors the
+# panel at the top of its own step; both schedules consume byte-identical
+# panel inputs, so the factors agree BITWISE (the parity is a test
+# invariant).  Broadcast count per factorization is identical too, plus
+# one pipeline-fill broadcast for the lookahead prologue.
 
 
 @dataclasses.dataclass(frozen=True)
@@ -259,10 +273,17 @@ def _spmd_prep(a, block_size, mesh, backend):
 
 
 def lu_factor_spmd(a: jax.Array, *, block_size: int = 128, mesh=None,
-                   backend: str = "ref") -> LuSpmdState:
-    """Block-cyclic distributed LU with partial pivoting (ONE shard_map)."""
+                   backend: str = "ref",
+                   lookahead: bool = True) -> LuSpmdState:
+    """Block-cyclic distributed LU with partial pivoting (ONE shard_map).
+
+    ``lookahead=True`` factors+broadcasts panel k+1 during step k's bulk
+    trailing update (pipeline overlap; see the module comment) — the
+    resulting factor is bitwise identical to ``lookahead=False``.
+    """
     a, lay, backend = _spmd_prep(a, block_size, mesh, backend)
     nb, n, procs = lay.nb, lay.n, lay.nprocs
+    nblocks = lay.nblocks
     row, col = dist.solver_axes(mesh)
     q = mesh.shape[col]
     axes = (row, col)
@@ -277,14 +298,40 @@ def lu_factor_spmd(a: jax.Array, *, block_size: int = 128, mesh=None,
         gcol = lay.local_gcol(d, a_loc.shape[1])
         nloc = a_loc.shape[1]
 
-        def step(s, carry):
+        def pack(pan, perm):
+            return jnp.concatenate(
+                [pan, perm.astype(pan.dtype)[:, None]], axis=1)
+
+        def factor_bcast(a_loc, s):
+            """Owner-only pivoted panel factorization of global block
+            column ``s`` + ONE packed (panel ‖ perm) broadcast.  The perm
+            rides as a float column — exact (integers < 2^24 even in
+            f32)."""
+            owner, t = lay.owner_of(s), lay.slot_of(s)
+
+            def have(_):
+                raw = jax.lax.dynamic_slice(a_loc, (0, t * nb), (n, nb))
+                pan, perm = _panel_factor(raw, s * nb)
+                return pack(pan, perm)
+
+            packed = jax.lax.cond(
+                d == owner, have,
+                lambda _: jnp.zeros((n, nb + 1), a_loc.dtype), None)
+            packed = pblas.bcast_local(packed, owner, d, axes)
+            return packed[:, :nb], packed[:, nb].astype(jnp.int32)
+
+        def consume(carry, pan, perm, s, factor_next: bool):
+            """Apply the factored panel of step ``s``: swap gather, owner
+            store, row-block TRSM, then the SPLIT trailing update — next
+            panel's column eagerly (owner-only cond), rest via the masked
+            Level-3 GEMM.  With ``factor_next`` the eager branch also
+            factors the next panel (lookahead); the packed broadcast
+            happens here either way only in that mode."""
             a_loc, perm_total = carry
             k = s * nb
-            owner, t = s % procs, s // procs
-            # -- panel broadcast + replicated pivoted panel factorization --
-            raw = jax.lax.dynamic_slice(a_loc, (0, t * nb), (n, nb))
-            raw = pblas.bcast_local(raw, owner, d, axes)
-            pan, perm = _panel_factor(raw, k)
+            owner, t = lay.owner_of(s), lay.slot_of(s)
+            owner2, t2 = lay.owner_of(s + 1), lay.slot_of(s + 1)
+            valid = s + 1 < nblocks
             # -- swap gather on local columns; owner stores the panel ------
             a_loc = jnp.take(a_loc, perm, axis=0)
             perm_total = jnp.take(perm_total, perm)
@@ -293,7 +340,7 @@ def lu_factor_spmd(a: jax.Array, *, block_size: int = 128, mesh=None,
                 jax.lax.dynamic_update_slice(a_loc, pan.astype(a_loc.dtype),
                                              (0, t * nb)),
                 a_loc)
-            # -- TRSM of MY row block + rank-nb update of MY columns -------
+            # -- TRSM of MY row block --------------------------------------
             l11 = jax.lax.dynamic_slice(pan, (k, 0), (nb, nb))
             rowblk = jax.lax.dynamic_slice(a_loc, (k, 0), (nb, nloc))
             u_full = solve_triangular(l11, rowblk, lower=True,
@@ -303,16 +350,58 @@ def lu_factor_spmd(a: jax.Array, *, block_size: int = 128, mesh=None,
                 a_loc, jnp.where(active, u_full, rowblk).astype(a_loc.dtype),
                 (k, 0))
             l21 = jnp.where(rows_g >= k + nb, pan, 0).astype(a_loc.dtype)
-            u12 = jnp.where(active, u_full, 0).astype(a_loc.dtype)
+            # -- eager update of the NEXT panel's column (owner-only) ------
+            sel = (d == owner2) & valid
+
+            def eager(_):
+                raw2 = jax.lax.dynamic_slice(a_loc, (0, t2 * nb), (n, nb))
+                u2 = jax.lax.dynamic_slice(
+                    u_full, (0, t2 * nb), (nb, nb)).astype(a_loc.dtype)
+                nxt = raw2 - l21 @ u2
+                if factor_next:
+                    return nxt, pack(*_panel_factor(nxt, k + nb))
+                return nxt
+
+            def skip(_):
+                z = jnp.zeros((n, nb), a_loc.dtype)
+                return (z, jnp.zeros((n, nb + 1), a_loc.dtype)) \
+                    if factor_next else z
+
+            out = jax.lax.cond(sel, eager, skip, None)
+            nxt = out[0] if factor_next else out
+            a_loc = jnp.where(
+                sel, jax.lax.dynamic_update_slice(a_loc, nxt, (0, t2 * nb)),
+                a_loc)
+            # -- rest of the rank-nb update (in-flight columns excluded) ---
+            rest = active & ((gcol >= k + 2 * nb)[None, :] | ~valid)
+            u12 = jnp.where(rest, u_full, 0).astype(a_loc.dtype)
             if backend == "pallas":
                 a_loc = a_loc - gemm.matmul(l21, u12, bm=nb, bn=nb, bk=nb,
                                             interpret=interp)
             else:
                 a_loc = a_loc - l21 @ u12
-            return a_loc, perm_total
+            if not factor_next:
+                return a_loc, perm_total
+            packed = pblas.bcast_local(out[1], owner2, d, axes)
+            return (a_loc, perm_total,
+                    packed[:, :nb], packed[:, nb].astype(jnp.int32))
 
-        return jax.lax.fori_loop(0, n // nb, step,
-                                 (a_loc, jnp.arange(n)))
+        perm0 = jnp.arange(n)
+        if lookahead:
+            def step(s, carry):
+                a_loc, perm_total, pan, perm = carry
+                return consume((a_loc, perm_total), pan, perm, s,
+                               factor_next=True)
+
+            pan1, perm1 = factor_bcast(a_loc, 0)     # pipeline fill
+            return jax.lax.fori_loop(
+                0, nblocks, step, (a_loc, perm0, pan1, perm1))[:2]
+
+        def step(s, carry):
+            pan, perm = factor_bcast(carry[0], s)
+            return consume(carry, pan, perm, s, factor_next=False)
+
+        return jax.lax.fori_loop(0, nblocks, step, (a_loc, perm0))
 
     spec = lay.matrix_spec()
     lu_cyc, perm = shard_map(body, mesh=mesh, in_specs=(spec,),

@@ -73,6 +73,13 @@ class LinearOperator:
         """Stacked dots ``m @ w`` for a (k, n) row-stack m (GMRES Gram)."""
         raise NotImplementedError
 
+    def block_dots(self, vs: jax.Array) -> jax.Array:
+        """Gram matrix G = V Vᴴ of a (k, n) row-stack — ALL k² basis inner
+        products in one reduction.  This is the s-step/communication-
+        avoiding block primitive: one call replaces the ~2s dot-product
+        synchronizations of s classical Krylov iterations."""
+        return vs.conj() @ vs.T
+
     # -- derived / layout helpers ------------------------------------------
     def norm(self, v: jax.Array) -> jax.Array:
         return jnp.sqrt(self.dot(v, v))
@@ -162,6 +169,12 @@ class DenseOperator(LinearOperator):
             return krylov_fused.fused_pipelined_dots_auto(r, u, w)
         return super().pipelined_dots(r, u, w)
 
+    def block_dots(self, vs):
+        if self._fusable(vs):
+            from repro.kernels import krylov_fused
+            return krylov_fused.fused_gram_auto(vs)
+        return super().block_dots(vs)
+
     def axpy_pair(self, x, p, r, q, alpha):
         # one fused memory pass when both pairs share a shape (square
         # systems); the rectangular case falls back to two jnp axpys
@@ -205,6 +218,14 @@ class GspmdOperator(LinearOperator):
     def dotm(self, m, w):
         return m @ dist.constrain_vector(w, self.mesh)
 
+    def block_dots(self, vs):
+        # shard the stack's column (vector) axis so XLA lowers the Gram
+        # contraction to local mm + one all-reduce
+        row, _ = dist.solver_axes(self.mesh)
+        vs = jax.lax.with_sharding_constraint(
+            vs, jax.sharding.NamedSharding(self.mesh, P(None, row)))
+        return vs.conj() @ vs.T
+
 
 # --------------------------------------------------------------------------
 # Explicit SPMD (inside one shard_map; hand-written collectives)
@@ -235,6 +256,9 @@ class SpmdLocalOperator(LinearOperator):
 
     def dotm(self, m, w):
         return pblas.dotm_local(m, w, self.row)
+
+    def block_dots(self, vs):
+        return pblas.gram_local(vs, self.row)        # ONE psum for the Gram
 
 
 def spmd_named_precond(precond, *, rows: int | None = None,

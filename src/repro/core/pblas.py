@@ -17,6 +17,7 @@ Data layouts are those of ``repro.core.dist``:
 """
 from __future__ import annotations
 
+import contextlib
 import functools
 
 import jax
@@ -29,6 +30,61 @@ from repro.core import dist
 # ``pvary`` only exists on JAX versions with varying-manual-axes tracking;
 # on older releases replication bookkeeping is implicit and it is a no-op.
 _pvary = getattr(jax.lax, "pvary", None) or (lambda x, axes: x)
+
+
+# --------------------------------------------------------------------------
+# Collective counters.  Tallied at TRACE time: every solver loop here is a
+# fixed-shape ``fori_loop``/``while_loop`` whose body traces exactly once,
+# so the counts are per-loop-iteration collective counts plus the one-off
+# setup/prologue collectives — precisely the "reductions per iteration"
+# number the communication-avoiding methods are about.  Kinds:
+#
+#   "psum"       every psum on the wire (including those under the kinds
+#                below — the raw collective count),
+#   "all_gather" every all_gather,
+#   "dots"       reduction rounds that carry inner products (dot/dots/
+#                dotm/gram — the latency-bound synchronizations a Krylov
+#                iteration pays),
+#   "bcast"      masked-psum broadcasts (panel broadcasts of the direct
+#                path).
+# --------------------------------------------------------------------------
+
+_COUNTS: dict | None = None
+
+
+@contextlib.contextmanager
+def collective_counts():
+    """Context manager yielding a live tally dict of the collectives issued
+    (at trace time) by the pblas primitives while the context is open::
+
+        with pblas.collective_counts() as c:
+            api.solve(a, b, method="cg", mesh=mesh, engine="spmd")
+        assert c["dots"] == 4   # 2 setup + 2 per loop body (traced once)
+    """
+    global _COUNTS
+    prev = _COUNTS
+    _COUNTS = {"psum": 0, "all_gather": 0, "dots": 0, "bcast": 0}
+    try:
+        yield _COUNTS
+    finally:
+        _COUNTS = prev
+
+
+def _tally(kind: str, n: int = 1) -> None:
+    if _COUNTS is not None:
+        _COUNTS[kind] = _COUNTS.get(kind, 0) + n
+
+
+def psum(x, axes):
+    """Counted ``lax.psum`` — every pblas reduction goes through here."""
+    _tally("psum")
+    return jax.lax.psum(x, axes)
+
+
+def all_gather(x, axis, **kw):
+    """Counted ``lax.all_gather``."""
+    _tally("all_gather")
+    return jax.lax.all_gather(x, axis, **kw)
 
 
 # --------------------------------------------------------------------------
@@ -45,12 +101,12 @@ def matvec_local(a_loc: jax.Array, x_loc: jax.Array,
     column owns the slice of x matching its block of A's columns), local
     GEMV, then sum-reduce partial results along process-grid rows.
     """
-    x_full = jax.lax.all_gather(x_loc, row, tiled=True)        # (n,)
+    x_full = all_gather(x_loc, row, tiled=True)                # (n,)
     j = jax.lax.axis_index(col)
     nq = x_full.shape[0] // q
     x_j = jax.lax.dynamic_slice_in_dim(x_full, j * nq, nq)     # my col slice
     y_part = a_loc @ x_j                                       # local GEMV
-    return jax.lax.psum(y_part, col)                           # reduce rows
+    return psum(y_part, col)                                   # reduce rows
 
 
 def matvec_t_local(a_loc: jax.Array, x_loc: jax.Array,
@@ -59,8 +115,8 @@ def matvec_t_local(a_loc: jax.Array, x_loc: jax.Array,
     y_part = a_loc.T @ x_loc                                   # (n/q,)
     # sum partial column-results along rows, then redistribute from the
     # column layout back to the row layout.
-    y_col = jax.lax.psum(y_part, row)                          # (n/q,) col block
-    y_full = jax.lax.all_gather(y_col, col, tiled=True)        # (n,)
+    y_col = psum(y_part, row)                                  # (n/q,) col block
+    y_full = all_gather(y_col, col, tiled=True)                # (n,)
     i = jax.lax.axis_index(row)
     np_ = y_full.shape[0] // p
     return jax.lax.dynamic_slice_in_dim(y_full, i * np_, np_)
@@ -68,21 +124,34 @@ def matvec_t_local(a_loc: jax.Array, x_loc: jax.Array,
 
 def dot_local(u: jax.Array, v: jax.Array, row: str) -> jax.Array:
     """Global inner product of block-row vectors (MPI_Allreduce)."""
-    return jax.lax.psum(jnp.vdot(u, v), row)
+    _tally("dots")
+    return psum(jnp.vdot(u, v), row)
 
 
 def dots_local(pairs, row: str):
     """Several inner products in ONE psum — the single-synchronization
     reduction that pipelined CG is built on (one allreduce per iteration
     instead of one per dot)."""
+    _tally("dots")
     partial = jnp.stack([jnp.vdot(u, v) for u, v in pairs])
-    total = jax.lax.psum(partial, row)
+    total = psum(partial, row)
     return tuple(total[i] for i in range(len(pairs)))
 
 
 def dotm_local(m: jax.Array, w: jax.Array, row: str) -> jax.Array:
     """Stacked dots m @ w for a (k, n_loc) local row-stack (GMRES Gram)."""
-    return jax.lax.psum(m @ w, row)
+    _tally("dots")
+    return psum(m @ w, row)
+
+
+def gram_local(vs: jax.Array, row: str) -> jax.Array:
+    """Full Gram matrix G = V Vᴴ of a (k, n_loc) local row-stack in ONE
+    psum — the block reduction of the s-step/communication-avoiding Krylov
+    methods: all k² inner products of one outer step in a single
+    synchronization (vs. one reduction per iteration for pipelined CG and
+    two for classic CG)."""
+    _tally("dots")
+    return psum(vs.conj() @ vs.T, row)
 
 
 def flat_index_local(row: str, col: str, q: int) -> jax.Array:
@@ -96,7 +165,8 @@ def bcast_local(x: jax.Array, src, d, axes) -> jax.Array:
     ``src`` to every process on ``axes`` (MPI_Bcast as a masked psum — the
     same collective idiom as SUMMA's panel broadcasts).  Non-source values
     are ignored."""
-    return jax.lax.psum(jnp.where(d == src, x, jnp.zeros_like(x)), axes)
+    _tally("bcast")
+    return psum(jnp.where(d == src, x, jnp.zeros_like(x)), axes)
 
 
 # --------------------------------------------------------------------------

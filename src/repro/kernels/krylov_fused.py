@@ -194,3 +194,71 @@ def fused_pipelined_dots_auto(r, u, w, *, block_rows: int = 256,
     (r, u, w), _ = _pad_lanes([r, u, w])
     return fused_pipelined_dots(r, u, w, block_rows=block_rows,
                                 interpret=_auto_interpret(interpret))
+
+
+# --------------------------------------------------------------------------
+# Fused Gram reduction (s-step / communication-avoiding Krylov): all k²
+# basis inner products G = V Vᵀ in ONE pass over the (k, n) row-stack —
+# the block analogue of ``fused_pipelined_dots`` (k(k+1)/2 distinct dots
+# for the price of one read of V), accumulated across the sequential
+# column-chunk grid in a VMEM scratch tile and written once at the end.
+# --------------------------------------------------------------------------
+
+def _gram_kernel(m_ref, out_ref, acc_ref, *, n_steps: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    mb = m_ref[...].astype(jnp.float32)            # (k_pad, bc) chunk
+    acc_ref[...] += jnp.dot(mb, mb.T, preferred_element_type=jnp.float32)
+
+    @pl.when(i == n_steps - 1)
+    def _done():
+        out_ref[...] = acc_ref[...]
+
+
+def fused_gram(m: jax.Array, *, block_cols: int = 2048,
+               interpret: bool = False) -> jax.Array:
+    """G = m @ m.T for a (k, n) row-stack in one memory pass; returns the
+    (k, k) float32 Gram matrix.  ``k`` must be a multiple of 8 (sublane
+    tile) and ``n`` a multiple of 128 (lane tile)."""
+    k, n = m.shape
+    if k % 8:
+        raise ValueError(f"k={k} must be a multiple of 8")
+    if n % _LANE:
+        raise ValueError(f"n={n} must be a multiple of {_LANE}")
+    bc = _LANE * _pick_block_rows(n // _LANE, block_cols // _LANE)
+    n_steps = n // bc
+
+    params = {}
+    if _CompilerParams is not None and not interpret:
+        params["compiler_params"] = _CompilerParams(
+            dimension_semantics=("arbitrary",))
+
+    out = pl.pallas_call(
+        functools.partial(_gram_kernel, n_steps=n_steps),
+        grid=(n_steps,),
+        in_specs=[pl.BlockSpec((k, bc), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((k, k), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((k, k), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((k, k), jnp.float32)],
+        interpret=interpret,
+        **params,
+    )(m)
+    return out
+
+
+def fused_gram_auto(m: jax.Array, *, block_cols: int = 2048,
+                    interpret: bool | None = None) -> jax.Array:
+    """``fused_gram`` for arbitrary (k, n): zero-pads rows to the sublane
+    tile and columns to the lane tile (pads contribute exact 0 to every
+    Gram entry), slices the (k, k) result back, restores the dtype."""
+    k, n = m.shape
+    pad_k, pad_n = (-k) % 8, (-n) % _LANE
+    if pad_k or pad_n:
+        m = jnp.pad(m, ((0, pad_k), (0, pad_n)))
+    g = fused_gram(m, block_cols=block_cols,
+                   interpret=_auto_interpret(interpret))
+    return g[:k, :k].astype(m.dtype)

@@ -83,6 +83,23 @@ def main():
           np.abs(np.asarray(cst.l)
                  - np.asarray(l_loc)[:, cst.layout.colperm]).max() <= TOL)
 
+    # -- lookahead pipeline: BITWISE factor parity + one extra broadcast --
+    from repro.core import pblas
+    st_no = lu.lu_factor_spmd(aj, block_size=nb, mesh=mesh, lookahead=False)
+    check("lu lookahead factor BITWISE == non-lookahead",
+          np.array_equal(np.asarray(st.lu), np.asarray(st_no.lu))
+          and np.array_equal(np.asarray(st.perm), np.asarray(st_no.perm)))
+    cst_no = cholesky.cholesky_factor_spmd(sj, block_size=nb, mesh=mesh,
+                                           lookahead=False)
+    check("cholesky lookahead factor BITWISE == non-lookahead",
+          np.array_equal(np.asarray(cst.l), np.asarray(cst_no.l)))
+    with pblas.collective_counts() as c_la:
+        lu.lu_factor_spmd(aj, block_size=nb, mesh=mesh, lookahead=True)
+    with pblas.collective_counts() as c_no:
+        lu.lu_factor_spmd(aj, block_size=nb, mesh=mesh, lookahead=False)
+    check("lu lookahead trace = non-lookahead + 1 pipeline-fill bcast",
+          c_la["bcast"] == c_no["bcast"] + 1)
+
     # -- padded case (n % nb != 0) through core/blocking -------------------
     n2 = 250
     a2 = rng.standard_normal((n2, n2)) + n2 * np.eye(n2)

@@ -43,7 +43,13 @@ def main(argv=None):
                          "squares (methods qr/lsqr/cgls)")
     ap.add_argument("--method", default="lu",
                     choices=["lu", "cholesky", "qr", "cg", "pipelined_cg",
-                             "bicg", "bicgstab", "gmres", "lsqr", "cgls"])
+                             "ca_cg", "ca_gmres", "bicg", "bicgstab",
+                             "gmres", "lsqr", "cgls"])
+    ap.add_argument("--s", type=int, default=2,
+                    help="s-step basis size for ca_cg/ca_gmres (the "
+                         "monomial basis conditions like kappa^s: keep "
+                         "s small in float32, raise under --dtype "
+                         "float64 — see docs/solvers.md)")
     ap.add_argument("--engine", default="gspmd", choices=["gspmd", "spmd"])
     ap.add_argument("--backend", default="ref", choices=["ref", "pallas"])
     ap.add_argument("--precond", default=None,
@@ -57,16 +63,17 @@ def main(argv=None):
 
     if args.dtype == "float64":
         jax.config.update("jax_enable_x64", True)
-    spd = args.method in ("cholesky", "cg", "pipelined_cg")
+    spd = args.method in ("cholesky", "cg", "pipelined_cg", "ca_cg")
     a, b = make_system(args.n, spd=spd, m=args.m,
                        dtype=np.dtype(args.dtype))
     mesh = solver_mesh() if args.distributed else None
 
     t0 = time.time()
+    extra = {"s": args.s} if args.method.startswith("ca_") else {}
     x = api.solve(jnp.asarray(a), jnp.asarray(b), method=args.method,
                   mesh=mesh, engine=args.engine, backend=args.backend,
                   tol=args.tol, block_size=args.block_size,
-                  precond=args.precond)
+                  precond=args.precond, **extra)
     x = jax.block_until_ready(x)
     dt = time.time() - t0
 

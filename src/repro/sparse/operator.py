@@ -103,7 +103,7 @@ class SparseSpmdLocalOperator(LinearOperator):
         self.row, self.nb, self.nbc = row, nb, nbc
 
     def matvec(self, v):
-        x_full = jax.lax.all_gather(v, self.row, tiled=True)   # (n_pad,)
+        x_full = pblas.all_gather(v, self.row, tiled=True)     # (n_pad,)
         xb = x_full.reshape(self.nbc, self.nb)
         y = jnp.einsum("rmij,rmj->ri", self.data_loc, xb[self.cols_loc])
         return y.reshape(-1)
@@ -113,7 +113,7 @@ class SparseSpmdLocalOperator(LinearOperator):
         contrib = jnp.einsum("rmij,ri->rmj", self.data_loc, xb)
         z = jnp.zeros((self.nbc, self.nb), v.dtype)
         z = z.at[self.cols_loc].add(contrib)
-        z = jax.lax.psum(z, self.row)                          # full Aᵀx
+        z = pblas.psum(z, self.row)                            # full Aᵀx
         i = jax.lax.axis_index(self.row)
         nbr_loc = self.data_loc.shape[0]
         z = jax.lax.dynamic_slice_in_dim(z, i * nbr_loc, nbr_loc)
@@ -127,6 +127,9 @@ class SparseSpmdLocalOperator(LinearOperator):
 
     def dotm(self, m, w):
         return pblas.dotm_local(m, w, self.row)
+
+    def block_dots(self, vs):
+        return pblas.gram_local(vs, self.row)       # ONE psum for the Gram
 
 
 def spmd_solve(method: Callable, a: formats.BSR, b: jax.Array, mesh, *,

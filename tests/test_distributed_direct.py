@@ -128,6 +128,51 @@ def test_spmd_triangular_solves(f64):
 
 
 # --------------------------------------------------------------------------
+# lookahead pipeline (acceptance: BITWISE parity with the non-lookahead
+# schedule — both consume byte-identical panel inputs — and exactly one
+# extra pipeline-fill broadcast in the lookahead trace)
+# --------------------------------------------------------------------------
+
+def _factor_bytes(method, a, lookahead):
+    if method == "lu":
+        st = lu.lu_factor_spmd(a, block_size=16, mesh=_mesh(),
+                               lookahead=lookahead)
+        return np.asarray(st.lu), np.asarray(st.perm)
+    st = cholesky.cholesky_factor_spmd(a, block_size=16, mesh=_mesh(),
+                                       lookahead=lookahead)
+    return np.asarray(st.l), None
+
+
+@pytest.mark.parametrize("method,spd", [("lu", False), ("cholesky", True)])
+def test_lookahead_bitwise_parity(f64, method, spd):
+    n = 128
+    a, _ = _system(n, spd=spd, seed=11)
+    f_la, p_la = _factor_bytes(method, jnp.asarray(a), True)
+    f_no, p_no = _factor_bytes(method, jnp.asarray(a), False)
+    assert np.array_equal(f_la, f_no)          # bitwise (== semantics)
+    if p_la is not None:
+        assert np.array_equal(p_la, p_no)
+
+
+@pytest.mark.parametrize("factor", [
+    functools.partial(lu.lu_factor_spmd, block_size=16),
+    functools.partial(cholesky.cholesky_factor_spmd, block_size=16),
+])
+def test_lookahead_one_extra_panel_broadcast(f64, factor):
+    """Trace-time collective tally: the fori_loop body traces ONCE, so
+    the steady-state schedule costs 1 broadcast per trace in both modes
+    and the lookahead adds exactly its pipeline-fill prologue."""
+    from repro.core import pblas
+    n = 128
+    a, _ = _system(n, spd=True, seed=12)
+    with pblas.collective_counts() as c_la:
+        factor(jnp.asarray(a), mesh=_mesh(), lookahead=True)
+    with pblas.collective_counts() as c_no:
+        factor(jnp.asarray(a), mesh=_mesh(), lookahead=False)
+    assert c_la["bcast"] == c_no["bcast"] + 1
+
+
+# --------------------------------------------------------------------------
 # the single-shard_map guarantee (acceptance: ONE shard_map-wrapped
 # factorization, no per-step re-entry)
 # --------------------------------------------------------------------------

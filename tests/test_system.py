@@ -37,7 +37,8 @@ def test_train_driver_moe():
 
 
 def test_solve_driver_all_methods():
-    for method in ("lu", "cholesky", "cg", "bicgstab", "gmres"):
+    for method in ("lu", "cholesky", "cg", "ca_cg", "ca_gmres",
+                   "bicgstab", "gmres"):
         res = solve_cli.main(["--n", "192", "--method", method,
                               "--block-size", "64", "--tol", "1e-8"])
         assert res < 1e-4
