@@ -193,6 +193,40 @@ print("RESULT " + json.dumps(
 """
 
 
+def run_resilience(n=1024, nb=64):
+    """ABFT checksum overhead (docs/solvers.md "Resilience").
+
+    Times the carried-checksum factorization (``abft=True``) against the
+    unchecked one — same mesh, same schedule; the checksum update is
+    O(n·nb) per step against the O(n²·nb) trailing GEMM, plus a constant
+    number of exit reductions.  Acceptance budget: <= 10% (ratio <= 1.10)
+    at n=1024.  Both jitted functions return the checksum error alongside
+    the factor so XLA cannot dead-code-eliminate the checksum column.
+    """
+    from repro.core import dist
+    mesh = dist.single_device_mesh()
+    a, _ = make_system(n, spd=False)
+    spd, _ = make_system(n, spd=True)
+    for name, factor, mat, field in (
+            ("lu", lu.lu_factor_spmd, a, "lu"),
+            ("cholesky", cholesky.cholesky_factor_spmd, spd, "l")):
+        mj = jnp.asarray(mat)
+
+        def plain(A, f=factor, fl=field):
+            return getattr(f(A, block_size=nb, mesh=mesh), fl)
+
+        def checked(A, f=factor, fl=field):
+            st = f(A, block_size=nb, mesh=mesh, abft=True)
+            return getattr(st, fl), st.abft_err
+
+        t0 = timeit(jax.jit(plain), mj)
+        t1 = timeit(jax.jit(checked), mj)
+        emit("direct_spmd", f"resilience_overhead_{name}_n{n}",
+             round(t1 / t0, 3), "ratio",
+             f"abft={t1 * 1e3:.1f}ms plain={t0 * 1e3:.1f}ms budget<=1.10 "
+             f"(CPU emulation)")
+
+
 def run_spmd(device_counts=(1, 2, 4, 8), n=1024, nb=64):
     """GFLOP/s of the distributed LU factorization vs host device count.
 
@@ -238,6 +272,7 @@ def run_spmd(device_counts=(1, 2, 4, 8), n=1024, nb=64):
         emit("direct_spmd", f"lu_spmd_mono_n{n}", round(min(ratios), 3),
              "ratio", f"worst successive-device-count GFLOP/s ratio; "
              f"curve {shape} (CPU emulation)")
+    run_resilience(n=n, nb=nb)
 
 
 def main(argv=None):

@@ -125,6 +125,15 @@ def available_methods(kind: str | None = None) -> tuple[str, ...]:
                         if kind is None or e.kind == kind))
 
 
+def register_fallback(method: str, fallback: str | None) -> None:
+    """Set the ``policy="resilient"`` escalation target for ``method``
+    (None removes it).  Thin forwarder to
+    :func:`repro.resilience.policy.register_fallback` — imported lazily,
+    the policy layer sits above this module."""
+    from repro.resilience import policy as _rpolicy
+    _rpolicy.register_fallback(method, fallback)
+
+
 # the TSQR pair is imported lazily: repro.eigls sits above the core
 # package, so module-level registration must not pull it in at import time
 def _tsqr_factor(a, **kw):
@@ -167,16 +176,79 @@ DIRECT = available_methods("direct")
 ITERATIVE = available_methods("iterative")
 
 
+def _validate_inputs(a, b, method: str, sparse: bool) -> None:
+    """Reject inputs no solver can recover from, with a pointer to the
+    fix.  Concrete arrays only — inside jit everything is a tracer and
+    the checks vanish (zero jaxpr overhead)."""
+    vals = a.data if sparse else a
+    for name, arr in (("a", vals), ("b", b)):
+        if arr is None or isinstance(arr, jax.core.Tracer):
+            continue
+        if not bool(jnp.all(jnp.isfinite(jnp.asarray(arr)))):
+            raise ValueError(
+                f"{name!r} contains non-finite entries (NaN/Inf) — no "
+                "solver can recover from a corrupted input; scrub it "
+                "(jnp.nan_to_num) or fix the producing computation")
+    if method == "cholesky" and not sparse \
+            and not isinstance(a, jax.core.Tracer) \
+            and getattr(a, "ndim", 0) == 2 and a.shape[0] == a.shape[1]:
+        aj = jnp.asarray(a)
+        d = jnp.diagonal(aj)
+        if bool(jnp.any(d <= 0)):
+            raise ValueError(
+                "method='cholesky' needs an SPD matrix but the diagonal "
+                "has non-positive entries — use method='lu' (general "
+                "square systems) or fix the matrix assembly")
+        asym = float(jnp.max(jnp.abs(aj - aj.T)))
+        scale = float(jnp.max(jnp.abs(aj)))
+        if asym > 1e-8 * max(scale, 1.0):
+            raise ValueError(
+                f"method='cholesky' needs a symmetric matrix but "
+                f"max|A - Aᵀ| = {asym:.3e} — symmetrize with "
+                "(a + a.T)/2 or use method='lu'")
+
+
 def solve(a: jax.Array, b: jax.Array, *, method: str = "lu",
           mesh=None, engine: str = "gspmd", backend: str = "ref",
           block_size: int = 128, tol: float = 1e-6, maxiter: int = 1000,
           restart: int = 32, precond: str | Callable | None = None,
+          x0: jax.Array | None = None, policy: str | None = None,
+          validate: bool = True, abft: bool = False,
           return_info: bool = False, **method_kwargs):
     """Solve A x = b.  Returns x, or the full :class:`SolveResult`
-    (iterations / residual / converged) when ``return_info=True``.
+    (iterations / residual / converged / info) when ``return_info=True``.
     ``**method_kwargs`` forwards solver-specific options declared in the
-    method's registry ``extra`` tuple (anything else is a TypeError)."""
+    method's registry ``extra`` tuple (anything else is a TypeError).
+
+    Resilience knobs (all off by default, zero overhead when off):
+
+    * ``x0`` — initial guess for the iterative methods (all engines);
+    * ``policy="resilient"`` — classify failures (health monitor, ABFT,
+      residual audit) and escalate: restart from the best iterate, drop
+      pallas→ref, walk the registered method fallback chain
+      (:func:`register_fallback`); the attempt history rides out in
+      ``SolveResult.info["attempts"]``;
+    * ``validate`` — reject non-finite / structurally unusable concrete
+      inputs up front (skipped under jit, where inputs are tracers);
+    * ``abft=True`` — carry the Huang–Abraham checksum column through
+      the distributed factorization (``engine='spmd'`` lu/cholesky) and
+      verify it at factor exit, raising
+      :class:`repro.resilience.abft.FactorCorruption` on mismatch.
+    """
     entry = get_method(method)
+    sparse_in = getattr(a, "is_sparse", False)
+    if validate:
+        _validate_inputs(a, b, method, sparse_in)
+    if policy not in (None, "none", "resilient"):
+        raise ValueError(f"unknown policy {policy!r}; expected "
+                         "'resilient' (or None)")
+    if policy == "resilient":
+        from repro.resilience import policy as _rpolicy
+        return _rpolicy.resilient_solve(
+            a, b, method=method, mesh=mesh, engine=engine, backend=backend,
+            block_size=block_size, tol=tol, maxiter=maxiter,
+            restart=restart, precond=precond, x0=x0,
+            return_info=return_info, **method_kwargs)
     unknown = set(method_kwargs) - set(entry.extra)
     if unknown:
         raise TypeError(f"method {method!r} does not accept "
@@ -188,7 +260,15 @@ def solve(a: jax.Array, b: jax.Array, *, method: str = "lu",
     # backend='pallas' + mesh is legal there (name check only)
     direct_spmd = entry.kind == "direct" and engine == "spmd"
     _blocking.check_backend(backend, None if direct_spmd else mesh)
-    sparse = getattr(a, "is_sparse", False)
+    sparse = sparse_in
+    if entry.kind == "direct" and x0 is not None:
+        raise ValueError(f"x0 is an iterative-method initial guess; "
+                         f"direct method {method!r} ignores it — drop x0 "
+                         "or pick an iterative method")
+    if abft and not (direct_spmd and method in ("lu", "cholesky")):
+        raise ValueError(
+            "abft=True is the distributed factorization checksum — it "
+            "requires engine='spmd' with method='lu' or 'cholesky'")
 
     # -- non-square audit: least squares is an explicit opt-in -------------
     rect = len(a.shape) >= 2 and a.shape[-2] != a.shape[-1]
@@ -218,6 +298,8 @@ def solve(a: jax.Array, b: jax.Array, *, method: str = "lu",
             # non-block-multiple n cannot pre-shard on the 2-D layout)
             a = dist.shard_matrix(a, mesh)
             b = dist.shard_vector(b, mesh)
+            if x0 is not None:
+                x0 = dist.shard_vector(x0, mesh)
 
     if entry.kind == "direct":
         if sparse:
@@ -234,7 +316,13 @@ def solve(a: jax.Array, b: jax.Array, *, method: str = "lu",
                     f"(engine='spmd') factorization; methods with one: "
                     f"{_spmd_direct_methods()} — engine='gspmd' runs any "
                     "direct method on sharded global arrays")
-            x = entry.spmd_apply(entry.spmd_factor(a, **kw), b, **kw)
+            if abft:
+                from repro.resilience import abft as _abft
+                state = entry.spmd_factor(a, abft=True, **kw)
+                _abft.verify(state)       # raises FactorCorruption
+            else:
+                state = entry.spmd_factor(a, **kw)
+            x = entry.spmd_apply(state, b, **kw)
         elif entry.factor is None:
             # legacy one-shot registration (no factor/apply split)
             if a.ndim == 3:
@@ -290,12 +378,12 @@ def solve(a: jax.Array, b: jax.Array, *, method: str = "lu",
         if sparse:
             from repro.sparse import operator as _sparse_operator
             result = _sparse_operator.spmd_solve(
-                entry.fn, a, b, mesh, tol=tol, maxiter=maxiter, precond=pc,
-                **extra)
+                entry.fn, a, b, mesh, x0=x0, tol=tol, maxiter=maxiter,
+                precond=pc, **extra)
         else:
-            result = _operator.spmd_solve(entry.fn, a, b, mesh, tol=tol,
-                                          maxiter=maxiter, precond=pc,
-                                          **extra)
+            result = _operator.spmd_solve(entry.fn, a, b, mesh, x0=x0,
+                                          tol=tol, maxiter=maxiter,
+                                          precond=pc, **extra)
     else:
         op = _operator.make_operator(a, mesh=mesh, backend=backend)
         if "matvec_t" in entry.requires and not op.has_transpose:
@@ -303,7 +391,7 @@ def solve(a: jax.Array, b: jax.Array, *, method: str = "lu",
         if "gram" in entry.requires and not op.supports_gram:
             raise ValueError(f"method {method!r} does not support batching")
         op.prepare(entry.requires)
-        result = entry.fn(op, b, tol=tol, maxiter=maxiter,
+        result = entry.fn(op, b, x0, tol=tol, maxiter=maxiter,
                           precond=pc.apply if pc is not None else None,
                           **extra)
     return result if return_info else result.x
@@ -311,7 +399,8 @@ def solve(a: jax.Array, b: jax.Array, *, method: str = "lu",
 
 def factorize(a: jax.Array, *, method: str = "lu", mesh=None,
               block_size: int = 128, backend: str = "ref",
-              engine: str = "gspmd"):
+              engine: str = "gspmd", validate: bool = True,
+              abft: bool = False):
     """Factor once, solve many (paper's two-step direct method, step 1).
 
     Any method registered with ``kind="direct"`` and a factor/apply split
@@ -319,12 +408,20 @@ def factorize(a: jax.Array, *, method: str = "lu", mesh=None,
     (B, n, n) returns a solver over (B, n[, k]) right-hand sides.
     ``engine="spmd"`` (mesh required) factors once with the block-cyclic
     distributed factorization; the returned solver runs the distributed
-    substitutions against the sharded factor state.
+    substitutions against the sharded factor state.  ``abft=True``
+    (engine='spmd' lu/cholesky) carries the checksum column and verifies
+    it at factor exit — see :func:`solve`.
     """
     if getattr(a, "is_sparse", False):
         raise ValueError("factorize is dense-only; sparse systems use the "
                          "iterative methods (or densify with a.to_dense())")
     entry = get_method(method)
+    if validate:
+        _validate_inputs(a, None, method, False)
+    if abft and not (engine == "spmd" and method in ("lu", "cholesky")):
+        raise ValueError(
+            "abft=True is the distributed factorization checksum — it "
+            "requires engine='spmd' with method='lu' or 'cholesky'")
     with_split = tuple(sorted(n for n, e in _REGISTRY.items()
                               if e.kind == "direct" and e.factor is not None))
     if entry.kind != "direct":
@@ -345,11 +442,14 @@ def factorize(a: jax.Array, *, method: str = "lu", mesh=None,
         _blocking.check_backend_name(backend)
         if a.ndim == 3:
             raise ValueError("batched solves are single-device (mesh=None)")
-        state = entry.spmd_factor(a, block_size=block_size, mesh=mesh,
-                                  backend=backend)
-        return functools.partial(entry.spmd_apply, state,
-                                 block_size=block_size, mesh=mesh,
-                                 backend=backend)
+        fkw = dict(block_size=block_size, mesh=mesh, backend=backend)
+        if abft:
+            from repro.resilience import abft as _abft
+            state = entry.spmd_factor(a, abft=True, **fkw)
+            _abft.verify(state)           # raises FactorCorruption
+        else:
+            state = entry.spmd_factor(a, **fkw)
+        return functools.partial(entry.spmd_apply, state, **fkw)
     if entry.factor is None:
         raise ValueError(f"direct method {method!r} has no factor/apply "
                          f"split; methods with one: {with_split}")
@@ -370,7 +470,7 @@ def factorize(a: jax.Array, *, method: str = "lu", mesh=None,
 
 def eigsolve(a, k: int = 6, *, which: str = "LA", method: str = "lanczos",
              mesh=None, backend: str = "ref", ncv=None, v0=None,
-             tol: float = 1e-8, n=None, dtype=None):
+             tol: float = 1e-8, n=None, dtype=None, validate: bool = True):
     """Compute ``k`` eigenpairs of ``a`` — the spectral half of the
     level-4 API.  Same opaque-engine contract as :func:`solve`: dense /
     sparse (BSR, matrix-free) / operator / bare-matvec inputs,
@@ -381,6 +481,9 @@ def eigsolve(a, k: int = 6, *, which: str = "LA", method: str = "lanczos",
     :class:`repro.eigls.eigen.EigResult`.
     """
     from repro.eigls import eigen
+    if validate and (getattr(a, "is_sparse", False)
+                     or getattr(a, "ndim", None) == 2):
+        _validate_inputs(a, v0, method, getattr(a, "is_sparse", False))
     kw = {} if dtype is None else {"dtype": dtype}
     return eigen.eigsolve(a, k, which=which, method=method, mesh=mesh,
                           backend=backend, ncv=ncv, v0=v0, tol=tol, n=n,

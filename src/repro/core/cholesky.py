@@ -18,8 +18,10 @@ import jax
 import jax.numpy as jnp
 from jax.scipy.linalg import solve_triangular
 from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
 
 from repro.core import blocking, dist, pblas
+from repro.resilience import inject
 
 
 def cholesky_factor(a: jax.Array, block_size: int = 128, mesh=None,
@@ -38,7 +40,7 @@ def cholesky_factor(a: jax.Array, block_size: int = 128, mesh=None,
     def step(s, a):
         k = s * nb
         akk = jax.lax.dynamic_slice(a, (k, k), (nb, nb))
-        lkk = jnp.linalg.cholesky(akk)                 # tiny, replicated
+        lkk = inject.tap("panel", jnp.linalg.cholesky(akk), step=s)
         a = jax.lax.dynamic_update_slice(a, lkk.astype(a.dtype), (k, k))
         if backend == "pallas" and fuse_panel:
             # L21 = A21 @ L11^{-T} via the pre-inverted diagonal block
@@ -64,6 +66,7 @@ def cholesky_factor(a: jax.Array, block_size: int = 128, mesh=None,
                                     interpret=interp)
             else:
                 a = a - l21m @ l21m.T
+        a = inject.tap("trailing", a, step=s)
         if mesh is not None:
             a = dist.constrain_matrix(a, mesh)
         return a
@@ -139,19 +142,34 @@ def solve(a: jax.Array, b: jax.Array, block_size: int = 128, mesh=None,
 @dataclasses.dataclass(frozen=True)
 class CholeskySpmdState:
     """L factor of the padded system, columns stored in cyclic
-    (process-major) order: ``state.l == L[:, layout.colperm]``."""
+    (process-major) order: ``state.l == L[:, layout.colperm]``.
+
+    ``abft_err`` (set by ``cholesky_factor_spmd(..., abft=True)``) is
+    the relative Huang–Abraham checksum residual
+    ``max|c − Lᵀ·e| / max‖L‖`` — a replicated scalar; validate it with
+    :func:`repro.resilience.abft.verify`."""
     layout: dist.CyclicLayout
     l: jax.Array
+    abft_err: jax.Array | None = None
 
 
 def cholesky_factor_spmd(a: jax.Array, *, block_size: int = 128, mesh=None,
-                         backend: str = "ref",
-                         lookahead: bool = True) -> CholeskySpmdState:
+                         backend: str = "ref", lookahead: bool = True,
+                         abft: bool = False) -> CholeskySpmdState:
     """Block-cyclic distributed Cholesky (ONE shard_map).
 
     ``lookahead=True`` factors+broadcasts panel k+1 during step k's bulk
     SYRK update (pipeline overlap; see the section comment) — the
     resulting factor is bitwise identical to ``lookahead=False``.
+
+    ``abft=True`` carries a Huang–Abraham checksum column ``c = A·e``
+    through the same left-transforms the elimination applies (per step:
+    ``c[k:k+nb] ← Lkk⁻¹ c[k:k+nb]``, ``c −= L21·c[k:k+nb]`` — replicated
+    O(n·nb) work, no extra collectives), so at exit ``c = L⁻¹A·e = Lᵀ·e``
+    — the column sums of L.  The relative mismatch lands in
+    ``CholeskySpmdState.abft_err`` (one extra psum total); validate with
+    :func:`repro.resilience.abft.verify`.  ``abft=False`` traces the
+    byte-identical original program.
     """
     from repro.core.lu import _spmd_prep
     a, lay, backend = _spmd_prep(a, block_size, mesh, backend)
@@ -177,7 +195,7 @@ def cholesky_factor_spmd(a: jax.Array, *, block_size: int = 128, mesh=None,
         l21_full = solve_triangular(lkk, pan0.T, lower=True).T
         return jnp.where(rows_g >= k + nb, l21_full.astype(raw.dtype), pan0)
 
-    def body(a_loc):
+    def body(a_loc, *c0):
         d = pblas.flat_index_local(row, col, q)
         gcol = lay.local_gcol(d, a_loc.shape[1])
 
@@ -191,12 +209,17 @@ def cholesky_factor_spmd(a: jax.Array, *, block_size: int = 128, mesh=None,
                     jax.lax.dynamic_slice(a_loc, (0, t * nb), (n, nb)),
                     s * nb),
                 lambda _: jnp.zeros((n, nb), a_loc.dtype), None)
-            return pblas.bcast_local(pan, owner, d, axes)
+            return inject.tap("panel", pblas.bcast_local(pan, owner, d, axes),
+                              step=s, rank=d)
 
-        def consume(a_loc, pan, s, factor_next: bool):
+        def consume(carry, pan, s, factor_next: bool):
             """Owner store + SPLIT rank-nb SYRK: next panel's block column
             eagerly (owner-only cond, with the lookahead factorization
             when ``factor_next``), rest via the masked Level-3 GEMM."""
+            if abft:
+                a_loc, c = carry
+            else:
+                (a_loc,) = carry
             k = s * nb
             owner, t = lay.owner_of(s), lay.slot_of(s)
             owner2, t2 = lay.owner_of(s + 1), lay.slot_of(s + 1)
@@ -208,6 +231,16 @@ def cholesky_factor_spmd(a: jax.Array, *, block_size: int = 128, mesh=None,
                                              (0, t * nb)),
                 a_loc)
             l21m = jnp.where(rows_g >= k + nb, pan, 0).astype(a_loc.dtype)
+            if abft:
+                # checksum rides the elimination's LEFT transforms
+                # (c[k:k+nb] ← Lkk⁻¹·, trailing −= L21·) so at exit
+                # c = L⁻¹A·e = Lᵀ·e; replicated, no collectives
+                lkk = jax.lax.dynamic_slice(pan, (k, 0), (nb, nb))
+                c_blk = jax.lax.dynamic_slice(c, (k,), (nb,))
+                u_c = solve_triangular(
+                    lkk, c_blk[:, None], lower=True)[:, 0].astype(c.dtype)
+                c = jax.lax.dynamic_update_slice(c, u_c, (k,))
+                c = c - l21m @ u_c
             # -- eager update of the NEXT panel's block column ------------
             sel = (d == owner2) & valid
 
@@ -237,27 +270,49 @@ def cholesky_factor_spmd(a: jax.Array, *, block_size: int = 128, mesh=None,
                                             bk=nb, interpret=interp)
             else:
                 a_loc = a_loc - l21m @ l21_rest.T
+            a_loc = inject.tap("trailing", a_loc, step=s, rank=d)
+            base = (a_loc, c) if abft else (a_loc,)
             if not factor_next:
-                return a_loc
-            return a_loc, pblas.bcast_local(out[1], owner2, d, axes)
+                return base
+            pan2 = pblas.bcast_local(out[1], owner2, d, axes)
+            return base + (inject.tap("panel", pan2, step=s + 1, rank=d),)
 
+        init = (a_loc,) + ((c0[0],) if abft else ())
+        keep = 2 if abft else 1
         if lookahead:
             def step(s, carry):
-                a_loc, pan = carry
-                return consume(a_loc, pan, s, factor_next=True)
+                return consume(carry[:keep], carry[keep], s,
+                               factor_next=True)
 
             pan1 = factor_bcast(a_loc, 0)                 # pipeline fill
-            a_loc = jax.lax.fori_loop(0, nblocks, step, (a_loc, pan1))[0]
+            fin = jax.lax.fori_loop(0, nblocks, step, init + (pan1,))[:keep]
         else:
-            def step(s, a_loc):
-                pan = factor_bcast(a_loc, s)
-                return consume(a_loc, pan, s, factor_next=False)
+            def step(s, carry):
+                pan = factor_bcast(carry[0], s)
+                return consume(carry, pan, s, factor_next=False)
 
-            a_loc = jax.lax.fori_loop(0, nblocks, step, a_loc)
+            fin = jax.lax.fori_loop(0, nblocks, step, init)
         # global tril on the cyclic layout: keep (i, gcol) with i >= gcol
-        return jnp.where(rows_g >= gcol[None, :], a_loc, 0)
+        l_fin = jnp.where(rows_g >= gcol[None, :], fin[0], 0)
+        if not abft:
+            return l_fin
+        # exit invariant: c = Lᵀ·e (column sums of L).  Scatter my
+        # columns' mismatch + scale into a global vector — ONE psum.
+        dv = jnp.zeros((2, n), l_fin.dtype)
+        dv = dv.at[0, gcol].set(jnp.abs(fin[1][gcol] - jnp.sum(l_fin, 0)))
+        dv = dv.at[1, gcol].set(jnp.sum(jnp.abs(l_fin), 0))
+        dv = pblas.psum(dv, axes)
+        scale = jnp.maximum(jnp.max(dv[1]), jnp.asarray(1.0, l_fin.dtype))
+        return l_fin, jnp.max(dv[0]) / scale
 
     spec = lay.matrix_spec()
+    if abft:
+        # checksum seed c0 = A·e (row sums), replicated — the cyclic
+        # column permutation is storage-only, natural-order sums apply
+        l_cyc, err = shard_map(body, mesh=mesh, in_specs=(spec, P()),
+                               out_specs=(spec, P()), check_rep=False)(
+            a[:, lay.colperm], jnp.sum(a, axis=1))
+        return CholeskySpmdState(lay, l_cyc, err)
     l_cyc = shard_map(body, mesh=mesh, in_specs=(spec,),
                       out_specs=spec, check_rep=False)(a[:, lay.colperm])
     return CholeskySpmdState(lay, l_cyc)

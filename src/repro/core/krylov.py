@@ -19,6 +19,12 @@ callable in place of the operator.
 All loops are ``lax.while_loop`` with fixed-shape carries, so they jit and
 lower for the production mesh.  Convergence uses the recurrence residual
 ⟨r,r⟩ carried by the fused update — no extra reduction per iteration.
+
+Every driver carries a :mod:`repro.resilience.monitor` health record in
+its loop state: one non-finite/divergence/stagnation/breakdown taxonomy
+(replacing the historical per-method ad-hoc cutoffs) computed from the
+already-reduced recurrence scalars — zero extra collectives — and
+surfaced as ``SolveResult.info['fail_code'/'fail_iter']``.
 """
 from __future__ import annotations
 
@@ -29,6 +35,15 @@ import jax.numpy as jnp
 import jax.scipy.linalg  # noqa: F401  (solve_triangular in ca_gmres)
 
 from repro.core.operator import LinearOperator, as_operator
+from repro.resilience import monitor
+
+# divergence cutoffs, in the metric each driver carries.  The CG family
+# tracks SQUARED norms, so 1e8 on ⟨r,r⟩ is 1e4 on ‖r‖ — generous for
+# CG's legitimately non-monotone residuals, a hard stop for blow-up.
+_DIV_SQ = 1e8          # classic drivers on ⟨r,r⟩
+_DIV_CA_SQ = 1e4       # ca_cg on ⟨r,r⟩ (diverges hard at the f32 floor)
+_DIV_CGLS_SQ = 1e2     # cgls on ‖Aᵀr‖² (normal equations square cond(A))
+_DIV_NORM = 1e6        # gmres / lsqr on plain norms
 
 
 class SolveResult(NamedTuple):
@@ -36,6 +51,7 @@ class SolveResult(NamedTuple):
     iterations: jax.Array
     residual: jax.Array       # final ||b - Ax|| (2-norm; recurrence-based)
     converged: jax.Array
+    info: dict | None = None  # health taxonomy: fail_code / fail_iter
 
 
 def _safe_div(num, den):
@@ -70,16 +86,15 @@ def cg(op: LinearOperator | Callable, b: jax.Array,
     rz0 = op.dot(r0, z0)
     rr0 = rz0 if m is None else op.dot(r0, r0)
     alpha0 = jnp.ones_like(rz0)
+    h0 = monitor.init(rr0)
 
     def cond(c):
-        x, r, p, rz, rr, alpha, k = c
-        # alpha = 0 only via _safe_div breakdown (⟨p, Ap⟩ vanished — A
-        # singular / not SPD); terminate instead of stalling to maxiter.
-        return op.reduce_any((jnp.sqrt(rr) > atol) & (jnp.abs(alpha) > 0)) \
+        x, r, p, rz, rr, alpha, k, h = c
+        return op.reduce_any((jnp.sqrt(rr) > atol) & monitor.ok(h)) \
             & (k < maxiter)
 
     def body(c):
-        x, r, p, rz, rr, alpha, k = c
+        x, r, p, rz, rr, alpha, k, h = c
         ap = op.matvec(p)
         alpha = _safe_div(rz, op.dot(p, ap))
         x, r, rr = op.update(x, r, p, ap, alpha)    # fused single pass
@@ -87,12 +102,16 @@ def cg(op: LinearOperator | Callable, b: jax.Array,
         rz_new = rr if m is None else op.dot(r, z)
         beta = _safe_div(rz_new, rz)
         p = z + op.scale(beta, p)
-        return (x, r, p, rz_new, rr, alpha, k + 1)
+        # alpha = 0 only via _safe_div breakdown (⟨p, Ap⟩ vanished — A
+        # singular / not SPD); flag it unless the residual converged.
+        brk = (jnp.abs(alpha) == 0) & (jnp.sqrt(rr) > atol)
+        h = monitor.update(h, rr, k + 1, breakdown=brk, divergence=_DIV_SQ)
+        return (x, r, p, rz_new, rr, alpha, k + 1, h)
 
-    x, _, _, _, rr, _, k = jax.lax.while_loop(
-        cond, body, (x0, r0, p0, rz0, rr0, alpha0, 0))
+    x, _, _, _, rr, _, k, h = jax.lax.while_loop(
+        cond, body, (x0, r0, p0, rz0, rr0, alpha0, 0, h0))
     res = jnp.sqrt(rr)
-    return SolveResult(x, k, res, res <= atol)
+    return SolveResult(x, k, res, res <= atol, monitor.info(h))
 
 
 # --------------------------------------------------------------------------
@@ -117,16 +136,15 @@ def pipelined_cg(op: LinearOperator | Callable, b: jax.Array,
     alpha0 = _safe_div(gamma0, delta0)
     beta0 = jnp.zeros_like(gamma0)
     pz = jnp.zeros_like(b)
+    h0 = monitor.init(rr0)
 
     def cond(c):
-        x, r, u, w, p, s, gamma, alpha, beta, rr, k = c
-        # alpha = 0 only via _safe_div breakdown (gamma or the CG-CG
-        # denominator vanished) — terminate instead of stalling.
-        return op.reduce_any((jnp.sqrt(rr) > atol) & (jnp.abs(alpha) > 0)) \
+        x, r, u, w, p, s, gamma, alpha, beta, rr, k, h = c
+        return op.reduce_any((jnp.sqrt(rr) > atol) & monitor.ok(h)) \
             & (k < maxiter)
 
     def body(c):
-        x, r, u, w, p, s, gamma, alpha, beta, rr, k = c
+        x, r, u, w, p, s, gamma, alpha, beta, rr, k, h = c
         p = u + op.scale(beta, p)
         s = w + op.scale(beta, s)              # s = A p, by recurrence
         x = x + op.scale(alpha, p)
@@ -137,13 +155,18 @@ def pipelined_cg(op: LinearOperator | Callable, b: jax.Array,
         beta = _safe_div(gamma_new, gamma)
         alpha = _safe_div(gamma_new, delta - _safe_div(beta * gamma_new,
                                                        alpha))
-        return (x, r, u, w, p, s, gamma_new, alpha, beta, rr, k + 1)
+        # alpha = 0 only via _safe_div breakdown (gamma or the CG-CG
+        # denominator vanished) — flag it unless converged.
+        brk = (jnp.abs(alpha) == 0) & (jnp.sqrt(rr) > atol)
+        h = monitor.update(h, rr, k + 1, breakdown=brk, divergence=_DIV_SQ)
+        return (x, r, u, w, p, s, gamma_new, alpha, beta, rr, k + 1, h)
 
     out = jax.lax.while_loop(
-        cond, body, (x0, r0, u0, w0, pz, pz, gamma0, alpha0, beta0, rr0, 0))
-    x, rr, k = out[0], out[9], out[10]
+        cond, body,
+        (x0, r0, u0, w0, pz, pz, gamma0, alpha0, beta0, rr0, 0, h0))
+    x, rr, k, h = out[0], out[9], out[10], out[11]
     res = jnp.sqrt(rr)
-    return SolveResult(x, k, res, res <= atol)
+    return SolveResult(x, k, res, res <= atol, monitor.info(h))
 
 
 # --------------------------------------------------------------------------
@@ -213,14 +236,16 @@ def ca_cg(op: LinearOperator | Callable, b: jax.Array,
     r0 = b - op.matvec(x0)
     rr0 = op.dot(r0, r0)
     k0 = jnp.asarray(0, jnp.int32)
+    h0 = monitor.init(rr0)
 
     def cond(c):
-        x, r, p, rr, k, alive, xb, rrb = c
+        x, r, p, rr, k, h, xb, rrb = c
         return op.reduce_any(
-            (jnp.sqrt(jnp.maximum(rr, 0)) > atol) & alive) & (k < maxiter)
+            (jnp.sqrt(jnp.maximum(rr, 0)) > atol) & monitor.ok(h)) \
+            & (k < maxiter)
 
     def body(c):
-        x, r, p, rr_in, k, _, xb, rrb = c
+        x, r, p, rr_in, k, h, xb, rrb = c
         rows = _matrix_powers(op, p, s) + _matrix_powers(op, r, s - 1)
         basis = jnp.stack(rows)                     # (2s+1, n) row-stack
         g = op.block_dots(basis)                    # ONE reduction
@@ -281,22 +306,24 @@ def ca_cg(op: LinearOperator | Callable, b: jax.Array,
         x = x + (xc * d) @ basis
         r = (rc * d) @ basis
         p = (pc * d) @ basis
-        # best-so-far + divergence guard: at the attainable-accuracy
-        # floor of the working precision the s-step recurrence DIVERGES
-        # (a known CA-CG property) rather than stalling like classic CG.
-        # Track the best iterate and stop once the residual has run 1e4x
-        # past it — generous enough for CG's legitimate non-monotone
-        # residual norms, a hard stop for genuine blow-up.
+        # best-so-far + monitor: at the attainable-accuracy floor of the
+        # working precision the s-step recurrence DIVERGES (a known
+        # CA-CG property) rather than stalling like classic CG.  Track
+        # the best iterate; the health monitor classifies the blow-up
+        # (_DIV_CA_SQ x past best ⟨r,r⟩) and the basis losing all rank
+        # (s_eff = 0, an exact breakdown of the outer step).
         better = rr < rrb
         xb = jnp.where(better, x, xb)
         rrb = jnp.where(better, rr, rrb)
-        alive = (s_eff > 0) & (rr < 1e4 * rrb)
-        return (x, r, p, rr, kk, alive, xb, rrb)
+        brk = (s_eff == 0) & (jnp.sqrt(jnp.maximum(rr, 0)) > atol)
+        h = monitor.update(h, rr, kk, breakdown=brk,
+                           divergence=_DIV_CA_SQ)
+        return (x, r, p, rr, kk, h, xb, rrb)
 
-    _, _, _, _, k, _, xb, rrb = jax.lax.while_loop(
-        cond, body, (x0, r0, r0, rr0, k0, jnp.asarray(True), x0, rr0))
+    _, _, _, _, k, h, xb, rrb = jax.lax.while_loop(
+        cond, body, (x0, r0, r0, rr0, k0, h0, x0, rr0))
     res = jnp.sqrt(jnp.maximum(rrb, 0))
-    return SolveResult(xb, k, res, res <= atol)
+    return SolveResult(xb, k, res, res <= atol, monitor.info(h))
 
 
 def ca_gmres(op: LinearOperator | Callable, b: jax.Array,
@@ -374,25 +401,31 @@ def ca_gmres(op: LinearOperator | Callable, b: jax.Array,
         return x + y @ q[:s], res, s_eff >= 1
 
     def cond(st):
-        x, res, alive, k = st
-        return (res > atol) & alive & (k < maxiter)
+        x, res, h, k = st
+        return (res > atol) & monitor.ok(h) & (k < maxiter)
 
     def body(st):
-        x, res, _, k = st
+        x, res, h, k = st
         x2, res2, ok = cycle(x)
         # restart-monotonicity backstop: a cycle that fails to strictly
         # improve the least-squares residual (stagnation, or NaNs past
         # every mask) is discarded and ends the iteration — the best
         # iterate is kept.  Strict <, else a frozen cycle (y == 0)
-        # would spin to maxiter on its own constant residual.
+        # would spin to maxiter on its own constant residual.  The
+        # monitor classifies: non-finite cycle residual, a basis with no
+        # independent columns (s_eff < 1, exact breakdown), or the
+        # stagnated no-improvement cycle (window 1 == strict
+        # monotonicity, matching the historical probe).
         better = jnp.isfinite(res2) & (res2 < res)
+        h = monitor.update(h, res2, k + 1,
+                           breakdown=(~ok) & (res > atol), stagnation=1)
         return (jnp.where(better, x2, x), jnp.where(better, res2, res),
-                ok & better, k + 1)
+                h, k + 1)
 
     res0 = op.norm(b - op.matvec(x0))
-    x, res, _, k = jax.lax.while_loop(
-        cond, body, (x0, res0, jnp.asarray(True), 0))
-    return SolveResult(x, k, res, res <= atol)
+    x, res, h, k = jax.lax.while_loop(
+        cond, body, (x0, res0, monitor.init(res0), 0))
+    return SolveResult(x, k, res, res <= atol, monitor.info(h))
 
 
 # --------------------------------------------------------------------------
@@ -417,14 +450,15 @@ def bicg(op: LinearOperator | Callable, b: jax.Array,
     p0, pt0 = z0, zt0
     rz0 = op.dot(rt0, z0)
     rr0 = op.dot(r0, r0)
+    h0 = monitor.init(rr0)
 
     def cond(c):
-        x, r, rt, p, pt, rz, rr, k = c
-        return op.reduce_any((jnp.sqrt(rr) > atol) & (jnp.abs(rz) > 0)) \
+        x, r, rt, p, pt, rz, rr, k, h = c
+        return op.reduce_any((jnp.sqrt(rr) > atol) & monitor.ok(h)) \
             & (k < maxiter)
 
     def body(c):
-        x, r, rt, p, pt, rz, rr, k = c
+        x, r, rt, p, pt, rz, rr, k, h = c
         ap = op.matvec(p)
         atpt = op.matvec_t(pt)
         alpha = _safe_div(rz, op.dot(pt, ap))
@@ -436,13 +470,16 @@ def bicg(op: LinearOperator | Callable, b: jax.Array,
         beta = _safe_div(rz_new, rz)
         p = z + op.scale(beta, p)
         pt = zt + op.scale(jnp.conj(beta), pt)
-        return (x, r, rt, p, pt, rz_new, rr, k + 1)
+        # the serious BiCG breakdown: ⟨r̃, z⟩ = 0 with r not yet small
+        brk = (jnp.abs(rz_new) == 0) & (jnp.sqrt(rr) > atol)
+        h = monitor.update(h, rr, k + 1, breakdown=brk, divergence=_DIV_SQ)
+        return (x, r, rt, p, pt, rz_new, rr, k + 1, h)
 
     out = jax.lax.while_loop(cond, body,
-                             (x0, r0, rt0, p0, pt0, rz0, rr0, 0))
-    x, rr, k = out[0], out[6], out[7]
+                             (x0, r0, rt0, p0, pt0, rz0, rr0, 0, h0))
+    x, rr, k, h = out[0], out[6], out[7], out[8]
     res = jnp.sqrt(rr)
-    return SolveResult(x, k, res, res <= atol)
+    return SolveResult(x, k, res, res <= atol, monitor.info(h))
 
 
 # --------------------------------------------------------------------------
@@ -463,16 +500,15 @@ def bicgstab(op: LinearOperator | Callable, b: jax.Array,
     rr0 = op.dot(r0, r0)
     one = jnp.ones_like(rr0)
     v0 = p0 = jnp.zeros_like(b)
+    h0 = monitor.init(rr0)
 
     def cond(c):
-        x, r, p, v, rho, alpha, omega, rr, k = c
-        # rho = 0 or omega = 0 is the classic BiCGSTAB breakdown; with
-        # _safe_div the iterates stay finite, so terminate explicitly.
-        return op.reduce_any((jnp.sqrt(rr) > atol) & (jnp.abs(rho) > 0)
-                             & (jnp.abs(omega) > 0)) & (k < maxiter)
+        x, r, p, v, rho, alpha, omega, rr, k, h = c
+        return op.reduce_any((jnp.sqrt(rr) > atol) & monitor.ok(h)) \
+            & (k < maxiter)
 
     def body(c):
-        x, r, p, v, rho, alpha, omega, rr, k = c
+        x, r, p, v, rho, alpha, omega, rr, k, h = c
         rho_new = op.dot(rhat, r)
         # ratio-of-ratios, not a product quotient: rho*omega can underflow
         beta = _safe_div(rho_new, rho) * _safe_div(alpha, omega)
@@ -486,13 +522,18 @@ def bicgstab(op: LinearOperator | Callable, b: jax.Array,
         omega = _safe_div(*op.dots(((t, s), (t, t))))  # one reduction
         xh = x + op.scale(alpha, phat)
         x, r, rr = op.update(xh, s, shat, t, omega)   # x=xh+ωŝ, r=s−ωt, ⟨r,r⟩
-        return (x, r, p, v, rho_new, alpha, omega, rr, k + 1)
+        # rho = 0 or omega = 0 is the classic BiCGSTAB breakdown; with
+        # _safe_div the iterates stay finite, so classify explicitly.
+        brk = ((jnp.abs(rho_new) == 0) | (jnp.abs(omega) == 0)) \
+            & (jnp.sqrt(rr) > atol)
+        h = monitor.update(h, rr, k + 1, breakdown=brk, divergence=_DIV_SQ)
+        return (x, r, p, v, rho_new, alpha, omega, rr, k + 1, h)
 
     out = jax.lax.while_loop(cond, body,
-                             (x0, r0, p0, v0, one, one, one, rr0, 0))
-    x, rr, k = out[0], out[7], out[8]
+                             (x0, r0, p0, v0, one, one, one, rr0, 0, h0))
+    x, rr, k, h = out[0], out[7], out[8], out[9]
     res = jnp.sqrt(rr)
-    return SolveResult(x, k, res, res <= atol)
+    return SolveResult(x, k, res, res <= atol, monitor.info(h))
 
 
 # --------------------------------------------------------------------------
@@ -595,18 +636,24 @@ def gmres(op: LinearOperator | Callable, b: jax.Array,
         return x + dx
 
     def cond(c):
-        x, res, k = c
-        return (res > atol) & (k < maxiter)
+        x, res, k, h = c
+        return (res > atol) & monitor.ok(h) & (k < maxiter)
 
     def body(c):
-        x, _, k = c
+        x, _, k, h = c
         x = cycle(x)
         res = op.norm(b - op.matvec(x))
-        return (x, res, k + 1)
+        # taxonomy only (non-finite / blow-up / frozen restarts): three
+        # whole cycles without a new best residual means the restart
+        # space stopped helping — stop instead of spinning to maxiter.
+        h = monitor.update(h, res, k + 1, divergence=_DIV_NORM,
+                           stagnation=3)
+        return (x, res, k + 1, h)
 
     res0 = op.norm(b - op.matvec(x0))
-    x, res, k = jax.lax.while_loop(cond, body, (x0, res0, 0))
-    return SolveResult(x, k, res, res <= atol)
+    x, res, k, h = jax.lax.while_loop(cond, body,
+                                      (x0, res0, 0, monitor.init(res0)))
+    return SolveResult(x, k, res, res <= atol, monitor.info(h))
 
 
 # --------------------------------------------------------------------------
@@ -647,24 +694,21 @@ def cgls(op: LinearOperator | Callable, b: jax.Array,
     p0 = z0
     gamma0 = op.dot(s0, z0)
     ss0 = gamma0 if m is None else op.dot(s0, s0)
+    h0 = monitor.init(ss0)
 
     # The normal equations square the conditioning, so in low precision
     # CGLS hits its attainable-accuracy floor early and then DIVERGES
     # (the classic CG instability past the floor).  Track the best
-    # iterate and cut off once ‖Aᵀr‖² has grown 100x past its best —
-    # the answer returned is always the best one seen.
-    blow = jnp.asarray(100.0, ss0.dtype)
+    # iterate; the monitor cuts off once ‖Aᵀr‖² has grown _DIV_CGLS_SQ x
+    # past its best — the answer returned is always the best one seen.
 
     def cond(c):
-        x, r, p, gamma, ss, xb, ssb, k = c
-        # gamma = 0 only via breakdown (⟨q, q⟩ or ⟨s, z⟩ vanished —
-        # solution reached or M indefinite); terminate instead of stalling
-        live = (jnp.sqrt(ss) > atol) & (jnp.abs(gamma) > 0) \
-            & (ss <= blow * ssb)
-        return op.reduce_any(live) & (k < maxiter)
+        x, r, p, gamma, ss, xb, ssb, k, h = c
+        return op.reduce_any((jnp.sqrt(ss) > atol) & monitor.ok(h)) \
+            & (k < maxiter)
 
     def body(c):
-        x, r, p, gamma, ss, xb, ssb, k = c
+        x, r, p, gamma, ss, xb, ssb, k, h = c
         q = op.matvec(p)
         alpha = _safe_div(gamma, op.dot(q, q))
         x, r = op.axpy_pair(x, p, r, q, alpha)      # fused when m == n
@@ -677,13 +721,18 @@ def cgls(op: LinearOperator | Callable, b: jax.Array,
         ssb = jnp.minimum(ss, ssb)
         beta = _safe_div(gamma_new, gamma)
         p = z + op.scale(beta, p)
-        return (x, r, p, gamma_new, ss, xb, ssb, k + 1)
+        # gamma = 0 only via breakdown (⟨q, q⟩ or ⟨s, z⟩ vanished —
+        # solution reached or M indefinite)
+        brk = (jnp.abs(gamma_new) == 0) & (jnp.sqrt(ss) > atol)
+        h = monitor.update(h, ss, k + 1, breakdown=brk,
+                           divergence=_DIV_CGLS_SQ)
+        return (x, r, p, gamma_new, ss, xb, ssb, k + 1, h)
 
     out = jax.lax.while_loop(cond, body,
-                             (x0, r0, p0, gamma0, ss0, x0, ss0, 0))
-    xb, ssb, k = out[5], out[6], out[7]
+                             (x0, r0, p0, gamma0, ss0, x0, ss0, 0, h0))
+    xb, ssb, k, h = out[5], out[6], out[7], out[8]
     res = jnp.sqrt(ssb)
-    return SolveResult(xb, k, res, res <= atol)
+    return SolveResult(xb, k, res, res <= atol, monitor.info(h))
 
 
 def lsqr(op: LinearOperator | Callable, b: jax.Array,
@@ -708,13 +757,15 @@ def lsqr(op: LinearOperator | Callable, b: jax.Array,
     alfa0 = op.norm(av)
     v0 = op.scale(_safe_div(jnp.ones_like(alfa0), alfa0), av)
     arnorm0 = alfa0 * beta0                    # ‖Aᵀr₀‖ exactly at x₀
+    h0 = monitor.init(arnorm0)
 
     def cond(c):
-        x, w, u, v, alfa, phibar, rhobar, arnorm, k = c
-        return op.reduce_any(arnorm > atol) & (k < maxiter)
+        x, w, u, v, alfa, phibar, rhobar, arnorm, k, h = c
+        return op.reduce_any((arnorm > atol) & monitor.ok(h)) \
+            & (k < maxiter)
 
     def body(c):
-        x, w, u, v, alfa, phibar, rhobar, arnorm, k = c
+        x, w, u, v, alfa, phibar, rhobar, arnorm, k, h = c
         # -- continue the bidiagonalization --------------------------------
         u = op.matvec(v) - op.scale(alfa, u)
         beta = op.norm(u)
@@ -738,10 +789,11 @@ def lsqr(op: LinearOperator | Callable, b: jax.Array,
         arnorm = phibar_new * alfa_new * jnp.abs(cs)
         arnorm = jnp.where((beta == 0) | (alfa_new == 0),
                            jnp.zeros_like(arnorm), arnorm)
+        h = monitor.update(h, arnorm, k + 1, divergence=_DIV_NORM)
         return (x, w, u, v_new, alfa_new, phibar_new, rhobar_new,
-                arnorm, k + 1)
+                arnorm, k + 1, h)
 
     out = jax.lax.while_loop(
-        cond, body, (x0, v0, u0, v0, alfa0, beta0, alfa0, arnorm0, 0))
-    x, arnorm, k = out[0], out[7], out[8]
-    return SolveResult(x, k, arnorm, arnorm <= atol)
+        cond, body, (x0, v0, u0, v0, alfa0, beta0, alfa0, arnorm0, 0, h0))
+    x, arnorm, k, h = out[0], out[7], out[8], out[9]
+    return SolveResult(x, k, arnorm, arnorm <= atol, monitor.info(h))

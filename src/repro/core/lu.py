@@ -51,6 +51,7 @@ from jax.sharding import PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from repro.core import blocking, dist, pblas
+from repro.resilience import inject
 
 
 def _panel_factor(pan: jax.Array, k):
@@ -122,6 +123,7 @@ def lu_factor(a: jax.Array, block_size: int = 128, mesh=None,
             colblk = dist.constrain(colblk, mesh,
                                     jax.sharding.PartitionSpec(row_ax, None))
         pan, perm = _panel_factor(colblk, k)
+        pan = inject.tap("panel", pan, step=s)
         # one gather applies the whole panel's swap sequence (identity on
         # the already-factored rows) to L history + trailing matrix
         a = jnp.take(a, perm, axis=0)
@@ -155,6 +157,7 @@ def lu_factor(a: jax.Array, block_size: int = 128, mesh=None,
                                     bk=nb, interpret=interp)
             else:
                 a = a - l21 @ u12
+        a = inject.tap("trailing", a, step=s)
         if mesh is not None:
             a = dist.constrain_matrix(a, mesh)
         return a, perm_total
@@ -255,10 +258,16 @@ class LuSpmdState:
     permutation.  The storage permutation is invisible to the math: the
     factorization/substitution bodies index blocks by their *global*
     position, so the factor, right-hand sides and solutions all live in
-    natural row/column order."""
+    natural row/column order.
+
+    ``abft_err`` (set by ``lu_factor_spmd(..., abft=True)``) is the
+    relative Huang–Abraham checksum residual ``max|c − U·e| / max‖U‖`` —
+    a replicated scalar; validate it with
+    :func:`repro.resilience.abft.verify`."""
     layout: dist.CyclicLayout
     lu: jax.Array
     perm: jax.Array
+    abft_err: jax.Array | None = None
 
 
 def _spmd_prep(a, block_size, mesh, backend):
@@ -273,13 +282,27 @@ def _spmd_prep(a, block_size, mesh, backend):
 
 
 def lu_factor_spmd(a: jax.Array, *, block_size: int = 128, mesh=None,
-                   backend: str = "ref",
-                   lookahead: bool = True) -> LuSpmdState:
+                   backend: str = "ref", lookahead: bool = True,
+                   abft: bool = False) -> LuSpmdState:
     """Block-cyclic distributed LU with partial pivoting (ONE shard_map).
 
     ``lookahead=True`` factors+broadcasts panel k+1 during step k's bulk
     trailing update (pipeline overlap; see the module comment) — the
     resulting factor is bitwise identical to ``lookahead=False``.
+
+    ``abft=True`` carries a Huang–Abraham checksum column ``c = A·e``
+    (row sums) through the factorization, embedded as one extra LOCAL
+    column of the shard so the very same swap gather, TRSM and rank-nb
+    GEMM transform it (a virtual trailing column — no extra collectives,
+    no extra loop-carry element, ~nb/n extra flops); at exit it must
+    equal the row sums of U up to rounding.  A second exit invariant,
+    the Huang–Abraham product check (eᵀL)·U = eᵀA, covers the stored
+    factor itself.  The combined relative mismatch lands in
+    ``LuSpmdState.abft_err`` (two extra psums total); a silently
+    corrupted panel/trailing element breaks an invariant by
+    O(corruption) and is caught by :func:`repro.resilience.abft.verify`.
+    The stored factor is bitwise identical to ``abft=False`` (the
+    underlying kernels are per-column bitwise-stable).
     """
     a, lay, backend = _spmd_prep(a, block_size, mesh, backend)
     nb, n, procs = lay.nb, lay.n, lay.nprocs
@@ -293,9 +316,28 @@ def lu_factor_spmd(a: jax.Array, *, block_size: int = 128, mesh=None,
         from repro.kernels.krylov_fused import _auto_interpret
         interp = _auto_interpret(None)
 
-    def body(a_loc):
+    def body(a_loc, *c0):
         d = pblas.flat_index_local(row, col, q)
-        gcol = lay.local_gcol(d, a_loc.shape[1])
+        nloc0 = a_loc.shape[1]
+        gcol0 = lay.local_gcol(d, nloc0)
+        if abft:
+            # The checksum c = A·e rides as ONE extra local column of
+            # ``a_loc`` — a virtual trailing column whose out-of-range
+            # global index keeps it "active" at every step, so the swap
+            # gather, row-block TRSM and rank-nb GEMM transform it for
+            # free (those kernels are per-column bitwise-stable, so the
+            # stored factor stays bitwise equal to the unchecked run).
+            # Crucially the loop carry keeps the exact (a_loc, perm)
+            # structure of ``abft=False``: carrying the checksum as a
+            # separate tuple element costs XLA the in-place reuse of
+            # the local matrix buffer (12–17% at n=1024, measured) —
+            # embedding it costs ~1/(nloc/nb) extra flops instead.
+            a_loc = jnp.concatenate(
+                [a_loc, c0[0][0][:, None].astype(a_loc.dtype)], axis=1)
+            gcol = jnp.concatenate(
+                [gcol0, jnp.full((1,), 2 * n, gcol0.dtype)])
+        else:
+            gcol = gcol0
         nloc = a_loc.shape[1]
 
         def pack(pan, perm):
@@ -318,7 +360,8 @@ def lu_factor_spmd(a: jax.Array, *, block_size: int = 128, mesh=None,
                 d == owner, have,
                 lambda _: jnp.zeros((n, nb + 1), a_loc.dtype), None)
             packed = pblas.bcast_local(packed, owner, d, axes)
-            return packed[:, :nb], packed[:, nb].astype(jnp.int32)
+            return (inject.tap("panel", packed[:, :nb], step=s, rank=d),
+                    packed[:, nb].astype(jnp.int32))
 
         def consume(carry, pan, perm, s, factor_next: bool):
             """Apply the factored panel of step ``s``: swap gather, owner
@@ -380,30 +423,86 @@ def lu_factor_spmd(a: jax.Array, *, block_size: int = 128, mesh=None,
                                             interpret=interp)
             else:
                 a_loc = a_loc - l21 @ u12
+            a_loc = inject.tap("trailing", a_loc, step=s, rank=d)
+            base = (a_loc, perm_total)
             if not factor_next:
-                return a_loc, perm_total
+                return base
             packed = pblas.bcast_local(out[1], owner2, d, axes)
-            return (a_loc, perm_total,
-                    packed[:, :nb], packed[:, nb].astype(jnp.int32))
+            return base + (inject.tap("panel", packed[:, :nb],
+                                      step=s + 1, rank=d),
+                           packed[:, nb].astype(jnp.int32))
+
+        def finish(carry, w):
+            """Exit invariants (two psums total):
+
+            1. carried column checksum == row sums of U — catches
+               corruption of the factorization's *transforms*;
+            2. Huang–Abraham product check (eᵀL)·U == eᵀPA == eᵀA —
+               column sums are invariant under row permutations, so the
+               seed ``w`` needs no perm tracking; catches corruption of
+               the *stored* factor (either triangle), including an
+               element hit after its last checksum update."""
+            if not abft:
+                return carry
+            a_aug, perm_fin = carry
+            a_fin, c_fin = a_aug[:, :nloc0], a_aug[:, nloc0]
+            u_loc = jnp.where(rows_g <= gcol0[None, :], a_fin, 0)
+            au = jnp.abs(u_loc)
+            red1 = jnp.zeros((3, n), a_fin.dtype)
+            red1 = red1.at[0].set(jnp.sum(u_loc, axis=1))          # U·e
+            red1 = red1.at[1].set(jnp.sum(au, axis=1))
+            # eᵀL per local column (+1 for the implicit unit diagonal):
+            # column sums of the strict-lower part = colsum(A) − colsum(U)
+            red1 = red1.at[2, gcol0].set(jnp.sum(a_fin, axis=0)
+                                         - jnp.sum(u_loc, axis=0) + 1)
+            red1 = pblas.psum(red1, axes)
+            ue, uabs, v = red1[0], red1[1], red1[2]
+            # 2-row GEMMs, not GEMVs: XLA:CPU only dispatches a dot on a
+            # COMPUTED operand to the fast GEMM kernel when the lhs has
+            # >= 2 rows — a vector dot lowers to a ~40x slower loop here
+            # (10ms vs 0.7ms at n=1024, measured)
+            vv = jnp.stack([v, jnp.abs(v)])
+            red2 = jnp.zeros((2, n), a_fin.dtype)
+            red2 = red2.at[0, gcol0].set(
+                jnp.abs((vv @ u_loc)[0] - w[gcol0]))
+            red2 = red2.at[1, gcol0].set((vv @ au)[1])
+            red2 = pblas.psum(red2, axes)
+            one = jnp.asarray(1.0, a_fin.dtype)
+            err1 = jnp.max(jnp.abs(c_fin - ue)) \
+                / jnp.maximum(jnp.max(uabs), one)
+            err2 = jnp.max(red2[0]) / jnp.maximum(jnp.max(red2[1]), one)
+            return a_fin, perm_fin, jnp.maximum(err1, err2)
 
         perm0 = jnp.arange(n)
+        init = (a_loc, perm0)
+        w = c0[0][1] if abft else None
         if lookahead:
             def step(s, carry):
-                a_loc, perm_total, pan, perm = carry
-                return consume((a_loc, perm_total), pan, perm, s,
-                               factor_next=True)
+                return consume(carry[:2], carry[2], carry[3],
+                               s, factor_next=True)
 
             pan1, perm1 = factor_bcast(a_loc, 0)     # pipeline fill
-            return jax.lax.fori_loop(
-                0, nblocks, step, (a_loc, perm0, pan1, perm1))[:2]
+            return finish(jax.lax.fori_loop(
+                0, nblocks, step, init + (pan1, perm1))[:2], w)
 
         def step(s, carry):
             pan, perm = factor_bcast(carry[0], s)
             return consume(carry, pan, perm, s, factor_next=False)
 
-        return jax.lax.fori_loop(0, nblocks, step, (a_loc, perm0))
+        return finish(jax.lax.fori_loop(0, nblocks, step, init), w)
 
     spec = lay.matrix_spec()
+    if abft:
+        # checksum seeds, replicated: c0 = A·e (row sums, the carried
+        # column) and w = eᵀA (column sums, the exit product check) —
+        # the cyclic column permutation is storage-only, natural-order
+        # sums apply
+        lu_cyc, perm, err = shard_map(
+            body, mesh=mesh, in_specs=(spec, P()),
+            out_specs=(spec, P(), P()), check_rep=False)(
+            a[:, lay.colperm],
+            jnp.stack([jnp.sum(a, axis=1), jnp.sum(a, axis=0)]))
+        return LuSpmdState(lay, lu_cyc, perm, err)
     lu_cyc, perm = shard_map(body, mesh=mesh, in_specs=(spec,),
                              out_specs=(spec, P()), check_rep=False)(
         a[:, lay.colperm])

@@ -39,6 +39,7 @@ from jax.experimental.shard_map import shard_map
 
 from repro.core import dist, pblas
 from repro.core import precond as precond_mod
+from repro.resilience import inject
 
 
 class LinearOperator:
@@ -78,7 +79,7 @@ class LinearOperator:
         products in one reduction.  This is the s-step/communication-
         avoiding block primitive: one call replaces the ~2s dot-product
         synchronizations of s classical Krylov iterations."""
-        return vs.conj() @ vs.T
+        return inject.tap("gram", vs.conj() @ vs.T)
 
     # -- derived / layout helpers ------------------------------------------
     def norm(self, v: jax.Array) -> jax.Array:
@@ -93,9 +94,11 @@ class LinearOperator:
         return mask
 
     def update(self, x, r, p, ap, alpha):
-        """Fused Krylov update: (x + αp, r − αAp, ⟨r', r'⟩)."""
+        """Fused Krylov update: (x + αp, r − αAp, ⟨r', r'⟩).
+        Injection site "update": the new residual carry — the fault the
+        recurrence silently propagates until the monitor trips."""
         xn = x + self.scale(alpha, p)
-        rn = r - self.scale(alpha, ap)
+        rn = inject.tap("update", r - self.scale(alpha, ap))
         return xn, rn, self.dot(rn, rn)
 
     def axpy_pair(self, x, p, r, q, alpha):
@@ -139,7 +142,8 @@ class DenseOperator(LinearOperator):
             self.has_transpose = False
 
     def matvec(self, v):
-        return self._matvec(v) if self._matvec is not None else self.a @ v
+        y = self._matvec(v) if self._matvec is not None else self.a @ v
+        return inject.tap("matvec", y)
 
     def matvec_t(self, v):
         if self._matvec_t is not None:
@@ -160,7 +164,11 @@ class DenseOperator(LinearOperator):
     def update(self, x, r, p, ap, alpha):
         if self._fusable(x):
             from repro.kernels import krylov_fused
-            return krylov_fused.fused_cg_update_auto(x, r, p, ap, alpha)
+            xn, rn, rr = krylov_fused.fused_cg_update_auto(x, r, p, ap, alpha)
+            hurt = inject.tap("update", rn)
+            if hurt is not rn:          # armed: re-derive the carried ⟨r,r⟩
+                rn, rr = hurt, self.dot(hurt, hurt)
+            return xn, rn, rr
         return super().update(x, r, p, ap, alpha)
 
     def pipelined_dots(self, r, u, w):
@@ -172,7 +180,7 @@ class DenseOperator(LinearOperator):
     def block_dots(self, vs):
         if self._fusable(vs):
             from repro.kernels import krylov_fused
-            return krylov_fused.fused_gram_auto(vs)
+            return inject.tap("gram", krylov_fused.fused_gram_auto(vs))
         return super().block_dots(vs)
 
     def axpy_pair(self, x, p, r, q, alpha):
@@ -207,7 +215,7 @@ class GspmdOperator(LinearOperator):
         self.mesh = mesh
 
     def matvec(self, v):
-        return pblas.pmatvec_gspmd(self.a, v, self.mesh)
+        return inject.tap("matvec", pblas.pmatvec_gspmd(self.a, v, self.mesh))
 
     def matvec_t(self, v):
         return pblas.pmatvec_gspmd(self.a.T, v, self.mesh)
@@ -224,7 +232,7 @@ class GspmdOperator(LinearOperator):
         row, _ = dist.solver_axes(self.mesh)
         vs = jax.lax.with_sharding_constraint(
             vs, jax.sharding.NamedSharding(self.mesh, P(None, row)))
-        return vs.conj() @ vs.T
+        return inject.tap("gram", vs.conj() @ vs.T)
 
 
 # --------------------------------------------------------------------------
@@ -243,7 +251,8 @@ class SpmdLocalOperator(LinearOperator):
         self.row, self.col, self.q, self.p = row, col, q, p
 
     def matvec(self, v):
-        return pblas.matvec_local(self.a_loc, v, self.row, self.col, self.q)
+        return inject.tap("matvec", pblas.matvec_local(
+            self.a_loc, v, self.row, self.col, self.q))
 
     def matvec_t(self, v):
         return pblas.matvec_t_local(self.a_loc, v, self.row, self.col, self.p)
@@ -258,7 +267,8 @@ class SpmdLocalOperator(LinearOperator):
         return pblas.dotm_local(m, w, self.row)
 
     def block_dots(self, vs):
-        return pblas.gram_local(vs, self.row)        # ONE psum for the Gram
+        # ONE psum for the Gram
+        return inject.tap("gram", pblas.gram_local(vs, self.row))
 
 
 def spmd_named_precond(precond, *, rows: int | None = None,
@@ -291,20 +301,38 @@ def spmd_named_precond(precond, *, rows: int | None = None,
     return precond.kind, precond.data
 
 
+def result_leaves(res):
+    """Flatten a :class:`SolveResult` to the 6 leaves a shard_map body
+    returns: the dict-valued ``info`` cannot cross the boundary, so the
+    monitor's two scalars travel as replicated int32 outputs (zeros for
+    an unmonitored driver)."""
+    info = res.info or {}
+    zero = jnp.zeros((), jnp.int32)
+    code = info.get("fail_code", zero)
+    fail_iter = info.get("fail_iter", zero)
+    return (res.x, res.iterations, res.residual, res.converged,
+            code, fail_iter)
+
+
 def spmd_run(body, mesh, row: str, in_specs: tuple, *operands):
     """shard_map wrapper shared by the dense and sparse spmd engines.
 
     while_loop has no replication rule on this JAX — disable the check;
     out_specs pin the (documented) replication of the scalar outputs.
-    Returns the body's 4-tuple as a :class:`SolveResult`.
+    The body returns :func:`result_leaves`; the health monitor's
+    fail_code/fail_iter scalars are re-packed into ``SolveResult.info``.
     """
     f = shard_map(body, mesh=mesh, in_specs=in_specs,
-                  out_specs=(P(row), P(), P(), P()), check_rep=False)
+                  out_specs=(P(row), P(), P(), P(), P(), P()),
+                  check_rep=False)
     from repro.core.krylov import SolveResult
-    return SolveResult(*f(*operands))
+    x, iters, res, conv, code, fail_iter = f(*operands)
+    return SolveResult(x, iters, res, conv,
+                       {"fail_code": code, "fail_iter": fail_iter})
 
 
 def spmd_solve(method: Callable, a: jax.Array, b: jax.Array, mesh, *,
+               x0: jax.Array | None = None,
                tol: float = 1e-6, maxiter: int = 1000,
                precond: "precond_mod.Preconditioner | None" = None,
                **extra):
@@ -314,22 +342,35 @@ def spmd_solve(method: Callable, a: jax.Array, b: jax.Array, mesh, *,
 
     Preconditioner state crosses into the shard_map as extra sharded
     operands (see :func:`repro.core.precond.make`); custom callables cannot
-    cross the shard_map boundary and are rejected.
+    cross the shard_map boundary and are rejected.  ``x0`` (a warm start —
+    the escalation policy's restart-from-best-iterate) enters as one more
+    block-row-sharded operand.
     """
     row, col = dist.solver_axes(mesh)
     p, q = mesh.shape[row], mesh.shape[col]
     pkind, pdata = spmd_named_precond(precond, rows=a.shape[0], mesh_rows=p)
     pspecs = precond_mod.data_specs(pkind, row)
 
-    def body(a_loc, b_loc, *pdata_loc):
+    if x0 is None:
+        def body(a_loc, b_loc, *pdata_loc):
+            op = SpmdLocalOperator(a_loc, row, col, q, p)
+            apply_m = precond_mod.local_apply(pkind, pdata_loc)
+            res = method(op, b_loc, tol=tol, maxiter=maxiter,
+                         precond=apply_m, **extra)
+            return result_leaves(res)
+
+        return spmd_run(body, mesh, row, (P(row, col), P(row)) + pspecs,
+                        a, b, *pdata)
+
+    def body(a_loc, b_loc, x0_loc, *pdata_loc):
         op = SpmdLocalOperator(a_loc, row, col, q, p)
         apply_m = precond_mod.local_apply(pkind, pdata_loc)
-        res = method(op, b_loc, tol=tol, maxiter=maxiter, precond=apply_m,
-                     **extra)
-        return tuple(res)
+        res = method(op, b_loc, x0_loc, tol=tol, maxiter=maxiter,
+                     precond=apply_m, **extra)
+        return result_leaves(res)
 
-    return spmd_run(body, mesh, row, (P(row, col), P(row)) + pspecs,
-                    a, b, *pdata)
+    return spmd_run(body, mesh, row, (P(row, col), P(row), P(row)) + pspecs,
+                    a, b, x0, *pdata)
 
 
 # --------------------------------------------------------------------------
@@ -351,7 +392,7 @@ class BatchedOperator(LinearOperator):
         self.a = a
 
     def matvec(self, v):
-        return jnp.einsum("bij,bj->bi", self.a, v)
+        return inject.tap("matvec", jnp.einsum("bij,bj->bi", self.a, v))
 
     def matvec_t(self, v):
         return jnp.einsum("bji,bj->bi", self.a, v)

@@ -26,6 +26,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from repro.core import dist
+from repro.resilience import inject
 
 # ``pvary`` only exists on JAX versions with varying-manual-axes tracking;
 # on older releases replication bookkeeping is implicit and it is a no-op.
@@ -76,15 +77,17 @@ def _tally(kind: str, n: int = 1) -> None:
 
 
 def psum(x, axes):
-    """Counted ``lax.psum`` — every pblas reduction goes through here."""
+    """Counted ``lax.psum`` — every pblas reduction goes through here.
+    Also an injection site ("psum"): a corrupted all-reduce payload is
+    the classic dropped-rank/transient-network fault."""
     _tally("psum")
-    return jax.lax.psum(x, axes)
+    return inject.tap("psum", jax.lax.psum(x, axes))
 
 
 def all_gather(x, axis, **kw):
-    """Counted ``lax.all_gather``."""
+    """Counted ``lax.all_gather`` (injection site "all_gather")."""
     _tally("all_gather")
-    return jax.lax.all_gather(x, axis, **kw)
+    return inject.tap("all_gather", jax.lax.all_gather(x, axis, **kw))
 
 
 # --------------------------------------------------------------------------
@@ -164,9 +167,11 @@ def bcast_local(x: jax.Array, src, d, axes) -> jax.Array:
     """Broadcast ``x`` from the process whose flat index ``d`` equals
     ``src`` to every process on ``axes`` (MPI_Bcast as a masked psum — the
     same collective idiom as SUMMA's panel broadcasts).  Non-source values
-    are ignored."""
+    are ignored.  Injection site "bcast": the received payload — a
+    corrupted panel broadcast poisons every rank's trailing update."""
     _tally("bcast")
-    return psum(jnp.where(d == src, x, jnp.zeros_like(x)), axes)
+    return inject.tap("bcast",
+                      psum(jnp.where(d == src, x, jnp.zeros_like(x)), axes))
 
 
 # --------------------------------------------------------------------------

@@ -244,6 +244,41 @@ def test_checkpoint_elastic(mesh):
               np.allclose(np.asarray(logits_a), np.asarray(logits_b)))
 
 
+def test_resilience(mesh):
+    """Fault-injection smoke cell (the full battery is
+    repro.launch.selftest_resilience / tests/test_resilience.py): a NaN
+    injected into every matvec is classified and retried to convergence
+    by ``policy="resilient"``, and a corrupted trailing update in the
+    distributed LU trips the ABFT checksum verifier."""
+    from repro.core import lu
+    from repro.resilience import abft, inject
+    rng = np.random.default_rng(5)
+    n = 256
+    a = rng.standard_normal((n, n)).astype(np.float32)
+    spd = (a @ a.T / n + 4 * np.eye(n)).astype(np.float32)
+    b = rng.standard_normal(n).astype(np.float32)
+    with inject.inject(site="matvec", mode="nan") as ses:
+        r = api.solve(jnp.asarray(spd), jnp.asarray(b), method="cg",
+                      mesh=mesh, tol=1e-6, policy="resilient",
+                      return_info=True)
+    check("resilient cg recovers from injected matvec NaN",
+          ses.fired >= 1
+          and r.info["attempts"][0]["reason"] == "non_finite"
+          and np.allclose(r.x, np.linalg.solve(spd, b), atol=1e-3))
+    gen = a + n * np.eye(n, dtype=np.float32)
+    with inject.inject(site="trailing", mode="scale", at_rank=0,
+                       at_step=1) as ses:
+        st = lu.lu_factor_spmd(jnp.asarray(gen), block_size=32, mesh=mesh,
+                               abft=True)
+    detected = False
+    try:
+        abft.verify(st)
+    except abft.FactorCorruption:
+        detected = True
+    check("spmd LU ABFT detects corrupted trailing update",
+          ses.fired >= 1 and detected)
+
+
 def main():
     mesh = jax.make_mesh((4, 2), ("data", "model"))
     print(f"devices: {len(jax.devices())}", flush=True)
@@ -251,6 +286,7 @@ def main():
     test_ca_krylov(mesh)
     test_sparse(mesh)
     test_eigls(mesh)
+    test_resilience(mesh)
     test_train(mesh)
     test_compression(mesh)
     test_checkpoint_elastic(mesh)

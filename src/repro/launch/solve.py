@@ -6,10 +6,20 @@ Generates a synthetic dense system A x = b (diagonally-dominant general or
 SPD depending on the method), solves it with the chosen CUPLSS method on
 the available device mesh, and reports residual + timing — the single-node
 analogue of the paper's §4 runs (benchmarks/ has the scaling versions).
+
+Resilience drills (docs/solvers.md "Resilience"):
+
+    # inject a NaN into every matvec, recover via the escalation policy
+    ... --method cg --inject matvec --policy resilient
+
+    # checkpoint every 25 iterations, kill chunk 1, restore + resume
+    ... --method cg --checkpoint-dir /tmp/ck --checkpoint-every 25 \\
+        --fail-at-chunk 1 --watchdog 300
 """
 from __future__ import annotations
 
 import argparse
+import contextlib
 import time
 
 import jax
@@ -18,6 +28,7 @@ import numpy as np
 
 from repro.core import api
 from repro.launch.mesh import solver_mesh
+from repro.resilience import inject
 
 
 def make_system(n: int, *, spd: bool, m: int | None = None,
@@ -58,7 +69,29 @@ def main(argv=None):
                     choices=["float32", "float64"])
     ap.add_argument("--block-size", type=int, default=128)
     ap.add_argument("--tol", type=float, default=1e-6)
+    ap.add_argument("--maxiter", type=int, default=1000)
     ap.add_argument("--distributed", action="store_true")
+    # -- resilience drills -------------------------------------------------
+    ap.add_argument("--policy", default=None, choices=["resilient"],
+                    help="failure classification + retry/fallback "
+                         "escalation (api.solve policy)")
+    ap.add_argument("--inject", default=None, choices=list(inject.SITES),
+                    help="arm a deterministic fault at this site for the "
+                         "solve (drill; combine with --policy resilient)")
+    ap.add_argument("--inject-mode", default="nan",
+                    choices=list(inject.MODES))
+    ap.add_argument("--checkpoint-dir", default=None,
+                    help="run the solve in checkpointed chunks persisted "
+                         "here (iterative methods; enables kill/resume)")
+    ap.add_argument("--checkpoint-every", type=int, default=100,
+                    help="iterations per checkpointed chunk")
+    ap.add_argument("--fail-at-chunk", type=int, action="append",
+                    default=None,
+                    help="inject a NodeFailure before this chunk index "
+                         "(repeatable; exercises restore + resume)")
+    ap.add_argument("--watchdog", type=float, default=None,
+                    help="heartbeat watchdog budget in seconds (with "
+                         "--checkpoint-dir)")
     args = ap.parse_args(argv)
 
     if args.dtype == "float64":
@@ -70,11 +103,43 @@ def main(argv=None):
 
     t0 = time.time()
     extra = {"s": args.s} if args.method.startswith("ca_") else {}
-    x = api.solve(jnp.asarray(a), jnp.asarray(b), method=args.method,
-                  mesh=mesh, engine=args.engine, backend=args.backend,
-                  tol=args.tol, block_size=args.block_size,
-                  precond=args.precond, **extra)
-    x = jax.block_until_ready(x)
+    kw = dict(method=args.method, mesh=mesh, engine=args.engine,
+              backend=args.backend, tol=args.tol,
+              block_size=args.block_size, precond=args.precond, **extra)
+    drill = (inject.inject(site=args.inject, mode=args.inject_mode)
+             if args.inject else contextlib.nullcontext())
+    with drill as session:
+        if args.checkpoint_dir:
+            from repro.distributed import fault_tolerance as ft
+            from repro.resilience import runner
+            hb = (ft.HeartbeatMonitor(args.watchdog).start()
+                  if args.watchdog else None)
+            inj = (ft.FailureInjector(set(args.fail_at_chunk))
+                   if args.fail_at_chunk else None)
+            try:
+                res = runner.checkpointed_solve(
+                    jnp.asarray(a), jnp.asarray(b),
+                    directory=args.checkpoint_dir,
+                    every=args.checkpoint_every, maxiter=args.maxiter,
+                    heartbeat=hb, injector=inj, policy=args.policy, **kw)
+            finally:
+                if hb is not None:
+                    hb.stop()
+            print(f"checkpointed: iters={int(res.iterations)} "
+                  f"recoveries={res.info['recoveries']} "
+                  f"steps={res.info['checkpoint_steps']}")
+        else:
+            res = api.solve(jnp.asarray(a), jnp.asarray(b),
+                            maxiter=args.maxiter, policy=args.policy,
+                            return_info=True, **kw)
+    if session is not None:
+        print(f"fault drill: site={args.inject} mode={args.inject_mode} "
+              f"fired={session.fired}")
+    info = res.info or {}
+    for att in info.get("attempts", []):
+        print(f"  attempt: method={att['method']} backend={att['backend']} "
+              f"-> {att['reason']}")
+    x = jax.block_until_ready(res.x)
     dt = time.time() - t0
 
     rvec = np.asarray(b) - a @ np.asarray(x)

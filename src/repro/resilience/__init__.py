@@ -1,0 +1,35 @@
+"""Resilience layer: fault injection, ABFT checksums, health taxonomy.
+
+Three pieces, layered bottom-up (docs/solvers.md "Resilience"):
+
+* :mod:`repro.resilience.inject` — deterministic fault injection at named
+  sites (matvec outputs, collective payloads, factor panels, Krylov
+  carries).  Every detector in the layer is testable because every fault
+  is reproducible.
+* :mod:`repro.resilience.monitor` — the unified breakdown/divergence/
+  stagnation/non-finite taxonomy carried inside every Krylov loop and
+  surfaced in ``SolveResult.info``.
+* :mod:`repro.resilience.abft` — verification of the Huang–Abraham
+  checksum column the distributed LU/Cholesky factorizations can carry
+  (``abft=True``), turning silent corruption into a structured
+  :class:`~repro.resilience.abft.FactorCorruption`.
+
+``policy`` (detect → retry → fallback escalation behind
+``api.solve(..., policy="resilient")``) and ``runner`` (checkpointed
+long solves with watchdog + restore) are imported lazily: they sit on
+top of ``repro.core.api`` and eager imports would cycle — ``core.krylov``
+imports this package for the monitor.
+"""
+from __future__ import annotations
+
+import importlib
+
+from repro.resilience import abft, inject, monitor  # noqa: F401
+
+__all__ = ["abft", "inject", "monitor", "policy", "runner"]
+
+
+def __getattr__(name):
+    if name in ("policy", "runner"):
+        return importlib.import_module(f"repro.resilience.{name}")
+    raise AttributeError(f"module 'repro.resilience' has no attribute {name!r}")

@@ -1,0 +1,109 @@
+"""Unified Krylov health monitor: one failure taxonomy for every driver.
+
+Before this module each driver in ``core/krylov.py`` grew its own guard
+as bugs surfaced (the CGLS 100x divergence cutoff, ca_cg's
+``rr < 1e4·rrb`` alive flag, ca_gmres's strict-improvement probe, the
+scattered ``|alpha| > 0`` breakdown checks).  The monitor folds them into
+one :class:`Health` record carried in the loop state and classified on a
+single scale:
+
+====  ===========  =====================================================
+code  name         meaning
+====  ===========  =====================================================
+0     ok           healthy
+1     non_finite   the convergence metric went NaN/Inf (corrupted data,
+                   overflow) — always wins over the other codes
+2     divergence   metric ran ``divergence``× past its best (the CG-family
+                   blow-up past the attainable-accuracy floor)
+3     stagnation   no new best metric for ``stagnation`` steps (restart
+                   cycles that stop improving)
+4     breakdown    an exact recurrence breakdown the driver flags
+                   (⟨p,Ap⟩ = 0, rho/omega = 0, s_eff = 0, …)
+====  ===========  =====================================================
+
+The monitor consumes only already-reduced scalars (the recurrence
+⟨r,r⟩ every driver carries anyway), so it adds **zero collectives** on
+the spmd engine — ``pblas.collective_counts`` parity is a test.  The
+first failure sticks: ``at_iter`` stamps the iteration it was detected,
+and drivers surface both through ``SolveResult.info`` as
+``fail_code`` / ``fail_iter``.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+OK = 0
+NON_FINITE = 1
+DIVERGENCE = 2
+STAGNATION = 3
+BREAKDOWN = 4
+
+NAMES = {OK: "ok", NON_FINITE: "non_finite", DIVERGENCE: "divergence",
+         STAGNATION: "stagnation", BREAKDOWN: "breakdown"}
+
+
+class Health(NamedTuple):
+    code: jax.Array        # int32 failure code, 0 while healthy
+    at_iter: jax.Array     # int32 iteration of first failure (0 if none)
+    best: jax.Array        # best (smallest) metric value seen
+    since_best: jax.Array  # int32 steps since the best last improved
+
+
+def init(metric0) -> Health:
+    """Fresh health state seeded with the initial convergence metric
+    (classifies a non-finite start — corrupted setup — at iteration 0)."""
+    m = jnp.asarray(metric0)
+    finite = jnp.isfinite(m)
+    code = jnp.where(finite, OK, NON_FINITE).astype(jnp.int32)
+    zero = jnp.zeros_like(code)
+    best = jnp.where(finite, m, jnp.asarray(jnp.inf, m.dtype))
+    return Health(code, zero, best, zero)
+
+
+def update(h: Health, metric, k, *, breakdown=None, divergence=None,
+           stagnation: int | None = None) -> Health:
+    """Advance the monitor one step on the current convergence metric.
+
+    ``breakdown`` is an optional boolean the driver computes (its exact
+    recurrence breakdown, already masked by "and not converged");
+    ``divergence`` is the blow-up factor relative to the best metric
+    (pass the factor in the metric's own scale — drivers tracking ⟨r,r⟩
+    square their residual-norm factor); ``stagnation`` is a step window
+    with no new best.  The first non-OK code freezes the record.
+    Severity when several fire at once: non_finite > breakdown >
+    divergence > stagnation.
+    """
+    m = jnp.asarray(metric)
+    improved = m < h.best
+    best = jnp.where(improved, m, h.best)
+    since = jnp.where(improved, 0, h.since_best + 1)
+    code = jnp.zeros_like(h.code)
+    if stagnation is not None:
+        code = jnp.where(since >= stagnation, STAGNATION, code)
+    if divergence is not None:
+        code = jnp.where(m > divergence * best, DIVERGENCE, code)
+    if breakdown is not None:
+        code = jnp.where(breakdown, BREAKDOWN, code)
+    code = jnp.where(jnp.isfinite(m), code, NON_FINITE).astype(jnp.int32)
+    code = jnp.where(h.code != OK, h.code, code)
+    at = jnp.where((h.code == OK) & (code != OK),
+                   jnp.asarray(k, jnp.int32), h.at_iter)
+    return Health(code, at, best, since)
+
+
+def ok(h: Health):
+    """Per-system healthy flag (a while_loop continuation condition)."""
+    return h.code == OK
+
+
+def info(h: Health) -> dict:
+    """The ``SolveResult.info`` payload every monitored driver emits."""
+    return {"fail_code": h.code, "fail_iter": h.at_iter}
+
+
+def classify(code) -> str:
+    """Human name for a failure code (scalar; batched callers index)."""
+    return NAMES.get(int(code), "unknown")

@@ -1,0 +1,184 @@
+"""Retry / fallback escalation behind ``api.solve(..., policy="resilient")``.
+
+The detectors below this layer (the Krylov health monitor's
+``fail_code``, the ABFT :class:`~repro.resilience.abft.FactorCorruption`,
+the residual check every direct solve runs under ``return_info``) turn
+silent failures into *classified* ones.  This module turns classified
+failures into answers: a bounded, deterministic escalation ladder
+
+1. the requested (method, backend, engine) as-is;
+2. the same method restarted from the best finite iterate so far
+   (transient faults — a corrupted trace — die here, because injection
+   trips are spent and the re-trace is clean);
+3. ``backend="pallas"`` drops to the ref update path;
+4. the registered fallback chain (``register_fallback``), e.g.
+   ``ca_cg → cg → gmres → lu`` — communication-avoiding variants fall
+   back to their numerically hardier classics, iterative methods
+   ultimately fall back to a direct factorization.
+
+Every attempt is recorded (method, backend, engine, reason, iterations,
+residual, converged) and the history rides out in
+``SolveResult.info["attempts"]`` — recovery is auditable, never silent.
+The ladder is off by default and costs *nothing* when off:
+``api.solve`` only imports this module when ``policy="resilient"``.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import api
+from repro.resilience import abft, monitor
+
+# method -> next method to try when it fails (classified or not
+# converged).  The defaults escalate toward numerical robustness:
+# s-step/pipelined variants to their classic forms, non-symmetric
+# one-sided methods to their stabilized forms, and finally to a direct
+# factorization (square systems) / QR (least squares).
+_FALLBACK: dict[str, str] = {
+    "ca_cg": "cg",
+    "pipelined_cg": "cg",
+    "cg": "gmres",
+    "ca_gmres": "gmres",
+    "bicg": "bicgstab",
+    "bicgstab": "gmres",
+    "gmres": "lu",
+    "cholesky": "lu",
+    "cgls": "lsqr",
+    "lsqr": "qr",
+}
+
+
+def register_fallback(method: str, fallback: str | None) -> None:
+    """Override the escalation target for ``method`` (None removes it).
+    Both names must be registered solver methods."""
+    api.get_method(method)
+    if fallback is None:
+        _FALLBACK.pop(method, None)
+        return
+    api.get_method(fallback)
+    _FALLBACK[method] = fallback
+
+
+def fallback_chain(method: str) -> list[str]:
+    """The methods tried after ``method``, in order (cycle-safe)."""
+    chain, seen = [], {method}
+    m = _FALLBACK.get(method)
+    while m is not None and m not in seen:
+        chain.append(m)
+        seen.add(m)
+        m = _FALLBACK.get(m)
+    return chain
+
+
+def _finite(x) -> bool:
+    return bool(jnp.all(jnp.isfinite(x)))
+
+
+def _true_residual(a, b, x) -> float:
+    """Independent residual audit ‖b − Ax‖/‖b‖ computed with plain jnp
+    ops — outside every operator/collective tap, so a fault that
+    corrupted the *driver's* convergence test (e.g. an Inf in the ‖b‖
+    reduction making tol infinite) cannot also corrupt the audit.
+    Rectangular systems audit the normal equations ‖Aᵀr‖/‖Aᵀb‖."""
+    if getattr(a, "is_sparse", False):
+        r = b - a.matvec(x)
+    elif getattr(a, "ndim", 2) == 3:
+        r = b - jnp.einsum("bij,bj->bi", a, x)
+    elif a.shape[0] != a.shape[1]:
+        r, b = a.T @ (b - a @ x), a.T @ b
+    else:
+        r = b - a @ x
+    bn = float(jnp.linalg.norm(b))
+    return float(jnp.linalg.norm(r)) / (bn if bn > 0 else 1.0)
+
+
+def _reason(res) -> str:
+    """Classify a completed attempt from its SolveResult."""
+    if not _finite(res.x):
+        return "non_finite_x"
+    code = int((res.info or {}).get("fail_code", 0))
+    if code != monitor.OK:
+        return monitor.classify(code)
+    if not bool(jnp.all(res.converged)):
+        return "not_converged"
+    return "ok"
+
+
+def resilient_solve(a, b, *, method: str = "lu", mesh=None,
+                    engine: str = "gspmd", backend: str = "ref",
+                    block_size: int = 128, tol: float = 1e-6,
+                    maxiter: int = 1000, restart: int = 32,
+                    precond=None, x0=None, max_attempts: int = 5,
+                    return_info: bool = False, **method_kwargs):
+    """Run the escalation ladder.  Called by ``api.solve`` when
+    ``policy="resilient"``; same contract, plus
+    ``info["attempts"]`` / ``info["policy"]`` in the result."""
+    entry = api.get_method(method)
+    ladder: list[tuple[str, str, bool]] = [(method, backend, False)]
+    # unconditional retry rung: a transient (trace-time) fault dies on
+    # the re-trace; iterative retries restart from the best iterate
+    ladder.append((method, backend, True))
+    if backend == "pallas":
+        ladder.append((method, "ref", True))
+    for m in fallback_chain(method):
+        ladder.append((m, "ref" if backend == "pallas" else backend, True))
+    ladder = ladder[:max_attempts]
+
+    attempts: list[dict] = []
+    best = None            # (residual, SolveResult) of best finite attempt
+    x_carry = x0
+    for m, be, use_carry in ladder:
+        e = api.get_method(m)
+        extras = {k: v for k, v in method_kwargs.items() if k in e.extra}
+        xm = x_carry if (use_carry and e.kind == "iterative") else None
+        rec = {"method": m, "backend": be, "engine": engine}
+        try:
+            res = api.solve(
+                a, b, method=m, mesh=mesh, engine=engine, backend=be,
+                block_size=block_size, tol=tol, maxiter=maxiter,
+                restart=restart,
+                precond=precond if e.kind == "iterative" else None,
+                x0=xm, validate=False, return_info=True,
+                abft=(e.kind == "direct" and engine == "spmd"
+                      and e.name in ("lu", "cholesky")),
+                **extras)
+        except (abft.FactorCorruption, ValueError, TypeError,
+                FloatingPointError) as exc:
+            rec.update(reason=f"error: {exc}", iterations=None,
+                       residual=None, converged=False)
+            attempts.append(rec)
+            continue
+        reason = _reason(res)
+        r_true = _true_residual(a, b, res.x) if _finite(res.x) \
+            else float("inf")
+        if reason == "ok" and not r_true <= 10 * tol:
+            # driver claims success but the independent audit disagrees
+            # (a corrupted convergence test — see _true_residual)
+            reason = "residual_audit_failed"
+        rec.update(reason=reason,
+                   iterations=int(jnp.max(res.iterations)),
+                   residual=float(jnp.max(res.residual)),
+                   residual_true=r_true,
+                   converged=bool(jnp.all(res.converged)))
+        attempts.append(rec)
+        if jnp.isfinite(jnp.asarray(r_true)) \
+                and (best is None or r_true < best[0]):
+            best = (r_true, res)
+            x_carry = res.x           # restart later attempts from best
+        if reason == "ok":
+            break
+
+    if best is None:       # every attempt errored or went non-finite
+        last = attempts[-1] if attempts else {}
+        raise RuntimeError(
+            f"policy='resilient' exhausted {len(attempts)} attempt(s) "
+            f"without a finite iterate (last: {last.get('method')!r} — "
+            f"{last.get('reason')}); attempt history: {attempts}")
+    res = best[1]
+    info = dict(res.info or {})
+    info.update(policy="resilient", attempts=attempts)
+    res = res._replace(info=info)
+    return res if return_info else res.x
+
+
+__all__ = ["register_fallback", "fallback_chain", "resilient_solve"]

@@ -103,10 +103,11 @@ class SparseSpmdLocalOperator(LinearOperator):
         self.row, self.nb, self.nbc = row, nb, nbc
 
     def matvec(self, v):
+        from repro.resilience import inject
         x_full = pblas.all_gather(v, self.row, tiled=True)     # (n_pad,)
         xb = x_full.reshape(self.nbc, self.nb)
         y = jnp.einsum("rmij,rmj->ri", self.data_loc, xb[self.cols_loc])
-        return y.reshape(-1)
+        return inject.tap("matvec", y.reshape(-1))
 
     def matvec_t(self, v):
         xb = v.reshape(-1, self.nb)                            # local rows
@@ -133,6 +134,7 @@ class SparseSpmdLocalOperator(LinearOperator):
 
 
 def spmd_solve(method: Callable, a: formats.BSR, b: jax.Array, mesh, *,
+               x0: jax.Array | None = None,
                tol: float = 1e-6, maxiter: int = 1000,
                precond: "precond_mod.Preconditioner | None" = None,
                **extra):
@@ -164,14 +166,30 @@ def spmd_solve(method: Callable, a: formats.BSR, b: jax.Array, mesh, *,
                          constant_values=1),)
     pspecs = precond_mod.data_specs(pkind, row)
 
-    def body(data_loc, cols_loc, b_loc, *pdata_loc):
+    if x0 is None:
+        def body(data_loc, cols_loc, b_loc, *pdata_loc):
+            op = SparseSpmdLocalOperator(data_loc, cols_loc, row, a.nb,
+                                         a.nbr)
+            apply_m = precond_mod.local_apply(pkind, pdata_loc)
+            res = method(op, b_loc, tol=tol, maxiter=maxiter,
+                         precond=apply_m, **extra)
+            return op_mod.result_leaves(res)
+
+        res = op_mod.spmd_run(body, mesh, row,
+                              (P(row), P(row), P(row)) + pspecs,
+                              data_p, cols, bp, *pdata)
+        return res._replace(x=res.x[:n])
+
+    x0p = jnp.pad(x0, (0, n_pad - n))
+
+    def body(data_loc, cols_loc, b_loc, x0_loc, *pdata_loc):
         op = SparseSpmdLocalOperator(data_loc, cols_loc, row, a.nb, a.nbr)
         apply_m = precond_mod.local_apply(pkind, pdata_loc)
-        res = method(op, b_loc, tol=tol, maxiter=maxiter, precond=apply_m,
-                     **extra)
-        return tuple(res)
+        res = method(op, b_loc, x0_loc, tol=tol, maxiter=maxiter,
+                     precond=apply_m, **extra)
+        return op_mod.result_leaves(res)
 
     res = op_mod.spmd_run(body, mesh, row,
-                          (P(row), P(row), P(row)) + pspecs,
-                          data_p, cols, bp, *pdata)
+                          (P(row), P(row), P(row), P(row)) + pspecs,
+                          data_p, cols, bp, x0p, *pdata)
     return res._replace(x=res.x[:n])
