@@ -37,6 +37,7 @@ import numpy as np
 from jax.scipy.linalg import solve_triangular
 
 from benchmarks.common import emit, make_system, timeit
+from repro import telemetry
 from repro.core import api, cholesky, lu
 
 
@@ -129,6 +130,27 @@ def run(sizes=(512, 1024), compile_sizes=(256, 512, 1024), nb=128):
                             / np.linalg.norm(b))
                 emit("direct", f"{method}_solve_{backend}_n{n}",
                      round(t * 1e3, 2), "ms", f"rel_res={res:.1e}")
+
+        # -- telemetry armed-overhead probe (direct path) ------------------
+        # One instrumented solve for the TELEM solve record, then the
+        # same jitted LU solve timed disarmed vs armed (direct solves
+        # add a fixed-shape info dict, no loop-carried state; <= 5%).
+        api.solve(aj, bj, method="lu", block_size=bs, return_info=True)
+        fn_off = jax.jit(lambda A, B: api.solve(A, B, method="lu",
+                                                block_size=bs))
+        fn_on = jax.jit(lambda A, B: api.solve(A, B, method="lu",
+                                               block_size=bs))
+        ratios = []
+        for _ in range(3):       # alternate + median: warm-up-state noise
+            with telemetry.disabled():
+                t_off = timeit(fn_off, aj, bj, warmup=2, iters=10)
+            with telemetry.session("overhead-probe"):
+                t_on = timeit(fn_on, aj, bj, warmup=2, iters=10)
+            ratios.append(t_on / t_off)
+        emit("direct", f"telemetry_overhead_lu_n{n}",
+             round(float(np.median(ratios)), 3), "ratio",
+             f"armed {t_on * 1e3:.2f} ms vs disarmed {t_off * 1e3:.2f} ms, "
+             f"3 rounds (contract: <= 1.05)")
 
         # -- batched throughput --------------------------------------------
         B = 8

@@ -24,6 +24,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, make_system, timeit
+from repro import telemetry
 from repro.core import api
 
 
@@ -75,6 +76,39 @@ def run(sizes=(512, 1024), dtypes=("float32",)):
                          round(t * 1e3, 2), "ms",
                          f"iters={int(r.iterations)} "
                          f"converged={bool(r.converged)}")
+
+            # -- telemetry: convergence records + armed-overhead probe ----
+            # Eager instrumented solves so concrete iteration counts land
+            # in the section's TELEM_solvers.json solve records (per-method
+            # f32-reachable tolerances; the timed rows above use 1e-8 and
+            # run to maxiter in f32).  The overhead rows then time the SAME
+            # jitted solve disarmed vs armed — the armed graph carries the
+            # residual ring buffer; contract is <= 5% slowdown.
+            for method, mat, tol_i, kw in (
+                    ("cg", sj, 1e-6, {}),
+                    # s=2: the f32-stable s-step depth (s=4 diverges on
+                    # this system in single precision)
+                    ("ca_cg", sj, 1e-5, {"s": 2}),
+                    ("lu", aj, 1e-6, {})):
+                api.solve(mat, bj, method=method, tol=tol_i,
+                          return_info=True, **kw)
+            fn_off = jax.jit(lambda A, B: api.solve(A, B, method="cg",
+                                                    tol=1e-8))
+            fn_on = jax.jit(lambda A, B: api.solve(A, B, method="cg",
+                                                   tol=1e-8))
+            # alternating rounds + median-of-ratios: sub-ms wall times
+            # swing with CPU warm-up state, a single off/on pair lies
+            ratios = []
+            for _ in range(3):
+                with telemetry.disabled():
+                    t_off = timeit(fn_off, sj, bj, warmup=2, iters=10)
+                with telemetry.session("overhead-probe"):
+                    t_on = timeit(fn_on, sj, bj, warmup=2, iters=10)
+                ratios.append(t_on / t_off)
+            emit("solvers", f"telemetry_overhead_cg_n{n}_{dtype}",
+                 round(float(np.median(ratios)), 3), "ratio",
+                 f"armed {t_on * 1e3:.2f} ms vs disarmed "
+                 f"{t_off * 1e3:.2f} ms, 3 rounds (contract: <= 1.05)")
         if dtype == "float64":
             jax.config.update("jax_enable_x64", False)
 

@@ -27,6 +27,15 @@ Reference numbers are the checked-in worst-of-N observations
 artifact (or re-running ``benchmarks.run --json-dir``) into that
 directory.
 
+Alongside the wall-time gate, the ``TELEM_<section>.json`` files (the
+telemetry sessions captured next to the BENCH files) carry solver
+*iteration counts to tolerance* — a machine-independent convergence
+signal.  ``check_iteration_counts`` gates those: a solve whose
+``iters_to_tol`` grows by more than ``--iters-factor`` (default 1.2,
+i.e. >20%) over the reference — or stops converging outright — fails.
+Iteration counts don't care how loaded the CI runner is, so this gate
+catches numerical regressions the noisy wall-time gate must ignore.
+
 Rows present in only one side are reported but never fail the gate (new
 benchmarks shouldn't need a reference bump to land, and re-baselining is
 one ``benchmarks.run --json-dir benchmarks/reference`` away).
@@ -73,6 +82,58 @@ def load(directory: str) -> dict[tuple[str, str], tuple[float, str]]:
                 continue                  # "FAIL" markers etc.
             rows[(data["section"], r["name"])] = (value, r.get("unit", ""))
     return rows
+
+
+def _telem_solves(path: str) -> dict[str, list[int]]:
+    """key -> [iters_to_tol, ...] (occurrence order) from a TELEM file."""
+    with open(path) as f:
+        data = json.load(f)
+    by: dict[str, list[int]] = {}
+    for rec in data.get("solves", []):
+        key, it = rec.get("key"), rec.get("iters_to_tol")
+        if key is None or it is None:
+            continue
+        by.setdefault(key, []).append(int(it))
+    return by
+
+
+def check_iteration_counts(cur_dir: str, ref_dir: str,
+                           factor: float = 1.2) -> list[str]:
+    """Gate solver convergence: iters_to_tol from TELEM_*.json solve
+    records must not grow by more than ``factor`` (with a +2 absolute
+    slack so tiny counts don't flap) over the reference, and a solve
+    that converged in the reference must still converge.  Returns a
+    list of violation strings (empty = pass)."""
+    violations = []
+    for path in sorted(glob.glob(os.path.join(ref_dir, "TELEM_*.json"))):
+        name = os.path.basename(path)
+        cpath = os.path.join(cur_dir, name)
+        if not os.path.exists(cpath):
+            print(f"  (no current {name} — iteration gate skipped)")
+            continue
+        ref_by, cur_by = _telem_solves(path), _telem_solves(cpath)
+        checked = 0
+        for key, rlist in sorted(ref_by.items()):
+            clist = cur_by.get(key)
+            if clist is None:
+                print(f"  (no current solve record {key} — skipped)")
+                continue
+            for i, ri in enumerate(rlist):
+                if i >= len(clist) or ri < 0:
+                    continue      # reference itself did not converge
+                ci = clist[i]
+                checked += 1
+                if ci < 0:
+                    violations.append(
+                        f"{name} {key}[{i}]: iters_to_tol {ri} -> "
+                        f"no convergence")
+                elif ci > max(ri * factor, ri + 2):
+                    violations.append(
+                        f"{name} {key}[{i}]: iters_to_tol {ri} -> {ci} "
+                        f"(> {factor:.2f}x)")
+        print(f"  {name}: checked {checked} iteration count(s) "
+              f"(factor {factor:.2f}x)")
+    return violations
 
 
 def check_spmd_monotonicity(directory: str, tol: float = MONO_TOL):
@@ -128,6 +189,10 @@ def main(argv=None):
     ap.add_argument("--min-ms", type=float, default=5.0,
                     help="skip time rows whose reference is below this "
                          "(sub-quantum timings are noise)")
+    ap.add_argument("--iters-factor", type=float, default=1.2,
+                    help="allowed iters_to_tol growth over the reference "
+                         "TELEM solve records (machine-independent "
+                         "convergence gate)")
     ap.add_argument("--mono-tol", type=float, default=MONO_TOL,
                     help="direct_spmd strong-scaling gate: successive "
                          "device counts must retain this fraction of "
@@ -165,14 +230,16 @@ def main(argv=None):
     print(f"checked {checked} gated rows against {args.reference} "
           f"(factor {args.factor}x)")
     mono = check_spmd_monotonicity(args.current, tol=args.mono_tol)
-    if regressions or mono:
+    iters = check_iteration_counts(args.current, args.reference,
+                                   factor=args.iters_factor)
+    if regressions or mono or iters:
         for (section, name), rv, cv, unit in regressions:
             print(f"REGRESSION {section}/{name}: {rv} -> {cv} {unit} "
                   f"(> {args.factor}x)", file=sys.stderr)
-        for msg in mono:
+        for msg in mono + iters:
             print(f"REGRESSION {msg}", file=sys.stderr)
-        raise SystemExit(f"{len(regressions) + len(mono)} benchmark "
-                         f"check(s) failed")
+        raise SystemExit(f"{len(regressions) + len(mono) + len(iters)} "
+                         f"benchmark check(s) failed")
     print("benchmark regression gate: PASS")
 
 

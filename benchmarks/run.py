@@ -17,7 +17,10 @@ Sections:
 
 ``--json-dir`` writes one ``BENCH_<section>.json`` per section (the CI
 smoke artifacts; ``benchmarks.check_regression`` gates them against the
-checked-in ``benchmarks/reference/`` numbers).
+checked-in ``benchmarks/reference/`` numbers) plus a ``TELEM_<section>
+.json`` sibling — the telemetry session (span timings, per-site
+communication volume, solver convergence records) captured while the
+section ran.  Render one with ``python -m repro.telemetry.report``.
 """
 from __future__ import annotations
 
@@ -57,16 +60,32 @@ def main(argv=None):
     from benchmarks.common import ROWS
 
     failures = []
+    if args.json_dir:
+        os.makedirs(args.json_dir, exist_ok=True)
 
     def section(name, fn, *a, **kw):
         if enabled is not None and name not in enabled:
             return
         print(f"== {name} ==", flush=True)
+        sess = None
         try:
-            fn(*a, **kw)
+            if args.json_dir:
+                # armed telemetry session per section: every
+                # BENCH_<section>.json gains a TELEM_<section>.json
+                # sibling (spans, per-site comm bytes, solve records)
+                from repro import telemetry
+                with telemetry.session(name) as sess:
+                    fn(*a, **kw)
+            else:
+                fn(*a, **kw)
         except Exception as e:
             failures.append((name, repr(e)))
             traceback.print_exc()
+        finally:
+            if sess is not None:
+                path = os.path.join(args.json_dir, f"TELEM_{name}.json")
+                sess.save(path)
+                print(f"wrote {path}")
 
     section("solvers", bench_solvers.run,
             sizes=(256, 512) if args.quick else (512, 1024),
@@ -110,7 +129,6 @@ def main(argv=None):
     print(f"wrote {len(ROWS)} rows to {args.out}")
 
     if args.json_dir:
-        os.makedirs(args.json_dir, exist_ok=True)
         by_section: dict[str, list] = {}
         for bench, name, value, unit, note in ROWS:
             by_section.setdefault(bench, []).append(

@@ -44,6 +44,7 @@ from typing import Callable
 
 import jax
 import jax.numpy as jnp
+import numpy as _np
 
 from repro.core import blocking as _blocking
 from repro.core import cholesky as _chol
@@ -52,6 +53,9 @@ from repro.core import precond as _precond
 from repro.core import qr as _qr
 from repro.core.blocking import BACKENDS
 from repro.core.krylov import SolveResult
+from repro.resilience import monitor as _monitor
+from repro.telemetry import convergence as _conv
+from repro.telemetry import trace as _trace
 
 ENGINES = ("gspmd", "spmd")
 
@@ -208,33 +212,48 @@ def _validate_inputs(a, b, method: str, sparse: bool) -> None:
                 "(a + a.T)/2 or use method='lu'")
 
 
-def solve(a: jax.Array, b: jax.Array, *, method: str = "lu",
-          mesh=None, engine: str = "gspmd", backend: str = "ref",
-          block_size: int = 128, tol: float = 1e-6, maxiter: int = 1000,
-          restart: int = 32, precond: str | Callable | None = None,
-          x0: jax.Array | None = None, policy: str | None = None,
-          validate: bool = True, abft: bool = False,
-          return_info: bool = False, **method_kwargs):
-    """Solve A x = b.  Returns x, or the full :class:`SolveResult`
-    (iterations / residual / converged / info) when ``return_info=True``.
-    ``**method_kwargs`` forwards solver-specific options declared in the
-    method's registry ``extra`` tuple (anything else is a TypeError).
+def _info_schema(res, atol) -> dict:
+    """The uniform info dict of a direct solve: the same
+    ``fail_code``/``fail_iter`` keys the monitored iterative drivers
+    emit (a factorization that returned is code OK at iteration 0), plus
+    the convergence-history keys when a telemetry session is armed (a
+    direct solve's "history" is its single final residual)."""
+    zero = jnp.zeros(jnp.shape(res.residual), jnp.int32)
+    info = {"fail_code": zero, "fail_iter": zero}
+    if _conv.armed():
+        info["residual_history"] = jnp.asarray(res.residual)[None]
+        info["iters_to_tol"] = jnp.where(res.residual <= atol, 0, -1
+                                         ).astype(jnp.int32)
+    return info
 
-    Resilience knobs (all off by default, zero overhead when off):
 
-    * ``x0`` — initial guess for the iterative methods (all engines);
-    * ``policy="resilient"`` — classify failures (health monitor, ABFT,
-      residual audit) and escalate: restart from the best iterate, drop
-      pallas→ref, walk the registered method fallback chain
-      (:func:`register_fallback`); the attempt history rides out in
-      ``SolveResult.info["attempts"]``;
-    * ``validate`` — reject non-finite / structurally unusable concrete
-      inputs up front (skipped under jit, where inputs are tracers);
-    * ``abft=True`` — carry the Huang–Abraham checksum column through
-      the distributed factorization (``engine='spmd'`` lu/cholesky) and
-      verify it at factor exit, raising
-      :class:`repro.resilience.abft.FactorCorruption` on mismatch.
-    """
+def _with_fail_reason(result: SolveResult) -> SolveResult:
+    """Uniform info schema: every ``return_info=True`` result carries
+    ``fail_code`` / ``fail_iter`` / ``fail_reason``.  ``fail_reason`` is
+    the host-side classification (``monitor.classify``) — ``None`` under
+    tracing, where the code is an abstract value (``None`` is a
+    zero-leaf pytree node, so jitted callers see no structure change
+    between runs)."""
+    info = dict(result.info) if result.info else {}
+    code = info.get("fail_code")
+    if code is None or isinstance(code, jax.core.Tracer):
+        info["fail_reason"] = None
+    else:
+        arr = _np.asarray(code)
+        info["fail_reason"] = _monitor.classify(int(arr)) if arr.ndim == 0 \
+            else [_monitor.classify(int(c)) for c in arr.reshape(-1)]
+    return result._replace(info=info)
+
+
+def _solve_impl(a: jax.Array, b: jax.Array, *, method: str = "lu",
+                mesh=None, engine: str = "gspmd", backend: str = "ref",
+                block_size: int = 128, tol: float = 1e-6,
+                maxiter: int = 1000, restart: int = 32,
+                precond: str | Callable | None = None,
+                x0: jax.Array | None = None, policy: str | None = None,
+                validate: bool = True, abft: bool = False,
+                return_info: bool = False, **method_kwargs):
+    """Dispatch core of :func:`solve` (same contract, no telemetry)."""
     entry = get_method(method)
     sparse_in = getattr(a, "is_sparse", False)
     if validate:
@@ -359,7 +378,9 @@ def solve(a: jax.Array, b: jax.Array, *, method: str = "lu",
         atol = tol * jnp.where(bnorm == 0, 1.0, bnorm)
         iters = jnp.zeros(res.shape, jnp.int32) if a.ndim == 3 \
             else jnp.asarray(0)
-        return SolveResult(x, iters, res, res <= atol)
+        result = SolveResult(x, iters, res, res <= atol)
+        return _with_fail_reason(
+            result._replace(info=_info_schema(result, atol)))
 
     pc = _precond.make(precond, a, block_size)
     extra = {"restart": restart} if "restart" in entry.extra else {}
@@ -394,24 +415,95 @@ def solve(a: jax.Array, b: jax.Array, *, method: str = "lu",
         result = entry.fn(op, b, x0, tol=tol, maxiter=maxiter,
                           precond=pc.apply if pc is not None else None,
                           **extra)
-    return result if return_info else result.x
+    return _with_fail_reason(result) if return_info else result.x
 
 
-def factorize(a: jax.Array, *, method: str = "lu", mesh=None,
-              block_size: int = 128, backend: str = "ref",
-              engine: str = "gspmd", validate: bool = True,
-              abft: bool = False):
-    """Factor once, solve many (paper's two-step direct method, step 1).
+def _record_solve(sess, a, method, engine, backend, out) -> None:
+    """Append a per-solve record to the session (concrete values only —
+    under jit the result is tracers and the record stays shape-only)."""
+    n = int(a.shape[-1]) if getattr(a, "shape", None) else 0
+    dtype = str(getattr(a, "dtype", "?"))
+    rec = {"method": method, "engine": engine, "backend": backend,
+           "n": n, "dtype": dtype,
+           "key": f"{method}/{engine}/{backend}/n{n}/{dtype}"}
+    if isinstance(out, SolveResult) and not isinstance(out.x,
+                                                       jax.core.Tracer):
+        try:
+            rec["iterations"] = int(jnp.max(out.iterations))
+            rec["residual"] = float(jnp.max(out.residual))
+            rec["converged"] = bool(jnp.all(out.converged))
+            info = out.info or {}
+            itt = info.get("iters_to_tol")
+            if itt is not None and not isinstance(itt, jax.core.Tracer):
+                rec["iters_to_tol"] = int(jnp.max(jnp.asarray(itt)))
+            if info.get("fail_reason") is not None:
+                rec["fail_reason"] = info["fail_reason"]
+        except Exception:       # never let bookkeeping sink a solve
+            pass
+    sess.record_solve(**rec)
 
-    Any method registered with ``kind="direct"`` and a factor/apply split
-    works; the returned callable maps ``b -> x``.  Batched ``a`` of shape
-    (B, n, n) returns a solver over (B, n[, k]) right-hand sides.
-    ``engine="spmd"`` (mesh required) factors once with the block-cyclic
-    distributed factorization; the returned solver runs the distributed
-    substitutions against the sharded factor state.  ``abft=True``
-    (engine='spmd' lu/cholesky) carries the checksum column and verifies
-    it at factor exit — see :func:`solve`.
+
+def solve(a: jax.Array, b: jax.Array, *, method: str = "lu",
+          mesh=None, engine: str = "gspmd", backend: str = "ref",
+          block_size: int = 128, tol: float = 1e-6, maxiter: int = 1000,
+          restart: int = 32, precond: str | Callable | None = None,
+          x0: jax.Array | None = None, policy: str | None = None,
+          validate: bool = True, abft: bool = False,
+          return_info: bool = False, **method_kwargs):
+    """Solve A x = b.  Returns x, or the full :class:`SolveResult`
+    (iterations / residual / converged / info) when ``return_info=True``.
+    ``**method_kwargs`` forwards solver-specific options declared in the
+    method's registry ``extra`` tuple (anything else is a TypeError).
+
+    ``return_info=True`` results always carry the uniform info schema
+    ``fail_code`` / ``fail_iter`` / ``fail_reason`` (see
+    docs/solvers.md §Observability); under an armed
+    ``telemetry.session()`` they additionally carry
+    ``residual_history`` / ``iters_to_tol``, and the solve is recorded
+    as a span (``solve`` → ``dispatch``/``execute``) plus a per-solve
+    convergence record.  With no session armed the telemetry layer adds
+    ZERO overhead — one module-global check, identical jaxprs.
+
+    Resilience knobs (all off by default, zero overhead when off):
+
+    * ``x0`` — initial guess for the iterative methods (all engines);
+    * ``policy="resilient"`` — classify failures (health monitor, ABFT,
+      residual audit) and escalate: restart from the best iterate, drop
+      pallas→ref, walk the registered method fallback chain
+      (:func:`register_fallback`); the attempt history rides out in
+      ``SolveResult.info["attempts"]``;
+    * ``validate`` — reject non-finite / structurally unusable concrete
+      inputs up front (skipped under jit, where inputs are tracers);
+    * ``abft=True`` — carry the Huang–Abraham checksum column through
+      the distributed factorization (``engine='spmd'`` lu/cholesky) and
+      verify it at factor exit, raising
+      :class:`repro.resilience.abft.FactorCorruption` on mismatch.
     """
+    kw = dict(method=method, mesh=mesh, engine=engine, backend=backend,
+              block_size=block_size, tol=tol, maxiter=maxiter,
+              restart=restart, precond=precond, x0=x0, policy=policy,
+              validate=validate, abft=abft, return_info=return_info,
+              **method_kwargs)
+    sess = _trace.active()
+    if sess is None:
+        return _solve_impl(a, b, **kw)
+    attrs = {"method": method, "engine": engine, "backend": backend,
+             "n": int(a.shape[-1]) if getattr(a, "shape", None) else 0}
+    if policy:
+        attrs["policy"] = policy
+    with _trace.span("solve", **attrs):
+        with _trace.span("dispatch"):
+            out = _solve_impl(a, b, **kw)
+        with _trace.span("execute"):
+            out = _trace.block(out)
+        _record_solve(sess, a, method, engine, backend, out)
+    return out
+
+
+def _factorize_impl(a: jax.Array, *, method: str = "lu", mesh=None,
+                    block_size: int = 128, backend: str = "ref",
+                    engine: str = "gspmd", validate: bool = True,
+                    abft: bool = False):
     if getattr(a, "is_sparse", False):
         raise ValueError("factorize is dense-only; sparse systems use the "
                          "iterative methods (or densify with a.to_dense())")
@@ -468,6 +560,40 @@ def factorize(a: jax.Array, *, method: str = "lu", mesh=None,
                              mesh=mesh, backend=backend)
 
 
+def factorize(a: jax.Array, *, method: str = "lu", mesh=None,
+              block_size: int = 128, backend: str = "ref",
+              engine: str = "gspmd", validate: bool = True,
+              abft: bool = False):
+    """Factor once, solve many (paper's two-step direct method, step 1).
+
+    Any method registered with ``kind="direct"`` and a factor/apply split
+    works; the returned callable maps ``b -> x``.  Batched ``a`` of shape
+    (B, n, n) returns a solver over (B, n[, k]) right-hand sides.
+    ``engine="spmd"`` (mesh required) factors once with the block-cyclic
+    distributed factorization; the returned solver runs the distributed
+    substitutions against the sharded factor state.  ``abft=True``
+    (engine='spmd' lu/cholesky) carries the checksum column and verifies
+    it at factor exit — see :func:`solve`.  Under an armed
+    ``telemetry.session()`` the factorization records a
+    ``factorize`` → ``dispatch``/``execute`` span pair.
+    """
+    kw = dict(method=method, mesh=mesh, block_size=block_size,
+              backend=backend, engine=engine, validate=validate, abft=abft)
+    sess = _trace.active()
+    if sess is None:
+        return _factorize_impl(a, **kw)
+    with _trace.span("factorize", method=method, engine=engine,
+                     backend=backend,
+                     n=int(a.shape[-1]) if getattr(a, "shape", None) else 0):
+        with _trace.span("dispatch"):
+            out = _factorize_impl(a, **kw)
+        with _trace.span("execute"):
+            # the factor state rides inside the returned partial; block
+            # on it so "execute" reflects device time, not enqueue time
+            _trace.block(getattr(out, "args", None))
+    return out
+
+
 def eigsolve(a, k: int = 6, *, which: str = "LA", method: str = "lanczos",
              mesh=None, backend: str = "ref", ncv=None, v0=None,
              tol: float = 1e-8, n=None, dtype=None, validate: bool = True):
@@ -485,6 +611,19 @@ def eigsolve(a, k: int = 6, *, which: str = "LA", method: str = "lanczos",
                      or getattr(a, "ndim", None) == 2):
         _validate_inputs(a, v0, method, getattr(a, "is_sparse", False))
     kw = {} if dtype is None else {"dtype": dtype}
-    return eigen.eigsolve(a, k, which=which, method=method, mesh=mesh,
-                          backend=backend, ncv=ncv, v0=v0, tol=tol, n=n,
-                          **kw)
+    sess = _trace.active()
+    if sess is None:
+        return eigen.eigsolve(a, k, which=which, method=method, mesh=mesh,
+                              backend=backend, ncv=ncv, v0=v0, tol=tol, n=n,
+                              **kw)
+    with _trace.span("eigsolve", method=method, backend=backend, k=k,
+                     n=n if n is not None
+                     else (int(a.shape[-1]) if getattr(a, "shape", None)
+                           else 0)):
+        with _trace.span("dispatch"):
+            out = eigen.eigsolve(a, k, which=which, method=method,
+                                 mesh=mesh, backend=backend, ncv=ncv,
+                                 v0=v0, tol=tol, n=n, **kw)
+        with _trace.span("execute"):
+            out = _trace.block(out)
+    return out

@@ -22,6 +22,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import blocking, dist, pblas
 from repro.resilience import inject
+from repro.telemetry import comm as telem_comm
 
 
 def cholesky_factor(a: jax.Array, block_size: int = 128, mesh=None,
@@ -199,9 +200,11 @@ def cholesky_factor_spmd(a: jax.Array, *, block_size: int = 128, mesh=None,
         d = pblas.flat_index_local(row, col, q)
         gcol = lay.local_gcol(d, a_loc.shape[1])
 
-        def factor_bcast(a_loc, s):
+        def factor_bcast(a_loc, s, its: int = 1):
             """Owner-only panel factorization of global block column ``s``
-            + ONE (n, nb) broadcast (no perm to pack, unlike the LU)."""
+            + ONE (n, nb) broadcast (no perm to pack, unlike the LU).
+            ``its`` is the telemetry loop-trip multiplier for calls traced
+            inside the fori_loop body."""
             owner, t = lay.owner_of(s), lay.slot_of(s)
             pan = jax.lax.cond(
                 d == owner,
@@ -209,8 +212,9 @@ def cholesky_factor_spmd(a: jax.Array, *, block_size: int = 128, mesh=None,
                     jax.lax.dynamic_slice(a_loc, (0, t * nb), (n, nb)),
                     s * nb),
                 lambda _: jnp.zeros((n, nb), a_loc.dtype), None)
-            return inject.tap("panel", pblas.bcast_local(pan, owner, d, axes),
-                              step=s, rank=d)
+            with telem_comm.site("chol_panel_bcast", iters=its):
+                pan = pblas.bcast_local(pan, owner, d, axes)
+            return inject.tap("panel", pan, step=s, rank=d)
 
         def consume(carry, pan, s, factor_next: bool):
             """Owner store + SPLIT rank-nb SYRK: next panel's block column
@@ -274,7 +278,8 @@ def cholesky_factor_spmd(a: jax.Array, *, block_size: int = 128, mesh=None,
             base = (a_loc, c) if abft else (a_loc,)
             if not factor_next:
                 return base
-            pan2 = pblas.bcast_local(out[1], owner2, d, axes)
+            with telem_comm.site("chol_panel_bcast", iters=nblocks):
+                pan2 = pblas.bcast_local(out[1], owner2, d, axes)
             return base + (inject.tap("panel", pan2, step=s + 1, rank=d),)
 
         init = (a_loc,) + ((c0[0],) if abft else ())
@@ -288,7 +293,7 @@ def cholesky_factor_spmd(a: jax.Array, *, block_size: int = 128, mesh=None,
             fin = jax.lax.fori_loop(0, nblocks, step, init + (pan1,))[:keep]
         else:
             def step(s, carry):
-                pan = factor_bcast(carry[0], s)
+                pan = factor_bcast(carry[0], s, its=nblocks)
                 return consume(carry, pan, s, factor_next=False)
 
             fin = jax.lax.fori_loop(0, nblocks, step, init)

@@ -36,6 +36,14 @@ import jax.scipy.linalg  # noqa: F401  (solve_triangular in ca_gmres)
 
 from repro.core.operator import LinearOperator, as_operator
 from repro.resilience import monitor
+from repro.telemetry import convergence
+
+# Every driver also threads a telemetry convergence :class:`History`
+# (residual ring buffer + iters-to-tol) through its carry when a
+# ``telemetry.session()`` is armed.  Disarmed it is ``None`` — a
+# zero-leaf pytree node — and every ``record`` call is behind an
+# ``if ch is not None`` trace-time guard, so the loop jaxprs are
+# bitwise identical to a build with no telemetry (spy-tested).
 
 # divergence cutoffs, in the metric each driver carries.  The CG family
 # tracks SQUARED norms, so 1e8 on ⟨r,r⟩ is 1e4 on ‖r‖ — generous for
@@ -87,14 +95,15 @@ def cg(op: LinearOperator | Callable, b: jax.Array,
     rr0 = rz0 if m is None else op.dot(r0, r0)
     alpha0 = jnp.ones_like(rz0)
     h0 = monitor.init(rr0)
+    ch0 = convergence.init(rr0, atol, sq=True)
 
     def cond(c):
-        x, r, p, rz, rr, alpha, k, h = c
+        x, r, p, rz, rr, alpha, k, h, ch = c
         return op.reduce_any((jnp.sqrt(rr) > atol) & monitor.ok(h)) \
             & (k < maxiter)
 
     def body(c):
-        x, r, p, rz, rr, alpha, k, h = c
+        x, r, p, rz, rr, alpha, k, h, ch = c
         ap = op.matvec(p)
         alpha = _safe_div(rz, op.dot(p, ap))
         x, r, rr = op.update(x, r, p, ap, alpha)    # fused single pass
@@ -106,12 +115,15 @@ def cg(op: LinearOperator | Callable, b: jax.Array,
         # singular / not SPD); flag it unless the residual converged.
         brk = (jnp.abs(alpha) == 0) & (jnp.sqrt(rr) > atol)
         h = monitor.update(h, rr, k + 1, breakdown=brk, divergence=_DIV_SQ)
-        return (x, r, p, rz_new, rr, alpha, k + 1, h)
+        if ch is not None:
+            ch = convergence.record(ch, rr, k, sq=True)
+        return (x, r, p, rz_new, rr, alpha, k + 1, h, ch)
 
-    x, _, _, _, rr, _, k, h = jax.lax.while_loop(
-        cond, body, (x0, r0, p0, rz0, rr0, alpha0, 0, h0))
+    x, _, _, _, rr, _, k, h, ch = jax.lax.while_loop(
+        cond, body, (x0, r0, p0, rz0, rr0, alpha0, 0, h0, ch0))
     res = jnp.sqrt(rr)
-    return SolveResult(x, k, res, res <= atol, monitor.info(h))
+    return SolveResult(x, k, res, res <= atol,
+                       {**monitor.info(h), **convergence.info(ch)})
 
 
 # --------------------------------------------------------------------------
@@ -137,14 +149,15 @@ def pipelined_cg(op: LinearOperator | Callable, b: jax.Array,
     beta0 = jnp.zeros_like(gamma0)
     pz = jnp.zeros_like(b)
     h0 = monitor.init(rr0)
+    ch0 = convergence.init(rr0, atol, sq=True)
 
     def cond(c):
-        x, r, u, w, p, s, gamma, alpha, beta, rr, k, h = c
+        x, r, u, w, p, s, gamma, alpha, beta, rr, k, h, ch = c
         return op.reduce_any((jnp.sqrt(rr) > atol) & monitor.ok(h)) \
             & (k < maxiter)
 
     def body(c):
-        x, r, u, w, p, s, gamma, alpha, beta, rr, k, h = c
+        x, r, u, w, p, s, gamma, alpha, beta, rr, k, h, ch = c
         p = u + op.scale(beta, p)
         s = w + op.scale(beta, s)              # s = A p, by recurrence
         x = x + op.scale(alpha, p)
@@ -159,14 +172,17 @@ def pipelined_cg(op: LinearOperator | Callable, b: jax.Array,
         # denominator vanished) — flag it unless converged.
         brk = (jnp.abs(alpha) == 0) & (jnp.sqrt(rr) > atol)
         h = monitor.update(h, rr, k + 1, breakdown=brk, divergence=_DIV_SQ)
-        return (x, r, u, w, p, s, gamma_new, alpha, beta, rr, k + 1, h)
+        if ch is not None:
+            ch = convergence.record(ch, rr, k, sq=True)
+        return (x, r, u, w, p, s, gamma_new, alpha, beta, rr, k + 1, h, ch)
 
     out = jax.lax.while_loop(
         cond, body,
-        (x0, r0, u0, w0, pz, pz, gamma0, alpha0, beta0, rr0, 0, h0))
-    x, rr, k, h = out[0], out[9], out[10], out[11]
+        (x0, r0, u0, w0, pz, pz, gamma0, alpha0, beta0, rr0, 0, h0, ch0))
+    x, rr, k, h, ch = out[0], out[9], out[10], out[11], out[12]
     res = jnp.sqrt(rr)
-    return SolveResult(x, k, res, res <= atol, monitor.info(h))
+    return SolveResult(x, k, res, res <= atol,
+                       {**monitor.info(h), **convergence.info(ch)})
 
 
 # --------------------------------------------------------------------------
@@ -237,15 +253,16 @@ def ca_cg(op: LinearOperator | Callable, b: jax.Array,
     rr0 = op.dot(r0, r0)
     k0 = jnp.asarray(0, jnp.int32)
     h0 = monitor.init(rr0)
+    ch0 = convergence.init(rr0, atol, sq=True)
 
     def cond(c):
-        x, r, p, rr, k, h, xb, rrb = c
+        x, r, p, rr, k, h, xb, rrb, ch = c
         return op.reduce_any(
             (jnp.sqrt(jnp.maximum(rr, 0)) > atol) & monitor.ok(h)) \
             & (k < maxiter)
 
     def body(c):
-        x, r, p, rr_in, k, h, xb, rrb = c
+        x, r, p, rr_in, k, h, xb, rrb, ch = c
         rows = _matrix_powers(op, p, s) + _matrix_powers(op, r, s - 1)
         basis = jnp.stack(rows)                     # (2s+1, n) row-stack
         g = op.block_dots(basis)                    # ONE reduction
@@ -318,12 +335,18 @@ def ca_cg(op: LinearOperator | Callable, b: jax.Array,
         brk = (s_eff == 0) & (jnp.sqrt(jnp.maximum(rr, 0)) > atol)
         h = monitor.update(h, rr, kk, breakdown=brk,
                            divergence=_DIV_CA_SQ)
-        return (x, r, p, rr, kk, h, xb, rrb)
+        if ch is not None:
+            # one entry per OUTER step, stamped at the inner-iteration
+            # count kk (history rows between outer steps stay NaN)
+            ch = convergence.record(ch, jnp.maximum(rr, 0), kk, bump=0,
+                                    sq=True)
+        return (x, r, p, rr, kk, h, xb, rrb, ch)
 
-    _, _, _, _, k, h, xb, rrb = jax.lax.while_loop(
-        cond, body, (x0, r0, r0, rr0, k0, h0, x0, rr0))
+    _, _, _, _, k, h, xb, rrb, ch = jax.lax.while_loop(
+        cond, body, (x0, r0, r0, rr0, k0, h0, x0, rr0, ch0))
     res = jnp.sqrt(jnp.maximum(rrb, 0))
-    return SolveResult(xb, k, res, res <= atol, monitor.info(h))
+    return SolveResult(xb, k, res, res <= atol,
+                       {**monitor.info(h), **convergence.info(ch)})
 
 
 def ca_gmres(op: LinearOperator | Callable, b: jax.Array,
@@ -401,11 +424,11 @@ def ca_gmres(op: LinearOperator | Callable, b: jax.Array,
         return x + y @ q[:s], res, s_eff >= 1
 
     def cond(st):
-        x, res, h, k = st
+        x, res, h, k, ch = st
         return (res > atol) & monitor.ok(h) & (k < maxiter)
 
     def body(st):
-        x, res, h, k = st
+        x, res, h, k, ch = st
         x2, res2, ok = cycle(x)
         # restart-monotonicity backstop: a cycle that fails to strictly
         # improve the least-squares residual (stagnation, or NaNs past
@@ -419,13 +442,17 @@ def ca_gmres(op: LinearOperator | Callable, b: jax.Array,
         better = jnp.isfinite(res2) & (res2 < res)
         h = monitor.update(h, res2, k + 1,
                            breakdown=(~ok) & (res > atol), stagnation=1)
-        return (jnp.where(better, x2, x), jnp.where(better, res2, res),
-                h, k + 1)
+        res_new = jnp.where(better, res2, res)
+        if ch is not None:
+            ch = convergence.record(ch, res_new, k)   # one entry per cycle
+        return (jnp.where(better, x2, x), res_new, h, k + 1, ch)
 
     res0 = op.norm(b - op.matvec(x0))
-    x, res, h, k = jax.lax.while_loop(
-        cond, body, (x0, res0, monitor.init(res0), 0))
-    return SolveResult(x, k, res, res <= atol, monitor.info(h))
+    x, res, h, k, ch = jax.lax.while_loop(
+        cond, body,
+        (x0, res0, monitor.init(res0), 0, convergence.init(res0, atol)))
+    return SolveResult(x, k, res, res <= atol,
+                       {**monitor.info(h), **convergence.info(ch)})
 
 
 # --------------------------------------------------------------------------
@@ -451,14 +478,15 @@ def bicg(op: LinearOperator | Callable, b: jax.Array,
     rz0 = op.dot(rt0, z0)
     rr0 = op.dot(r0, r0)
     h0 = monitor.init(rr0)
+    ch0 = convergence.init(rr0, atol, sq=True)
 
     def cond(c):
-        x, r, rt, p, pt, rz, rr, k, h = c
+        x, r, rt, p, pt, rz, rr, k, h, ch = c
         return op.reduce_any((jnp.sqrt(rr) > atol) & monitor.ok(h)) \
             & (k < maxiter)
 
     def body(c):
-        x, r, rt, p, pt, rz, rr, k, h = c
+        x, r, rt, p, pt, rz, rr, k, h, ch = c
         ap = op.matvec(p)
         atpt = op.matvec_t(pt)
         alpha = _safe_div(rz, op.dot(pt, ap))
@@ -473,13 +501,16 @@ def bicg(op: LinearOperator | Callable, b: jax.Array,
         # the serious BiCG breakdown: ⟨r̃, z⟩ = 0 with r not yet small
         brk = (jnp.abs(rz_new) == 0) & (jnp.sqrt(rr) > atol)
         h = monitor.update(h, rr, k + 1, breakdown=brk, divergence=_DIV_SQ)
-        return (x, r, rt, p, pt, rz_new, rr, k + 1, h)
+        if ch is not None:
+            ch = convergence.record(ch, rr, k, sq=True)
+        return (x, r, rt, p, pt, rz_new, rr, k + 1, h, ch)
 
     out = jax.lax.while_loop(cond, body,
-                             (x0, r0, rt0, p0, pt0, rz0, rr0, 0, h0))
-    x, rr, k, h = out[0], out[6], out[7], out[8]
+                             (x0, r0, rt0, p0, pt0, rz0, rr0, 0, h0, ch0))
+    x, rr, k, h, ch = out[0], out[6], out[7], out[8], out[9]
     res = jnp.sqrt(rr)
-    return SolveResult(x, k, res, res <= atol, monitor.info(h))
+    return SolveResult(x, k, res, res <= atol,
+                       {**monitor.info(h), **convergence.info(ch)})
 
 
 # --------------------------------------------------------------------------
@@ -501,14 +532,15 @@ def bicgstab(op: LinearOperator | Callable, b: jax.Array,
     one = jnp.ones_like(rr0)
     v0 = p0 = jnp.zeros_like(b)
     h0 = monitor.init(rr0)
+    ch0 = convergence.init(rr0, atol, sq=True)
 
     def cond(c):
-        x, r, p, v, rho, alpha, omega, rr, k, h = c
+        x, r, p, v, rho, alpha, omega, rr, k, h, ch = c
         return op.reduce_any((jnp.sqrt(rr) > atol) & monitor.ok(h)) \
             & (k < maxiter)
 
     def body(c):
-        x, r, p, v, rho, alpha, omega, rr, k, h = c
+        x, r, p, v, rho, alpha, omega, rr, k, h, ch = c
         rho_new = op.dot(rhat, r)
         # ratio-of-ratios, not a product quotient: rho*omega can underflow
         beta = _safe_div(rho_new, rho) * _safe_div(alpha, omega)
@@ -527,13 +559,17 @@ def bicgstab(op: LinearOperator | Callable, b: jax.Array,
         brk = ((jnp.abs(rho_new) == 0) | (jnp.abs(omega) == 0)) \
             & (jnp.sqrt(rr) > atol)
         h = monitor.update(h, rr, k + 1, breakdown=brk, divergence=_DIV_SQ)
-        return (x, r, p, v, rho_new, alpha, omega, rr, k + 1, h)
+        if ch is not None:
+            ch = convergence.record(ch, rr, k, sq=True)
+        return (x, r, p, v, rho_new, alpha, omega, rr, k + 1, h, ch)
 
     out = jax.lax.while_loop(cond, body,
-                             (x0, r0, p0, v0, one, one, one, rr0, 0, h0))
-    x, rr, k, h = out[0], out[7], out[8], out[9]
+                             (x0, r0, p0, v0, one, one, one, rr0, 0, h0,
+                              ch0))
+    x, rr, k, h, ch = out[0], out[7], out[8], out[9], out[10]
     res = jnp.sqrt(rr)
-    return SolveResult(x, k, res, res <= atol, monitor.info(h))
+    return SolveResult(x, k, res, res <= atol,
+                       {**monitor.info(h), **convergence.info(ch)})
 
 
 # --------------------------------------------------------------------------
@@ -636,11 +672,11 @@ def gmres(op: LinearOperator | Callable, b: jax.Array,
         return x + dx
 
     def cond(c):
-        x, res, k, h = c
+        x, res, k, h, ch = c
         return (res > atol) & monitor.ok(h) & (k < maxiter)
 
     def body(c):
-        x, _, k, h = c
+        x, _, k, h, ch = c
         x = cycle(x)
         res = op.norm(b - op.matvec(x))
         # taxonomy only (non-finite / blow-up / frozen restarts): three
@@ -648,12 +684,16 @@ def gmres(op: LinearOperator | Callable, b: jax.Array,
         # space stopped helping — stop instead of spinning to maxiter.
         h = monitor.update(h, res, k + 1, divergence=_DIV_NORM,
                            stagnation=3)
-        return (x, res, k + 1, h)
+        if ch is not None:
+            ch = convergence.record(ch, res, k)   # one entry per cycle
+        return (x, res, k + 1, h, ch)
 
     res0 = op.norm(b - op.matvec(x0))
-    x, res, k, h = jax.lax.while_loop(cond, body,
-                                      (x0, res0, 0, monitor.init(res0)))
-    return SolveResult(x, k, res, res <= atol, monitor.info(h))
+    x, res, k, h, ch = jax.lax.while_loop(
+        cond, body,
+        (x0, res0, 0, monitor.init(res0), convergence.init(res0, atol)))
+    return SolveResult(x, k, res, res <= atol,
+                       {**monitor.info(h), **convergence.info(ch)})
 
 
 # --------------------------------------------------------------------------
@@ -695,6 +735,7 @@ def cgls(op: LinearOperator | Callable, b: jax.Array,
     gamma0 = op.dot(s0, z0)
     ss0 = gamma0 if m is None else op.dot(s0, s0)
     h0 = monitor.init(ss0)
+    ch0 = convergence.init(ss0, atol, sq=True)
 
     # The normal equations square the conditioning, so in low precision
     # CGLS hits its attainable-accuracy floor early and then DIVERGES
@@ -703,12 +744,12 @@ def cgls(op: LinearOperator | Callable, b: jax.Array,
     # past its best — the answer returned is always the best one seen.
 
     def cond(c):
-        x, r, p, gamma, ss, xb, ssb, k, h = c
+        x, r, p, gamma, ss, xb, ssb, k, h, ch = c
         return op.reduce_any((jnp.sqrt(ss) > atol) & monitor.ok(h)) \
             & (k < maxiter)
 
     def body(c):
-        x, r, p, gamma, ss, xb, ssb, k, h = c
+        x, r, p, gamma, ss, xb, ssb, k, h, ch = c
         q = op.matvec(p)
         alpha = _safe_div(gamma, op.dot(q, q))
         x, r = op.axpy_pair(x, p, r, q, alpha)      # fused when m == n
@@ -726,13 +767,16 @@ def cgls(op: LinearOperator | Callable, b: jax.Array,
         brk = (jnp.abs(gamma_new) == 0) & (jnp.sqrt(ss) > atol)
         h = monitor.update(h, ss, k + 1, breakdown=brk,
                            divergence=_DIV_CGLS_SQ)
-        return (x, r, p, gamma_new, ss, xb, ssb, k + 1, h)
+        if ch is not None:
+            ch = convergence.record(ch, ss, k, sq=True)
+        return (x, r, p, gamma_new, ss, xb, ssb, k + 1, h, ch)
 
     out = jax.lax.while_loop(cond, body,
-                             (x0, r0, p0, gamma0, ss0, x0, ss0, 0, h0))
-    xb, ssb, k, h = out[5], out[6], out[7], out[8]
+                             (x0, r0, p0, gamma0, ss0, x0, ss0, 0, h0, ch0))
+    xb, ssb, k, h, ch = out[5], out[6], out[7], out[8], out[9]
     res = jnp.sqrt(ssb)
-    return SolveResult(xb, k, res, res <= atol, monitor.info(h))
+    return SolveResult(xb, k, res, res <= atol,
+                       {**monitor.info(h), **convergence.info(ch)})
 
 
 def lsqr(op: LinearOperator | Callable, b: jax.Array,
@@ -758,14 +802,15 @@ def lsqr(op: LinearOperator | Callable, b: jax.Array,
     v0 = op.scale(_safe_div(jnp.ones_like(alfa0), alfa0), av)
     arnorm0 = alfa0 * beta0                    # ‖Aᵀr₀‖ exactly at x₀
     h0 = monitor.init(arnorm0)
+    ch0 = convergence.init(arnorm0, atol)
 
     def cond(c):
-        x, w, u, v, alfa, phibar, rhobar, arnorm, k, h = c
+        x, w, u, v, alfa, phibar, rhobar, arnorm, k, h, ch = c
         return op.reduce_any((arnorm > atol) & monitor.ok(h)) \
             & (k < maxiter)
 
     def body(c):
-        x, w, u, v, alfa, phibar, rhobar, arnorm, k, h = c
+        x, w, u, v, alfa, phibar, rhobar, arnorm, k, h, ch = c
         # -- continue the bidiagonalization --------------------------------
         u = op.matvec(v) - op.scale(alfa, u)
         beta = op.norm(u)
@@ -790,10 +835,14 @@ def lsqr(op: LinearOperator | Callable, b: jax.Array,
         arnorm = jnp.where((beta == 0) | (alfa_new == 0),
                            jnp.zeros_like(arnorm), arnorm)
         h = monitor.update(h, arnorm, k + 1, divergence=_DIV_NORM)
+        if ch is not None:
+            ch = convergence.record(ch, arnorm, k)
         return (x, w, u, v_new, alfa_new, phibar_new, rhobar_new,
-                arnorm, k + 1, h)
+                arnorm, k + 1, h, ch)
 
     out = jax.lax.while_loop(
-        cond, body, (x0, v0, u0, v0, alfa0, beta0, alfa0, arnorm0, 0, h0))
-    x, arnorm, k, h = out[0], out[7], out[8], out[9]
-    return SolveResult(x, k, arnorm, arnorm <= atol, monitor.info(h))
+        cond, body,
+        (x0, v0, u0, v0, alfa0, beta0, alfa0, arnorm0, 0, h0, ch0))
+    x, arnorm, k, h, ch = out[0], out[7], out[8], out[9], out[10]
+    return SolveResult(x, k, arnorm, arnorm <= atol,
+                       {**monitor.info(h), **convergence.info(ch)})

@@ -52,6 +52,7 @@ from jax.experimental.shard_map import shard_map
 
 from repro.core import blocking, dist, pblas
 from repro.resilience import inject
+from repro.telemetry import comm as telem_comm
 
 
 def _panel_factor(pan: jax.Array, k):
@@ -344,11 +345,12 @@ def lu_factor_spmd(a: jax.Array, *, block_size: int = 128, mesh=None,
             return jnp.concatenate(
                 [pan, perm.astype(pan.dtype)[:, None]], axis=1)
 
-        def factor_bcast(a_loc, s):
+        def factor_bcast(a_loc, s, its: int = 1):
             """Owner-only pivoted panel factorization of global block
             column ``s`` + ONE packed (panel ‖ perm) broadcast.  The perm
             rides as a float column — exact (integers < 2^24 even in
-            f32)."""
+            f32).  ``its`` is the telemetry loop-trip multiplier: a call
+            traced inside the fori_loop body executes nblocks times."""
             owner, t = lay.owner_of(s), lay.slot_of(s)
 
             def have(_):
@@ -359,7 +361,8 @@ def lu_factor_spmd(a: jax.Array, *, block_size: int = 128, mesh=None,
             packed = jax.lax.cond(
                 d == owner, have,
                 lambda _: jnp.zeros((n, nb + 1), a_loc.dtype), None)
-            packed = pblas.bcast_local(packed, owner, d, axes)
+            with telem_comm.site("lu_panel_bcast", iters=its):
+                packed = pblas.bcast_local(packed, owner, d, axes)
             return (inject.tap("panel", packed[:, :nb], step=s, rank=d),
                     packed[:, nb].astype(jnp.int32))
 
@@ -427,7 +430,8 @@ def lu_factor_spmd(a: jax.Array, *, block_size: int = 128, mesh=None,
             base = (a_loc, perm_total)
             if not factor_next:
                 return base
-            packed = pblas.bcast_local(out[1], owner2, d, axes)
+            with telem_comm.site("lu_panel_bcast", iters=nblocks):
+                packed = pblas.bcast_local(out[1], owner2, d, axes)
             return base + (inject.tap("panel", packed[:, :nb],
                                       step=s + 1, rank=d),
                            packed[:, nb].astype(jnp.int32))
@@ -486,7 +490,7 @@ def lu_factor_spmd(a: jax.Array, *, block_size: int = 128, mesh=None,
                 0, nblocks, step, init + (pan1, perm1))[:2], w)
 
         def step(s, carry):
-            pan, perm = factor_bcast(carry[0], s)
+            pan, perm = factor_bcast(carry[0], s, its=nblocks)
             return consume(carry, pan, perm, s, factor_next=False)
 
         return finish(jax.lax.fori_loop(0, nblocks, step, init), w)

@@ -40,6 +40,8 @@ from jax.experimental.shard_map import shard_map
 from repro.core import dist, pblas
 from repro.core import precond as precond_mod
 from repro.resilience import inject
+from repro.telemetry import comm as telem_comm
+from repro.telemetry import convergence as telem_conv
 
 
 class LinearOperator:
@@ -250,25 +252,36 @@ class SpmdLocalOperator(LinearOperator):
         self.a_loc = a_loc
         self.row, self.col, self.q, self.p = row, col, q, p
 
+    # telem_comm.site labels attribute trace-time collective BYTES to the
+    # operator primitive that issued them (innermost label wins; pure
+    # host-side bookkeeping, zero ops in any jaxpr)
+
     def matvec(self, v):
-        return inject.tap("matvec", pblas.matvec_local(
-            self.a_loc, v, self.row, self.col, self.q))
+        with telem_comm.site("matvec"):
+            return inject.tap("matvec", pblas.matvec_local(
+                self.a_loc, v, self.row, self.col, self.q))
 
     def matvec_t(self, v):
-        return pblas.matvec_t_local(self.a_loc, v, self.row, self.col, self.p)
+        with telem_comm.site("matvec_t"):
+            return pblas.matvec_t_local(self.a_loc, v, self.row, self.col,
+                                        self.p)
 
     def dot(self, u, v):
-        return pblas.dot_local(u, v, self.row)
+        with telem_comm.site("dot"):
+            return pblas.dot_local(u, v, self.row)
 
     def dots(self, pairs):
-        return pblas.dots_local(pairs, self.row)     # ONE psum for all pairs
+        with telem_comm.site("dots_fused"):
+            return pblas.dots_local(pairs, self.row)  # ONE psum, all pairs
 
     def dotm(self, m, w):
-        return pblas.dotm_local(m, w, self.row)
+        with telem_comm.site("dotm"):
+            return pblas.dotm_local(m, w, self.row)
 
     def block_dots(self, vs):
         # ONE psum for the Gram
-        return inject.tap("gram", pblas.gram_local(vs, self.row))
+        with telem_comm.site("gram"):
+            return inject.tap("gram", pblas.gram_local(vs, self.row))
 
 
 def spmd_named_precond(precond, *, rows: int | None = None,
@@ -302,16 +315,24 @@ def spmd_named_precond(precond, *, rows: int | None = None,
 
 
 def result_leaves(res):
-    """Flatten a :class:`SolveResult` to the 6 leaves a shard_map body
+    """Flatten a :class:`SolveResult` to the leaves a shard_map body
     returns: the dict-valued ``info`` cannot cross the boundary, so the
     monitor's two scalars travel as replicated int32 outputs (zeros for
-    an unmonitored driver)."""
+    an unmonitored driver).  With an armed telemetry session the
+    convergence history's two extra leaves (the residual ring, computed
+    from already-reduced scalars, hence replicated; and iters_to_tol)
+    ride along — :func:`spmd_run` checks the same trace-time flag, so
+    body outputs and out_specs always agree."""
     info = res.info or {}
     zero = jnp.zeros((), jnp.int32)
     code = info.get("fail_code", zero)
     fail_iter = info.get("fail_iter", zero)
-    return (res.x, res.iterations, res.residual, res.converged,
+    base = (res.x, res.iterations, res.residual, res.converged,
             code, fail_iter)
+    hist = info.get("residual_history")
+    if hist is not None:
+        base += (hist, info["iters_to_tol"])
+    return base
 
 
 def spmd_run(body, mesh, row: str, in_specs: tuple, *operands):
@@ -320,15 +341,24 @@ def spmd_run(body, mesh, row: str, in_specs: tuple, *operands):
     while_loop has no replication rule on this JAX — disable the check;
     out_specs pin the (documented) replication of the scalar outputs.
     The body returns :func:`result_leaves`; the health monitor's
-    fail_code/fail_iter scalars are re-packed into ``SolveResult.info``.
+    fail_code/fail_iter scalars (and, under an armed telemetry session,
+    the convergence-history leaves) are re-packed into
+    ``SolveResult.info``.
     """
+    armed = telem_conv.armed()
+    out_specs = (P(row), P(), P(), P(), P(), P())
+    if armed:
+        out_specs += (P(), P())      # residual ring + iters_to_tol (repl.)
     f = shard_map(body, mesh=mesh, in_specs=in_specs,
-                  out_specs=(P(row), P(), P(), P(), P(), P()),
-                  check_rep=False)
+                  out_specs=out_specs, check_rep=False)
     from repro.core.krylov import SolveResult
-    x, iters, res, conv, code, fail_iter = f(*operands)
-    return SolveResult(x, iters, res, conv,
-                       {"fail_code": code, "fail_iter": fail_iter})
+    out = f(*operands)
+    x, iters, res, conv, code, fail_iter = out[:6]
+    info = {"fail_code": code, "fail_iter": fail_iter}
+    if armed:
+        info["residual_history"] = out[6]
+        info["iters_to_tol"] = out[7]
+    return SolveResult(x, iters, res, conv, info)
 
 
 def spmd_solve(method: Callable, a: jax.Array, b: jax.Array, mesh, *,

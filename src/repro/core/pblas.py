@@ -27,6 +27,7 @@ from jax.experimental.shard_map import shard_map
 
 from repro.core import dist
 from repro.resilience import inject
+from repro.telemetry import comm as _telem_comm
 
 # ``pvary`` only exists on JAX versions with varying-manual-axes tracking;
 # on older releases replication bookkeeping is implicit and it is a no-op.
@@ -43,12 +44,20 @@ _pvary = getattr(jax.lax, "pvary", None) or (lambda x, axes: x)
 #   "psum"       every psum on the wire (including those under the kinds
 #                below — the raw collective count),
 #   "all_gather" every all_gather,
+#   "ppermute"   point-to-point ring shifts,
+#   "all_to_all" full shuffles,
 #   "dots"       reduction rounds that carry inner products (dot/dots/
 #                dotm/gram — the latency-bound synchronizations a Krylov
 #                iteration pays),
 #   "bcast"      masked-psum broadcasts (panel broadcasts of the direct
 #                path).
+#
+# The tally dict is KIND-COMPLETE: every key in ``KINDS`` is present from
+# the start (zeroed), so ``c["ppermute"] == 0`` is a valid assertion even
+# when nothing permuted — tests compare whole dicts.
 # --------------------------------------------------------------------------
+
+KINDS = ("psum", "all_gather", "ppermute", "all_to_all", "dots", "bcast")
 
 _COUNTS: dict | None = None
 
@@ -64,7 +73,7 @@ def collective_counts():
     """
     global _COUNTS
     prev = _COUNTS
-    _COUNTS = {"psum": 0, "all_gather": 0, "dots": 0, "bcast": 0}
+    _COUNTS = {k: 0 for k in KINDS}
     try:
         yield _COUNTS
     finally:
@@ -81,13 +90,31 @@ def psum(x, axes):
     Also an injection site ("psum"): a corrupted all-reduce payload is
     the classic dropped-rank/transient-network fault."""
     _tally("psum")
+    _telem_comm.record("psum", x)
     return inject.tap("psum", jax.lax.psum(x, axes))
 
 
 def all_gather(x, axis, **kw):
     """Counted ``lax.all_gather`` (injection site "all_gather")."""
     _tally("all_gather")
+    _telem_comm.record("all_gather", x)
     return inject.tap("all_gather", jax.lax.all_gather(x, axis, **kw))
+
+
+def ppermute(x, axis, perm):
+    """Counted ``lax.ppermute`` — the point-to-point ring shift (halo
+    exchanges, systolic SUMMA variants)."""
+    _tally("ppermute")
+    _telem_comm.record("ppermute", x)
+    return jax.lax.ppermute(x, axis, perm)
+
+
+def all_to_all(x, axis, split_axis: int, concat_axis: int, **kw):
+    """Counted ``lax.all_to_all`` — the full shuffle (block-layout
+    transposes / redistribution)."""
+    _tally("all_to_all")
+    _telem_comm.record("all_to_all", x)
+    return jax.lax.all_to_all(x, axis, split_axis, concat_axis, **kw)
 
 
 # --------------------------------------------------------------------------

@@ -25,6 +25,7 @@ from jax.sharding import PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from repro.core import blocking, dist, pblas
+from repro.telemetry import comm as telem_comm
 
 
 def _rows(y, k, nb):
@@ -135,7 +136,9 @@ def fsub_cyclic_local(a_loc, b, *, nb: int, procs: int, d, axes,
         delta = jax.lax.dynamic_update_slice(
             delta, (yk - _rows(y, k, nb)).astype(delta.dtype), (k, 0))
         # only the owner's delta is real; one bcast-psum applies it
-        return y + pblas.bcast_local(delta, owner, d, axes).astype(y.dtype)
+        with telem_comm.site("trsv_bcast", iters=n // nb):
+            delta = pblas.bcast_local(delta, owner, d, axes)
+        return y + delta.astype(y.dtype)
 
     return jax.lax.fori_loop(0, n // nb, step, b)
 
@@ -156,7 +159,9 @@ def bsub_cyclic_local(a_loc, b, *, nb: int, procs: int, d, axes):
         delta = -(above @ xk)
         delta = jax.lax.dynamic_update_slice(
             delta, (xk - _rows(x, k, nb)).astype(delta.dtype), (k, 0))
-        return x + pblas.bcast_local(delta, owner, d, axes).astype(x.dtype)
+        with telem_comm.site("trsv_bcast", iters=n // nb):
+            delta = pblas.bcast_local(delta, owner, d, axes)
+        return x + delta.astype(x.dtype)
 
     return jax.lax.fori_loop(0, n // nb, step, b)
 
@@ -173,9 +178,11 @@ def bsub_t_cyclic_local(a_loc, b, *, nb: int, procs: int, d, axes, gcol):
         g = n // nb - 1 - s
         k = g * nb
         owner, t = g % procs, g // procs
-        lkk = pblas.bcast_local(
-            jax.lax.dynamic_slice(_colblk(a_loc, t, nb), (k, 0), (nb, nb)),
-            owner, d, axes)
+        with telem_comm.site("trsv_bcast", iters=n // nb):
+            lkk = pblas.bcast_local(
+                jax.lax.dynamic_slice(_colblk(a_loc, t, nb), (k, 0),
+                                      (nb, nb)),
+                owner, d, axes)
         xk = solve_triangular(lkk.T, _rows(x, k, nb), lower=False)
         # my partial update: x[j] -= L[kblk, j]ᵀ xk for my columns j < k
         lrow = jax.lax.dynamic_slice(a_loc, (k, 0), (nb, a_loc.shape[1]))

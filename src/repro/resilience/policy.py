@@ -28,6 +28,7 @@ import jax.numpy as jnp
 
 from repro.core import api
 from repro.resilience import abft, monitor
+from repro.telemetry import trace as _trace
 
 # method -> next method to try when it fails (classified or not
 # converged).  The defaults escalate toward numerical robustness:
@@ -127,40 +128,47 @@ def resilient_solve(a, b, *, method: str = "lu", mesh=None,
     attempts: list[dict] = []
     best = None            # (residual, SolveResult) of best finite attempt
     x_carry = x0
-    for m, be, use_carry in ladder:
+    for rung, (m, be, use_carry) in enumerate(ladder):
         e = api.get_method(m)
         extras = {k: v for k, v in method_kwargs.items() if k in e.extra}
         xm = x_carry if (use_carry and e.kind == "iterative") else None
         rec = {"method": m, "backend": be, "engine": engine}
-        try:
-            res = api.solve(
-                a, b, method=m, mesh=mesh, engine=engine, backend=be,
-                block_size=block_size, tol=tol, maxiter=maxiter,
-                restart=restart,
-                precond=precond if e.kind == "iterative" else None,
-                x0=xm, validate=False, return_info=True,
-                abft=(e.kind == "direct" and engine == "spmd"
-                      and e.name in ("lu", "cholesky")),
-                **extras)
-        except (abft.FactorCorruption, ValueError, TypeError,
-                FloatingPointError) as exc:
-            rec.update(reason=f"error: {exc}", iterations=None,
-                       residual=None, converged=False)
+        # one telemetry span per ladder rung: an armed session sees the
+        # recovery as a tree (attempt → solve → dispatch/execute), with
+        # the classified reason attached once the attempt is judged
+        with _trace.span("attempt", rung=rung, method=m, backend=be):
+            try:
+                res = api.solve(
+                    a, b, method=m, mesh=mesh, engine=engine, backend=be,
+                    block_size=block_size, tol=tol, maxiter=maxiter,
+                    restart=restart,
+                    precond=precond if e.kind == "iterative" else None,
+                    x0=xm, validate=False, return_info=True,
+                    abft=(e.kind == "direct" and engine == "spmd"
+                          and e.name in ("lu", "cholesky")),
+                    **extras)
+            except (abft.FactorCorruption, ValueError, TypeError,
+                    FloatingPointError) as exc:
+                rec.update(reason=f"error: {exc}", iterations=None,
+                           residual=None, converged=False)
+                _trace.annotate(reason=rec["reason"])
+                attempts.append(rec)
+                continue
+            reason = _reason(res)
+            r_true = _true_residual(a, b, res.x) if _finite(res.x) \
+                else float("inf")
+            if reason == "ok" and not r_true <= 10 * tol:
+                # driver claims success but the independent audit
+                # disagrees (a corrupted convergence test — see
+                # _true_residual)
+                reason = "residual_audit_failed"
+            _trace.annotate(reason=reason)
+            rec.update(reason=reason,
+                       iterations=int(jnp.max(res.iterations)),
+                       residual=float(jnp.max(res.residual)),
+                       residual_true=r_true,
+                       converged=bool(jnp.all(res.converged)))
             attempts.append(rec)
-            continue
-        reason = _reason(res)
-        r_true = _true_residual(a, b, res.x) if _finite(res.x) \
-            else float("inf")
-        if reason == "ok" and not r_true <= 10 * tol:
-            # driver claims success but the independent audit disagrees
-            # (a corrupted convergence test — see _true_residual)
-            reason = "residual_audit_failed"
-        rec.update(reason=reason,
-                   iterations=int(jnp.max(res.iterations)),
-                   residual=float(jnp.max(res.residual)),
-                   residual_true=r_true,
-                   converged=bool(jnp.all(res.converged)))
-        attempts.append(rec)
         if jnp.isfinite(jnp.asarray(r_true)) \
                 and (best is None or r_true < best[0]):
             best = (r_true, res)

@@ -1,0 +1,21 @@
+"""Unified observability: spans (:mod:`.trace`), in-graph convergence
+histories (:mod:`.convergence`), per-site communication bytes
+(:mod:`.comm`), and a metrics registry with JSON/Prometheus export
+(:mod:`.metrics`).  One entry point::
+
+    from repro import telemetry
+    with telemetry.session("profile") as sess:
+        x = api.solve(a, b, method="cg", mesh=mesh, engine="spmd")
+    sess.save("TELEM_profile.json")            # repro.telemetry.report
+    sess.save_chrome_trace("trace.json")       # ui.perfetto.dev
+
+Everything follows the zero-overhead-when-disarmed contract of
+``resilience/inject.py``: with no session armed, no jaxpr changes by a
+single op and the host-side cost is one module-global check per tap.
+"""
+from repro.telemetry import comm, convergence, metrics, trace
+from repro.telemetry.trace import (Session, active, annotate, block,
+                                   disabled, session, span)
+
+__all__ = ["comm", "convergence", "metrics", "trace", "Session", "session",
+           "span", "annotate", "active", "disabled", "block"]

@@ -1,0 +1,116 @@
+"""Communication-volume profiles: trace-time bytes per collective per site.
+
+`pblas.collective_counts` answers "how many reductions per iteration";
+this module answers "how many BYTES per reduction, and from where" — the
+number the ROADMAP's panel-broadcast payload work needs.  Attribution is
+at TRACE time, like the tally: every solver loop is a fixed-shape
+``fori_loop``/``while_loop`` whose body traces exactly once, so each
+recorded payload is a per-loop-iteration volume.  Sites opened with a
+static ``iters=`` multiplier (``fori_loop`` trip counts are static)
+report an honest whole-loop total; ``while_loop`` sites keep ``iters=1``
+and report per-iteration bytes.
+
+Zero overhead when disarmed (the same contract as ``inject.tap`` /
+``pblas.collective_counts``): :func:`record` is a Python-level early
+return, and :func:`site` pushes onto a plain host list — neither emits a
+single op into any jaxpr.
+
+    with comm.capture() as prof:
+        api.solve(a, b, method="lu", mesh=mesh, engine="spmd")
+    for row in prof.table():
+        print(row["site"], row["total_bytes"])
+"""
+from __future__ import annotations
+
+import contextlib
+
+import numpy as np
+
+_PROFILE: "CommProfile | None" = None
+_SITE_STACK: list[tuple[str, int]] = []
+
+
+class CommProfile:
+    """Accumulated per-(site, kind) payload volumes.
+
+    ``calls``         trace-time collective calls at the site,
+    ``payload_bytes`` sum of per-call local payloads (shape × itemsize),
+    ``total_bytes``   payloads × the site's static ``iters`` multiplier —
+                      the whole-loop volume for ``fori_loop`` sites.
+    """
+
+    def __init__(self):
+        self.entries: dict[tuple[str, str], dict] = {}
+
+    def record(self, kind: str, nbytes: int, site: str, iters: int) -> None:
+        e = self.entries.setdefault((site, kind), {
+            "site": site, "kind": kind, "calls": 0,
+            "payload_bytes": 0, "total_bytes": 0, "iters": iters})
+        e["calls"] += 1
+        e["payload_bytes"] += nbytes
+        e["total_bytes"] += nbytes * iters
+        e["iters"] = max(e["iters"], iters)
+
+    def table(self) -> list[dict]:
+        """Rows sorted by descending total volume."""
+        return sorted((dict(e) for e in self.entries.values()),
+                      key=lambda e: -e["total_bytes"])
+
+    def total_bytes(self) -> int:
+        return sum(e["total_bytes"] for e in self.entries.values())
+
+
+@contextlib.contextmanager
+def capture():
+    """Arm byte attribution; yields the live :class:`CommProfile`."""
+    global _PROFILE
+    prev = _PROFILE
+    _PROFILE = CommProfile()
+    try:
+        yield _PROFILE
+    finally:
+        _PROFILE = prev
+
+
+def active() -> CommProfile | None:
+    return _PROFILE
+
+
+@contextlib.contextmanager
+def site(label: str, iters: int = 1):
+    """Label the collectives issued (at trace time) inside the block.
+    ``iters`` is a static whole-loop multiplier for ``fori_loop`` bodies
+    (the body traces once; the wire pays ``iters`` times).  Nesting:
+    the INNERMOST label wins — more specific attribution."""
+    _SITE_STACK.append((label, int(iters)))
+    try:
+        yield
+    finally:
+        _SITE_STACK.pop()
+
+
+def record(kind: str, x) -> None:
+    """Attribute the local payload of one collective (called by the
+    counted ``pblas`` wrappers).  Disarmed: one ``is None`` check."""
+    if _PROFILE is None:
+        return
+    try:
+        shape = getattr(x, "shape", ())
+        itemsize = np.dtype(getattr(x, "dtype", np.float64)).itemsize
+        nbytes = int(np.prod(shape)) * itemsize
+    except TypeError:
+        nbytes = 0
+    label, iters = _SITE_STACK[-1] if _SITE_STACK else (kind, 1)
+    _PROFILE.record(kind, nbytes, label, iters)
+
+
+def format_bytes(n: float) -> str:
+    for unit in ("B", "KiB", "MiB", "GiB"):
+        if abs(n) < 1024 or unit == "GiB":
+            return f"{n:.1f} {unit}" if unit != "B" else f"{int(n)} B"
+        n /= 1024
+    return f"{n:.1f} GiB"
+
+
+__all__ = ["CommProfile", "capture", "active", "site", "record",
+           "format_bytes"]

@@ -1,0 +1,106 @@
+"""In-graph convergence histories: a fixed-shape residual ring buffer
+carried in the Krylov loop state — the same carry pattern as the
+:mod:`repro.resilience.monitor` health record.
+
+Armed (inside :func:`capture` / ``telemetry.session()``), every driver in
+:mod:`repro.core.krylov` threads a :class:`History` through its
+``while_loop`` carry and the result's ``info`` gains
+
+* ``residual_history`` — (histlen,) ring of residual norms, NaN where no
+  iteration wrote (index k mod histlen holds iteration k's residual),
+* ``iters_to_tol``     — first iteration whose residual met tol
+  (int32; −1 = never converged) — exact even after the ring wraps.
+
+Disarmed, :func:`init` returns ``None``; ``None`` is a zero-leaf pytree
+node, so carrying it changes NOTHING in the traced loop — the jaxprs are
+bitwise identical to a build with no telemetry (spy-tested in
+tests/test_telemetry.py).  Drivers guard every :func:`record` call with
+``if ch is not None`` so no argument expression is even traced.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+_CFG: int | None = None   # histlen when armed
+
+
+def armed() -> bool:
+    return _CFG is not None
+
+
+def histlen() -> int | None:
+    return _CFG
+
+
+@contextlib.contextmanager
+def capture(histlen: int = 64):
+    """Arm convergence-history capture for solves traced inside the
+    block (standalone form; ``telemetry.session()`` enters it for you)."""
+    global _CFG
+    if histlen < 1:
+        raise ValueError(f"histlen must be >= 1, got {histlen}")
+    prev = _CFG
+    _CFG = int(histlen)
+    try:
+        yield
+    finally:
+        _CFG = prev
+
+
+class History(NamedTuple):
+    buf: jax.Array    # (histlen, ...) residual-norm ring, NaN = unwritten
+    hit: jax.Array    # first iteration meeting tol, -1 until then (int32)
+    atol: jax.Array   # the driver's absolute tolerance (tol * ||b||)
+
+
+def _norm(metric, sq: bool):
+    metric = jnp.asarray(metric)
+    return jnp.sqrt(jnp.maximum(metric, 0)) if sq else metric
+
+
+def init(metric0, atol, *, sq: bool = False) -> History | None:
+    """History seeded with the iteration-0 residual.  ``sq=True`` means
+    the driver's carried metric is a SQUARED norm (the CG family's
+    ⟨r,r⟩); the history always stores norm-scale values.  Disarmed:
+    returns ``None`` before touching any argument."""
+    if _CFG is None:
+        return None
+    res0 = _norm(metric0, sq)
+    atol = jnp.asarray(atol)
+    buf = jnp.full((_CFG,) + res0.shape, jnp.nan, res0.dtype).at[0].set(res0)
+    hit = jnp.where(res0 <= atol, 0, -1).astype(jnp.int32)
+    return History(buf, hit, atol)
+
+
+def record(hist: History | None, metric, k, *, bump: int = 1,
+           sq: bool = False) -> History | None:
+    """Record iteration ``k + bump``'s residual (``bump=1`` matches the
+    usual body convention where ``k`` is the pre-increment counter).
+    Call sites MUST guard with ``if hist is not None`` — that guard is
+    what keeps the disarmed jaxpr free of the argument expressions."""
+    if hist is None:
+        return None
+    kk = k + bump if bump else k
+    res = _norm(metric, sq)
+    n = hist.buf.shape[0]
+    buf = hist.buf.at[kk % n].set(res)
+    hit = jnp.where((hist.hit < 0) & (res <= hist.atol),
+                    jnp.asarray(kk, jnp.int32), hist.hit)
+    return History(buf, hit, hist.atol)
+
+
+def info(hist: History | None) -> dict:
+    """The info-dict fragment drivers merge into ``SolveResult.info``
+    (empty when disarmed, so the armed/disarmed info pytrees only differ
+    by the two history leaves)."""
+    if hist is None:
+        return {}
+    return {"residual_history": hist.buf, "iters_to_tol": hist.hit}
+
+
+__all__ = ["History", "armed", "histlen", "capture", "init", "record",
+           "info"]

@@ -1,0 +1,124 @@
+"""Process-wide counter/gauge/histogram registry with JSON and
+Prometheus-text exporters — the latency/throughput substrate the
+ROADMAP's solver-as-a-service item is gated on (p50/p99, requests/sec).
+
+Plain host-side Python: nothing here ever touches a jaxpr, so the
+registry is always-on and free until observed.  Benchmarks snapshot it
+into ``TELEM_*.json``; a service front-end would scrape
+:func:`export_prometheus`.
+"""
+from __future__ import annotations
+
+import bisect
+import json
+import math
+
+_COUNTERS: dict[str, float] = {}
+_GAUGES: dict[str, float] = {}
+_HISTOGRAMS: dict[str, "Histogram"] = {}
+
+# decade ladder 0.1ms .. 100s — wide enough for both a fused-kernel
+# dispatch and a cold n=4096 distributed factorization compile
+DEFAULT_BUCKETS = (0.1, 0.5, 1.0, 5.0, 10.0, 50.0, 100.0, 500.0,
+                   1000.0, 5000.0, 10000.0, 100000.0)
+
+
+class Histogram:
+    """Fixed-bucket cumulative histogram (Prometheus semantics) that also
+    keeps an exact sample list for small n — enough for honest p50/p99
+    until a service needs streaming quantiles."""
+
+    def __init__(self, buckets=DEFAULT_BUCKETS, keep_samples: int = 4096):
+        self.buckets = tuple(sorted(buckets))
+        self.counts = [0] * (len(self.buckets) + 1)   # +inf tail
+        self.sum = 0.0
+        self.n = 0
+        self._samples: list[float] = []
+        self._keep = keep_samples
+
+    def observe(self, value: float) -> None:
+        value = float(value)
+        self.counts[bisect.bisect_left(self.buckets, value)] += 1
+        self.sum += value
+        self.n += 1
+        if len(self._samples) < self._keep:
+            self._samples.append(value)
+
+    def quantile(self, q: float) -> float:
+        if not self._samples:
+            return math.nan
+        s = sorted(self._samples)
+        idx = min(len(s) - 1, max(0, int(round(q * (len(s) - 1)))))
+        return s[idx]
+
+    def to_dict(self) -> dict:
+        return {"count": self.n, "sum": self.sum,
+                "buckets": {str(b): c for b, c in
+                            zip(self.buckets + (math.inf,), self.counts)},
+                "p50": self.quantile(0.5), "p99": self.quantile(0.99)}
+
+
+def counter_inc(name: str, amount: float = 1.0) -> None:
+    _COUNTERS[name] = _COUNTERS.get(name, 0.0) + amount
+
+
+def gauge_set(name: str, value: float) -> None:
+    _GAUGES[name] = float(value)
+
+
+def histogram_observe(name: str, value: float,
+                      buckets=DEFAULT_BUCKETS) -> None:
+    h = _HISTOGRAMS.get(name)
+    if h is None:
+        h = _HISTOGRAMS[name] = Histogram(buckets)
+    h.observe(value)
+
+
+def get_counter(name: str) -> float:
+    return _COUNTERS.get(name, 0.0)
+
+
+def reset() -> None:
+    _COUNTERS.clear()
+    _GAUGES.clear()
+    _HISTOGRAMS.clear()
+
+
+def export_json() -> dict:
+    return {"counters": dict(_COUNTERS), "gauges": dict(_GAUGES),
+            "histograms": {k: h.to_dict() for k, h in _HISTOGRAMS.items()}}
+
+
+def export_prometheus() -> str:
+    """Prometheus text exposition format (0.0.4)."""
+    lines: list[str] = []
+
+    def sanitize(name: str) -> str:
+        return "".join(c if c.isalnum() or c == "_" else "_" for c in name)
+
+    for name, v in sorted(_COUNTERS.items()):
+        n = sanitize(name)
+        lines += [f"# TYPE {n} counter", f"{n} {v}"]
+    for name, v in sorted(_GAUGES.items()):
+        n = sanitize(name)
+        lines += [f"# TYPE {n} gauge", f"{n} {v}"]
+    for name, h in sorted(_HISTOGRAMS.items()):
+        n = sanitize(name)
+        lines.append(f"# TYPE {n} histogram")
+        cum = 0
+        for b, c in zip(h.buckets + (math.inf,), h.counts):
+            cum += c
+            le = "+Inf" if math.isinf(b) else repr(b)
+            lines.append(f'{n}_bucket{{le="{le}"}} {cum}')
+        lines += [f"{n}_sum {h.sum}", f"{n}_count {h.n}"]
+    return "\n".join(lines) + "\n"
+
+
+def save_json(path: str) -> None:
+    with open(path, "w") as f:
+        json.dump(export_json(), f, indent=1, sort_keys=True)
+
+
+__all__ = ["Histogram", "counter_inc", "gauge_set", "histogram_observe",
+           "get_counter", "reset", "export_json", "export_prometheus",
+           "save_json", "DEFAULT_BUCKETS"]

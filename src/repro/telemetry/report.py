@@ -1,0 +1,105 @@
+"""Render a recorded telemetry session as a solve profile.
+
+    python -m repro.telemetry.report TELEM_direct.json [more.json ...]
+
+Prints, per session: the span table (count / total / compile ms), the
+per-site communication-volume table (per rank, trace-time bytes — the
+distributed-LU panel broadcast is the top row at scale), and the
+convergence summary of every recorded solve (iterations, iters_to_tol,
+final residual).  Reads the JSON written by
+:meth:`repro.telemetry.trace.Session.save` (what ``benchmarks/run.py
+--json-dir`` emits next to each ``BENCH_*.json``).
+"""
+from __future__ import annotations
+
+import json
+import math
+import sys
+
+from repro.telemetry.comm import format_bytes
+
+
+def _fmt(v, width: int = 10) -> str:
+    if isinstance(v, float):
+        return f"{v:{width}.2f}" if math.isfinite(v) else f"{'nan':>{width}}"
+    return f"{str(v):>{width}}"
+
+
+def render(data: dict) -> str:
+    """Session dict (``Session.to_dict()`` / a loaded TELEM json) → text."""
+    out: list[str] = []
+    name = data.get("section") or data.get("name") or "session"
+    total = data.get("t_total_ms", 0.0)
+    out.append(f"== telemetry session {name!r}  ({total:.1f} ms total) ==")
+
+    spans = data.get("spans") or []
+    if spans:
+        out.append("")
+        out.append("-- spans --")
+        w = max([len(r["span"]) for r in spans] + [4])
+        out.append(f"{'span':<{w}}  {'count':>5}  {'total_ms':>10}  "
+                   f"{'compile_ms':>10}")
+        for r in spans:
+            out.append(f"{r['span']:<{w}}  {r['count']:>5}  "
+                       f"{_fmt(float(r['total_ms']))}  "
+                       f"{_fmt(float(r.get('compile_ms', 0.0)))}")
+
+    comm = data.get("comm") or []
+    if comm:
+        out.append("")
+        out.append("-- communication volume (per rank, trace-time) --")
+        w = max([len(r["site"]) for r in comm] + [4])
+        out.append(f"{'site':<{w}}  {'kind':>10}  {'calls':>5}  "
+                   f"{'payload':>10}  {'x iters':>7}  {'total':>10}")
+        for r in comm:
+            out.append(f"{r['site']:<{w}}  {r['kind']:>10}  "
+                       f"{r['calls']:>5}  "
+                       f"{format_bytes(r['payload_bytes']):>10}  "
+                       f"{r.get('iters', 1):>7}  "
+                       f"{format_bytes(r['total_bytes']):>10}")
+
+    solves = data.get("solves") or []
+    if solves:
+        out.append("")
+        out.append("-- solves (convergence) --")
+        out.append(f"{'method':>12} {'engine':>6} {'backend':>7} {'n':>6} "
+                   f"{'dtype':>8} {'iters':>6} {'iters_to_tol':>12} "
+                   f"{'residual':>10} {'conv':>5}")
+        for r in solves:
+            res = r.get("residual")
+            res_s = f"{res:10.2e}" if isinstance(res, float) else f"{res!s:>10}"
+            out.append(
+                f"{r.get('method', '?'):>12} {r.get('engine', '?'):>6} "
+                f"{r.get('backend', '?'):>7} {r.get('n', '?'):>6} "
+                f"{r.get('dtype', '?'):>8} {r.get('iterations', '?'):>6} "
+                f"{r.get('iters_to_tol', '?'):>12} {res_s} "
+                f"{str(r.get('converged', '?')):>5}")
+
+    hists = data.get("metrics", {}).get("histograms", {})
+    if hists:
+        out.append("")
+        out.append("-- latency histograms (ms) --")
+        for k in sorted(hists):
+            h = hists[k]
+            out.append(f"{k}: n={h['count']} sum={h['sum']:.1f} "
+                       f"p50={h.get('p50', float('nan')):.2f} "
+                       f"p99={h.get('p99', float('nan')):.2f}")
+    return "\n".join(out)
+
+
+def main(argv=None) -> int:
+    argv = sys.argv[1:] if argv is None else list(argv)
+    if not argv or argv[0] in ("-h", "--help"):
+        print(__doc__)
+        return 0 if argv else 2
+    for i, path in enumerate(argv):
+        with open(path) as f:
+            data = json.load(f)
+        if i:
+            print()
+        print(render(data))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -44,3 +44,26 @@ def test_gspmd_engine(mesh1, rng):
     x = rng.standard_normal(32).astype(np.float32)
     y = pblas.pmatvec_gspmd(jnp.asarray(a), jnp.asarray(x), mesh1)
     np.testing.assert_allclose(np.asarray(y), a @ x, rtol=1e-5, atol=1e-4)
+
+
+def test_collective_counts_kind_complete(mesh1):
+    """The tally dict is kind-complete (every wrapper pre-seeded at 0)
+    and the ppermute/all_to_all wrappers both tally and compute."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+    import jax
+
+    x = jnp.arange(8, dtype=jnp.float32)
+
+    def body(xl):
+        y = pblas.ppermute(xl, "data", [(0, 0)])
+        z = pblas.all_to_all(y[None, :], "model", 0, 0)
+        return z[0]
+
+    with pblas.collective_counts() as c:
+        out = jax.jit(shard_map(
+            body, mesh=mesh1, in_specs=P("data"), out_specs=P("data"),
+            check_rep=False))(x)
+    assert set(c) == set(pblas.KINDS)
+    assert c["ppermute"] == 1 and c["all_to_all"] == 1
+    np.testing.assert_allclose(np.asarray(out), np.arange(8), rtol=1e-6)
