@@ -216,7 +216,7 @@ print("RESULT " + json.dumps(
 
 
 def run_resilience(n=1024, nb=64):
-    """ABFT checksum overhead (docs/solvers.md "Resilience").
+    """ABFT checksum overhead (docs/resilience.md).
 
     Times the carried-checksum factorization (``abft=True``) against the
     unchecked one — same mesh, same schedule; the checksum update is

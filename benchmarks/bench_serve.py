@@ -1,0 +1,189 @@
+"""Serving benchmark (PR 9): requests/sec and p50/p99 latency through
+the async batched solve server.
+
+Rows emitted (section ``serve``):
+
+* ``mixed_cold_p50_ms`` — per-request latency of the FIRST wave of a
+  mixed-size stream (every group compiles: trace + XLA wall time),
+* ``mixed_warm_p50_ms`` — steady-state waves through the now-warm
+  executable cache.  The cold/warm p50 ratio is **asserted >= 5x** (the
+  PR's acceptance bar; in practice it is orders of magnitude),
+* ``prefill_p50_ms`` — a fresh server whose cache was prefilled with
+  ``ExecutableCache.warm(keys)`` *before* any traffic: first-wave p50
+  without the compile wall,
+* ``repeated_a_rps`` — a stream of repeated matrices with fresh right-
+  hand sides; refactorization count is asserted (via the telemetry
+  counters) to equal the number of *distinct* matrices,
+* ``cg_rps`` — batched-iterative lane throughput.
+
+Latency is measured client-side (submit to done-callback), so queueing
+and micro-batch deadlines are inside the number — this is what a caller
+experiences, not device time.
+
+Standalone:  PYTHONPATH=src python -m benchmarks.bench_serve [--quick]
+(also the ``serve`` section of ``benchmarks.run``).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.serve import ExecutableCache, ServeClient, bucket, make_key
+from repro.telemetry import metrics
+
+
+def _mixed_systems(sizes, count, dtype=np.float32, seed=0):
+    """``count`` systems cycling through ``sizes`` — distinct matrices."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for i in range(count):
+        n = sizes[i % len(sizes)]
+        a = (rng.standard_normal((n, n)) + n * np.eye(n)).astype(dtype)
+        out.append((a, rng.standard_normal(n).astype(dtype)))
+    return out
+
+
+def _stream(client, systems, **kw):
+    """Submit everything, gather, return (sorted latencies ms, wall s).
+    Latency is per-request submit -> result (done-callback) time."""
+    lats: list[float] = []
+    futs = []
+    t0 = time.perf_counter()
+    for a, b in systems:
+        ts = time.perf_counter()
+        f = client.submit(a, b, **kw)
+        f.add_done_callback(
+            lambda f, ts=ts: lats.append((time.perf_counter() - ts) * 1e3))
+        futs.append(f)
+    for f in futs:
+        f.result()
+    wall = time.perf_counter() - t0
+    return np.sort(np.asarray(lats)), wall
+
+
+def _pct(lats, q):
+    return float(np.percentile(lats, q))
+
+
+def run(sizes=(40, 60, 100, 150), wave=24, warm_waves=4, repeats=4,
+        distinct=4, max_batch=8, max_delay_ms=2.0):
+    # ---- mixed-size stream: cold wave, then warm waves -------------------
+    cache = ExecutableCache()
+    with ServeClient(cache=cache, max_batch=max_batch,
+                     max_delay_ms=max_delay_ms) as client:
+        cold, cold_wall = _stream(
+            client, _mixed_systems(sizes, wave, seed=0), method="lu")
+        _stream(client,                         # settling wave: fills every
+                _mixed_systems(sizes, wave, seed=1),   # batch-rung variant
+                method="lu")
+        warm_l, warm_w = [], 0.0
+        for w in range(warm_waves):
+            l, s = _stream(client, _mixed_systems(sizes, wave, seed=2 + w),
+                           method="lu")
+            warm_l.append(l)
+            warm_w += s
+        warm = np.sort(np.concatenate(warm_l))
+        n_warm = len(warm)
+    emit("serve", f"mixed_cold_p50_ms_b{max_batch}",
+         round(_pct(cold, 50), 2), "ms",
+         f"p99={_pct(cold, 99):.1f} n={len(cold)} wall={cold_wall:.2f}s "
+         f"sizes={list(sizes)}")
+    ratio = _pct(cold, 50) / max(_pct(warm, 50), 1e-9)
+    emit("serve", f"mixed_warm_p50_ms_b{max_batch}",
+         round(_pct(warm, 50), 2), "ms",
+         f"p99={_pct(warm, 99):.1f} n={n_warm} cold/warm={ratio:.0f}x")
+    emit("serve", f"mixed_warm_rps_b{max_batch}",
+         round(n_warm / warm_w, 1), "req/s",
+         f"max_delay_ms={max_delay_ms}")
+    if ratio < 5.0:
+        raise RuntimeError(
+            f"warm-cache p50 must beat cold-compile p50 by >= 5x; got "
+            f"{ratio:.1f}x (cold={_pct(cold, 50):.1f}ms, "
+            f"warm={_pct(warm, 50):.1f}ms)")
+
+    # ---- explicit warm(keys) prefill: no cold wave at all ----------------
+    pre_cache = ExecutableCache()
+    rungs = sorted({bucket.bucket_for(n) for n in sizes})
+    nb = bucket.batch_rung(max(1, wave // len(sizes)), max_batch)
+    keys = []
+    for rung in rungs:
+        for bsz in {1, nb}:
+            keys += [make_key("lu", rung, "float32", batch=bsz,
+                              mode=m, block_size=128, maxiter=1000,
+                              restart=32, tol=1e-6)
+                     for m in ("factor", "apply")]
+        keys.append(make_key("lu", rung, "float32", batch=None,
+                             mode="apply", block_size=128, maxiter=1000,
+                             restart=32, tol=1e-6))
+    t0 = time.perf_counter()
+    pre_cache.warm(keys)
+    t_warmup = time.perf_counter() - t0
+    with ServeClient(cache=pre_cache, max_batch=max_batch,
+                     max_delay_ms=max_delay_ms) as client:
+        first, _ = _stream(client, _mixed_systems(sizes, wave, seed=99),
+                           method="lu")
+    emit("serve", "prefill_p50_ms", round(_pct(first, 50), 2), "ms",
+         f"p99={_pct(first, 99):.1f} first wave after warm({len(keys)} "
+         f"keys, {t_warmup:.1f}s) — no cold wave")
+
+    # ---- repeated-A: factor once per distinct matrix ---------------------
+    rng = np.random.default_rng(42)
+    n = sizes[0]
+    mats = [(rng.standard_normal((n, n)) + n * np.eye(n)).astype(np.float32)
+            for _ in range(distinct)]
+    f0 = metrics.get_counter("serve_factorizations")
+    r0 = metrics.get_counter("serve_factor_reuse")
+    with ServeClient(cache=cache, max_batch=max_batch,
+                     max_delay_ms=max_delay_ms) as client:
+        t0 = time.perf_counter()
+        for a in mats:                      # sequential: the reuse pattern
+            for _ in range(repeats):
+                client.solve(a, rng.standard_normal(n).astype(np.float32),
+                             method="lu")
+        wall = time.perf_counter() - t0
+    refactors = metrics.get_counter("serve_factorizations") - f0
+    reuses = metrics.get_counter("serve_factor_reuse") - r0
+    total = distinct * repeats
+    if refactors != distinct:               # telemetry-asserted acceptance
+        raise RuntimeError(
+            f"repeated-A stream must refactorize once per distinct "
+            f"matrix: {distinct} distinct, {refactors} factorizations "
+            f"({reuses} reuses)")
+    emit("serve", f"repeated_a_rps_n{n}", round(total / wall, 1), "req/s",
+         f"distinct={distinct} requests={total} refactor={int(refactors)} "
+         f"reuse={int(reuses)}")
+
+    # ---- batched iterative lane ------------------------------------------
+    rng = np.random.default_rng(7)
+    n_cg = sizes[0]
+    spd = []
+    for i in range(wave):
+        m = rng.standard_normal((n_cg, n_cg)).astype(np.float32)
+        spd.append((m @ m.T / n_cg + 4 * np.eye(n_cg, dtype=np.float32),
+                    rng.standard_normal(n_cg).astype(np.float32)))
+    with ServeClient(cache=cache, max_batch=max_batch,
+                     max_delay_ms=max_delay_ms) as client:
+        _stream(client, spd[: max_batch], method="cg", tol=1e-6)  # compile
+        lats, wall = _stream(client, spd, method="cg", tol=1e-6)
+    emit("serve", f"cg_rps_n{n_cg}", round(len(spd) / wall, 1), "req/s",
+         f"p50={_pct(lats, 50):.1f}ms p99={_pct(lats, 99):.1f}ms "
+         f"batched vmap lane")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small sizes / fewer waves for CI")
+    args = ap.parse_args(argv)
+    if args.quick:
+        run(sizes=(40, 60), wave=8, warm_waves=2, repeats=3, distinct=3,
+            max_batch=4)
+    else:
+        run()
+
+
+if __name__ == "__main__":
+    main()

@@ -14,6 +14,8 @@ Sections:
   scaling      — Figs. 3/4: speedup vs node count (modeled v5e + emulated)
   local_accel  — §4 CUDA↔ATLAS ablation (Pallas↔jnp correctness + model)
   train        — LM-stack step throughput + modeled full-scale cells
+  serve        — solve server requests/sec + p50/p99 (cold vs warm cache,
+                 repeated-A factor reuse)
 
 ``--json-dir`` writes one ``BENCH_<section>.json`` per section (the CI
 smoke artifacts; ``benchmarks.check_regression`` gates them against the
@@ -45,7 +47,8 @@ def main(argv=None):
         os.path.dirname(__file__), "..", "experiments", "bench.csv"))
     args = ap.parse_args(argv)
     known = {"solvers", "solvers_spmd", "direct", "direct_spmd", "eigls",
-             "eigls_spmd", "sparse", "local_accel", "train", "scaling"}
+             "eigls_spmd", "sparse", "local_accel", "train", "scaling",
+             "serve"}
     enabled = None
     if args.sections:
         enabled = {s.strip() for s in args.sections.split(",") if s.strip()}
@@ -55,8 +58,8 @@ def main(argv=None):
                              f"known: {sorted(known)}")
 
     from benchmarks import (bench_direct, bench_eigls, bench_local_accel,
-                            bench_scaling, bench_solvers, bench_sparse,
-                            bench_train)
+                            bench_scaling, bench_serve, bench_solvers,
+                            bench_sparse, bench_train)
     from benchmarks.common import ROWS
 
     failures = []
@@ -117,6 +120,11 @@ def main(argv=None):
             nb=32 if args.quick else 64)
     section("local_accel", bench_local_accel.run)
     section("train", bench_train.run)
+    if args.quick:
+        section("serve", bench_serve.run, sizes=(40, 60), wave=8,
+                warm_waves=2, repeats=3, distinct=3, max_batch=4)
+    else:
+        section("serve", bench_serve.run)
     if not args.quick:
         section("scaling", bench_scaling.run, n=2048,
                 device_counts=(1, 2, 4, 8, 16))

@@ -1,0 +1,114 @@
+#!/usr/bin/env python
+"""Markdown link checker for the docs tree — stdlib only, CI-friendly.
+
+    python docs/check_links.py README.md docs
+
+Verifies every relative ``[text](target)`` link in the given markdown
+files (or directories of them):
+
+* the target path exists (relative to the linking file),
+* ``#anchor`` fragments resolve to a heading in the target file, using
+  GitHub's slug rules (lowercase, punctuation stripped, spaces to
+  hyphens, ``-1``/``-2`` suffixes for duplicates).
+
+External (``http://``, ``https://``, ``mailto:``) links are skipped —
+CI must not depend on the network.  Fenced code blocks are ignored, so
+``[i](j)``-shaped array indexing in examples never false-positives.
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+LINK_RE = re.compile(r"\[[^\]^\[]*\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^(#{1,6})\s+(.*)$")
+FENCE_RE = re.compile(r"^(```|~~~)")
+
+
+def strip_fences(text: str) -> list[str]:
+    out, in_fence = [], False
+    for line in text.splitlines():
+        if FENCE_RE.match(line.strip()):
+            in_fence = not in_fence
+            out.append("")
+            continue
+        out.append("" if in_fence else line)
+    return out
+
+
+def slugify(heading: str) -> str:
+    h = heading.strip().lower().replace("`", "")
+    kept = [c for c in h if c.isalnum() or c in "-_ "]
+    return "".join(kept).replace(" ", "-")
+
+
+def anchors_of(path: str) -> set[str]:
+    with open(path, encoding="utf-8") as f:
+        lines = strip_fences(f.read())
+    seen: dict[str, int] = {}
+    anchors: set[str] = set()
+    for line in lines:
+        m = HEADING_RE.match(line)
+        if not m:
+            continue
+        slug = slugify(m.group(2))
+        n = seen.get(slug, 0)
+        seen[slug] = n + 1
+        anchors.add(slug if n == 0 else f"{slug}-{n}")
+    return anchors
+
+
+def check_file(path: str) -> list[str]:
+    errors = []
+    with open(path, encoding="utf-8") as f:
+        lines = strip_fences(f.read())
+    base = os.path.dirname(os.path.abspath(path))
+    for lineno, line in enumerate(lines, 1):
+        for target in LINK_RE.findall(line):
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            frag = None
+            if "#" in target:
+                target, frag = target.split("#", 1)
+            dest = os.path.abspath(path) if not target \
+                else os.path.normpath(os.path.join(base, target))
+            if not os.path.exists(dest):
+                errors.append(f"{path}:{lineno}: broken link -> {target}")
+                continue
+            if frag:
+                if not dest.endswith(".md"):
+                    errors.append(f"{path}:{lineno}: anchor on non-markdown "
+                                  f"target -> {target}#{frag}")
+                elif frag not in anchors_of(dest):
+                    errors.append(f"{path}:{lineno}: missing anchor "
+                                  f"#{frag} in {target or os.path.basename(path)}")
+    return errors
+
+
+def collect(args: list[str]) -> list[str]:
+    files = []
+    for a in args:
+        if os.path.isdir(a):
+            files += sorted(os.path.join(a, f) for f in os.listdir(a)
+                            if f.endswith(".md"))
+        else:
+            files.append(a)
+    return files
+
+
+def main(argv=None) -> int:
+    args = (argv if argv is not None else sys.argv[1:]) or ["docs"]
+    files = collect(args)
+    errors = []
+    for f in files:
+        errors += check_file(f)
+    for e in errors:
+        print(e, file=sys.stderr)
+    print(f"checked {len(files)} files: "
+          f"{'FAIL (' + str(len(errors)) + ' broken)' if errors else 'OK'}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

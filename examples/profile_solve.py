@@ -1,5 +1,5 @@
 """Observability quickstart: profile solves across engines and export
-the traces (docs/solvers.md §Observability).
+the traces (docs/observability.md).
 
 One armed ``telemetry.session()`` around a handful of solves — cg,
 ca_cg, and a distributed LU on 8 virtual devices — then every export

@@ -1,7 +1,7 @@
 """Resilience walkthrough: inject faults, detect them, recover.
 
 The four mechanisms of the robustness PR, end to end
-(docs/solvers.md "Resilience"):
+(docs/resilience.md):
 
 * ``inject.inject(...)`` arms a deterministic fault at a named site
   inside the solver body — here a NaN in every matvec and a silent

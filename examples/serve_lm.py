@@ -1,5 +1,8 @@
-"""Serving example: prefill a batch of prompts, then decode with the KV
-cache — the ``serve_step`` path the decode_* dry-run shapes lower.
+"""LM serving example: prefill a batch of prompts, then decode with the
+KV cache — the ``serve_step`` path the decode_* dry-run shapes lower.
+
+For serving linear *solves* (the async micro-batching solve server with
+its warm executable cache), see docs/serving.md and ``repro.serve``.
 
     PYTHONPATH=src python examples/serve_lm.py
 """

@@ -457,7 +457,7 @@ def solve(a: jax.Array, b: jax.Array, *, method: str = "lu",
 
     ``return_info=True`` results always carry the uniform info schema
     ``fail_code`` / ``fail_iter`` / ``fail_reason`` (see
-    docs/solvers.md §Observability); under an armed
+    docs/observability.md); under an armed
     ``telemetry.session()`` they additionally carry
     ``residual_history`` / ``iters_to_tol``, and the solve is recorded
     as a span (``solve`` → ``dispatch``/``execute``) plus a per-solve
@@ -498,6 +498,60 @@ def solve(a: jax.Array, b: jax.Array, *, method: str = "lu",
             out = _trace.block(out)
         _record_solve(sess, a, method, engine, backend, out)
     return out
+
+
+def make_executable(*, method: str = "lu", mode: str = "solve",
+                    batch: int | None = None, engine: str = "gspmd",
+                    backend: str = "ref", block_size: int = 128,
+                    tol: float = 1e-6, maxiter: int = 1000,
+                    restart: int = 32, precond: str | None = None,
+                    **method_kwargs) -> Callable:
+    """Build a jit-compiled solve executable with every dispatch decision
+    baked into a static closure — the cache-aware hook the serving layer
+    (:mod:`repro.serve.cache`) keys on
+    ``(method, engine, backend, padded shape, dtype, precond spec)``.
+
+    * ``mode="solve"``  — ``fn(a, b) -> SolveResult`` (any method; batched
+      ``(B, n, n)`` inputs go through the normal vmap/BatchedOperator
+      dispatch),
+    * ``mode="factor"`` — ``fn(a) -> state`` (direct methods with a
+      factor/apply split; ``batch=B`` vmaps over a leading axis),
+    * ``mode="apply"``  — ``fn(state, b) -> x`` (the matching solve half;
+      states stack/slice as pytrees, so a cached per-request factor can
+      be re-batched under a different ``batch=``).
+
+    The returned callable is a plain ``jax.jit`` function: the first call
+    with a given shape/dtype compiles, later calls reuse the executable.
+    For eager prefill, pair with jax.jit's AOT path
+    (``fn.lower(*shaped_args).compile()`` — what
+    :meth:`repro.serve.cache.ExecutableCache.warm` does).  Single-process
+    only (``mesh=`` solves dispatch through :func:`solve`).
+    """
+    entry = get_method(method)
+    if precond is not None and not isinstance(precond, str):
+        raise ValueError(
+            "executables are keyed on the precond *spec*; pass a string "
+            "('jacobi', 'block_jacobi', 'ssor') — callables are not "
+            "cache-keyable")
+    if mode == "solve":
+        kw = dict(method=method, engine=engine, backend=backend,
+                  block_size=block_size, tol=tol, maxiter=maxiter,
+                  restart=restart, precond=precond, validate=False,
+                  return_info=True, **method_kwargs)
+        return jax.jit(lambda a, b: _solve_impl(a, b, **kw))
+    if mode not in ("factor", "apply"):
+        raise ValueError(f"unknown mode {mode!r}; expected "
+                         "'solve' | 'factor' | 'apply'")
+    if entry.kind != "direct" or entry.factor is None:
+        raise ValueError(f"mode={mode!r} needs a direct method with a "
+                         f"factor/apply split; available: "
+                         f"{tuple(n for n, e in sorted(_REGISTRY.items()) if e.factor is not None)}")
+    fkw = dict(block_size=block_size, mesh=None, backend=backend)
+    if mode == "factor":
+        factor = lambda a: entry.factor(a, **fkw)
+        return jax.jit(factor if batch is None else jax.vmap(factor))
+    apply = lambda s, b: entry.apply(s, b, **fkw)
+    return jax.jit(apply if batch is None else jax.vmap(apply))
 
 
 def _factorize_impl(a: jax.Array, *, method: str = "lu", mesh=None,

@@ -135,6 +135,56 @@ def pad_rect(a: jax.Array, block_size: int
     return a, nb, m_pad, n_pad
 
 
+def bucket_ladder(n_max: int = 8192, n_min: int = 16) -> tuple[int, ...]:
+    """The serving layer's shape-bucket rungs: powers of two plus their
+    3/2 midpoints (16, 24, 32, 48, 64, 96, 128, ...), capped at
+    ``n_max``.  Geometric with ratio ≤ 1.5, so bucketing never pads a
+    system by more than 50% of its rows while heterogeneous request
+    sizes collapse onto O(log n) distinct compiled shapes."""
+    if n_min < 2 or n_max < n_min:
+        raise ValueError(f"need 2 <= n_min <= n_max, got "
+                         f"({n_min}, {n_max})")
+    rungs = []
+    p = 1
+    while p < n_max:
+        p *= 2
+        for r in (p, p * 3 // 2):
+            if n_min <= r <= n_max:
+                rungs.append(r)
+    if not rungs or rungs[-1] < n_max:
+        rungs.append(n_max)
+    return tuple(sorted(set(rungs)))
+
+
+def bucket_size(n: int, ladder: tuple[int, ...] | None = None) -> int:
+    """Smallest ladder rung >= n.  Sizes above the top rung fall back to
+    the next 128-multiple (still a static shape, just an uncommon one)."""
+    if n < 1:
+        raise ValueError(f"n={n} must be >= 1")
+    for r in (bucket_ladder() if ladder is None else sorted(ladder)):
+        if r >= n:
+            return r
+    return padded_size(n, 128)
+
+
+def pad_square_to(a: jax.Array, n_pad: int) -> jax.Array:
+    """Identity-pad a square system up to an *explicit* target size — the
+    same exact ``[[A, 0], [0, I]]`` extension as :func:`pad_system`, but
+    to a caller-chosen ``n_pad`` (a bucket rung) rather than the next
+    block multiple.  The leading ``n`` solution components are unchanged
+    and the pad rows solve to exact zeros against a zero-padded rhs."""
+    n = a.shape[-1]
+    if a.ndim != 2 or a.shape[0] != n:
+        raise ValueError(f"expected a square (n, n) matrix, got {a.shape}")
+    if n_pad < n:
+        raise ValueError(f"cannot pad {n} rows down to {n_pad}")
+    if n_pad == n:
+        return a
+    pad = n_pad - n
+    a = jnp.pad(a, ((0, pad), (0, pad)))
+    return a.at[n:, n:].set(jnp.eye(pad, dtype=a.dtype))
+
+
 def pad_rhs(b: jax.Array, n_padded: int) -> jax.Array:
     """Zero-pad the leading axis of a right-hand side up to ``n_padded``."""
     pad = n_padded - b.shape[0]

@@ -7,7 +7,7 @@ SPD depending on the method), solves it with the chosen CUPLSS method on
 the available device mesh, and reports residual + timing — the single-node
 analogue of the paper's §4 runs (benchmarks/ has the scaling versions).
 
-Resilience drills (docs/solvers.md "Resilience"):
+Resilience drills (docs/resilience.md):
 
     # inject a NaN into every matvec, recover via the escalation policy
     ... --method cg --inject matvec --policy resilient
@@ -60,7 +60,7 @@ def main(argv=None):
                     help="s-step basis size for ca_cg/ca_gmres (the "
                          "monomial basis conditions like kappa^s: keep "
                          "s small in float32, raise under --dtype "
-                         "float64 — see docs/solvers.md)")
+                         "float64 — see docs/resilience.md)")
     ap.add_argument("--engine", default="gspmd", choices=["gspmd", "spmd"])
     ap.add_argument("--backend", default="ref", choices=["ref", "pallas"])
     ap.add_argument("--precond", default=None,

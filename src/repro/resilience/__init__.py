@@ -1,6 +1,6 @@
 """Resilience layer: fault injection, ABFT checksums, health taxonomy.
 
-Three pieces, layered bottom-up (docs/solvers.md "Resilience"):
+Three pieces, layered bottom-up (docs/resilience.md):
 
 * :mod:`repro.resilience.inject` — deterministic fault injection at named
   sites (matvec outputs, collective payloads, factor panels, Krylov

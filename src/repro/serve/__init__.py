@@ -1,0 +1,25 @@
+"""Solver-as-a-service: an async batched solve front-end over the
+method registry (docs/serving.md).
+
+    request ──► SolveServer (asyncio queue, micro-batch deadlines)
+                   │  shape bucketing (bucket.py, core/blocking ladder)
+                   │  warm executable cache (cache.py, LRU + prefill)
+                   │  repeated-A factor reuse (fingerprint LRU)
+                   ▼
+               batched (B, n, n) vmap paths of api.solve / factorize
+
+Throughput comes from three amortizations: heterogeneous request
+shapes collapse onto a bucket ladder (O(log n) compiled shapes),
+compiled executables persist across requests (compile once, serve
+many), and repeated matrices reuse cached factorizations (factor once,
+apply many).  Benchmarked in requests/sec and p50/p99 latency by
+``benchmarks/bench_serve.py``.
+"""
+from repro.serve.bucket import GroupKey, bucket_for
+from repro.serve.cache import CacheKey, ExecutableCache, fingerprint, make_key
+from repro.serve.client import ServeClient
+from repro.serve.server import ServerOverloaded, SolveServer
+
+__all__ = ["GroupKey", "bucket_for", "CacheKey", "ExecutableCache",
+           "fingerprint", "make_key", "ServeClient", "ServerOverloaded",
+           "SolveServer"]

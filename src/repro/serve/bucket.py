@@ -1,0 +1,127 @@
+"""Shape bucketing: collapse heterogeneous request sizes onto a small
+ladder of compiled shapes.
+
+Every distinct ``(n, dtype)`` a request stream presents would otherwise
+trace + compile its own executable; the serving layer instead pads each
+system up to the nearest rung of the :func:`repro.core.blocking
+.bucket_ladder` (powers of two plus their 3/2 midpoints, ratio ≤ 1.5)
+with the **exact** identity-pad contract of the direct path
+(``[[A, 0], [0, I]]``, zero rhs pad — pad rows factor/solve trivially
+and the leading ``n`` solution components are unchanged, same policy as
+``core/blocking.pad_system``).  Requests landing on the same rung with
+the same solve configuration then coalesce into one batched
+``(B, n, n)`` execution through the existing vmap paths.
+
+Batch counts are bucketed too (:func:`batch_rung`: next power of two,
+by repeating the last system — exact, the tail is sliced away), so a
+stream of ragged group sizes reuses ~log2(max_batch) executables per
+shape rung instead of one per count.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import blocking
+
+DEFAULT_LADDER = blocking.bucket_ladder()
+
+
+class GroupKey(NamedTuple):
+    """Requests coalesce iff they share everything here: one compiled
+    program per group.  ``n`` is the bucket rung (padded size)."""
+    method: str
+    engine: str
+    backend: str
+    n: int
+    dtype: str
+    precond: str | None
+    opts: tuple
+    policy: str | None = None
+
+
+def bucket_for(n: int, ladder: Sequence[int] | None = None) -> int:
+    """The rung a logical size ``n`` pads to."""
+    return blocking.bucket_size(n, tuple(ladder) if ladder else None)
+
+
+def batch_rung(k: int, max_batch: int) -> int:
+    """Smallest power of two >= k, capped at ``max_batch``."""
+    if k < 1:
+        raise ValueError(f"k={k} must be >= 1")
+    b = 1
+    while b < k and b < max_batch:
+        b *= 2
+    return min(b, max(max_batch, 1))
+
+
+def pad_request(a, b, n_pad: int):
+    """Identity-pad one square system ``(a, b)`` up to the rung
+    ``n_pad``.  Jax-array inputs go through ``core/blocking
+    .pad_square_to`` (traceable); host (numpy) inputs — the server's
+    hot path — apply the *same exact contract* in numpy, so a request
+    of a previously unseen logical size costs zero eager-op compiles
+    (parity is pinned by ``tests/test_serve.py``)."""
+    if isinstance(a, jax.Array) or isinstance(b, jax.Array):
+        a = jnp.asarray(a)
+        b = jnp.asarray(b)
+        if b.ndim != 1 or b.shape[0] != a.shape[-1]:
+            raise ValueError(f"serve requests are single-rhs vectors; "
+                             f"got a {a.shape} with b {b.shape}")
+        return blocking.pad_square_to(a, n_pad), blocking.pad_rhs(b, n_pad)
+    a = np.asarray(a)
+    b = np.asarray(b)
+    n = a.shape[-1]
+    if a.ndim != 2 or a.shape[0] != n:
+        raise ValueError(f"expected a square (n, n) matrix, got {a.shape}")
+    if b.ndim != 1 or b.shape[0] != n:
+        raise ValueError(f"serve requests are single-rhs vectors; got "
+                         f"a {a.shape} with b {b.shape}")
+    if n_pad < n:
+        raise ValueError(f"cannot pad {n} rows down to {n_pad}")
+    if n_pad == n:
+        return a, b
+    ap = np.zeros((n_pad, n_pad), dtype=a.dtype)
+    ap[:n, :n] = a
+    ap[n:, n:] = np.eye(n_pad - n, dtype=a.dtype)
+    bp = np.zeros((n_pad,), dtype=b.dtype)
+    bp[:n] = b
+    return ap, bp
+
+
+def coalesce(systems, n_pad: int, batch: int | None = None):
+    """Stack padded systems into one ``(B, n_pad, n_pad)`` / ``(B,
+    n_pad)`` pair (numpy — one device transfer at the jit boundary).
+    ``batch`` > len(systems) pads the batch axis by repeating the last
+    system (exact; the tail is sliced away by the caller)."""
+    if not systems:
+        raise ValueError("nothing to coalesce")
+    mats, rhss = zip(*(pad_request(np.asarray(a), np.asarray(b), n_pad)
+                       for a, b in systems))
+    mats, rhss = list(mats), list(rhss)
+    if batch is not None:
+        if batch < len(mats):
+            raise ValueError(f"batch={batch} < {len(mats)} systems")
+        mats += [mats[-1]] * (batch - len(mats))
+        rhss += [rhss[-1]] * (batch - len(rhss))
+    return np.stack(mats), np.stack(rhss)
+
+
+def unpad_solution(x, n: int):
+    """Slice a padded solution back to its logical length."""
+    return x[..., :n]
+
+
+def group_key(*, method: str, engine: str, backend: str, n: int,
+              dtype, precond: str | None, policy: str | None = None,
+              ladder: Sequence[int] | None = None, **opts) -> GroupKey:
+    return GroupKey(method, engine, backend, bucket_for(n, ladder),
+                    str(np.dtype(dtype)), precond,
+                    tuple(sorted(opts.items())), policy)
+
+
+__all__ = ["DEFAULT_LADDER", "GroupKey", "bucket_for", "batch_rung",
+           "pad_request", "coalesce", "unpad_solution", "group_key"]

@@ -1,0 +1,97 @@
+"""Synchronous client for :class:`repro.serve.server.SolveServer`.
+
+The server is asyncio-native; most callers (tests, benchmarks, batch
+jobs) are not.  :class:`ServeClient` runs the server's event loop on a
+daemon thread and exposes a blocking API:
+
+    from repro.serve import ServeClient
+
+    with ServeClient(max_batch=8, max_delay_ms=2.0) as client:
+        x = client.solve(a, b, method="cg", tol=1e-8).x
+        results = client.solve_many([(a1, b1), (a2, b2)], method="lu")
+
+``solve_many`` submits everything *before* waiting, so a burst of
+mixed-size requests actually coalesces into micro-batches — issuing
+``solve`` in a loop serializes them and defeats the batcher.
+"""
+from __future__ import annotations
+
+import asyncio
+import threading
+from typing import Sequence
+
+from repro.core.krylov import SolveResult
+from repro.serve.server import SolveServer
+
+
+class ServeClient:
+    """Blocking facade over a :class:`SolveServer` on a background
+    event-loop thread.  Pass an existing ``server=`` to share its
+    executable/factor caches, or any ``SolveServer`` kwargs to own one."""
+
+    def __init__(self, server: SolveServer | None = None, **server_kw):
+        self._server = server if server is not None \
+            else SolveServer(**server_kw)
+        self._loop = asyncio.new_event_loop()
+        self._thread = threading.Thread(target=self._loop.run_forever,
+                                        name="repro-serve", daemon=True)
+        self._thread.start()
+        self._call(self._server.start())
+
+    # -- plumbing ----------------------------------------------------------
+    def _call(self, coro):
+        return asyncio.run_coroutine_threadsafe(coro, self._loop).result()
+
+    def _submit(self, a, b, **kw):
+        return asyncio.run_coroutine_threadsafe(
+            self._server.submit(a, b, **kw), self._loop)
+
+    # -- API ---------------------------------------------------------------
+    def submit(self, a, b, **kw):
+        """Non-blocking submit: returns a ``concurrent.futures.Future``
+        resolving to the :class:`SolveResult` — attach done-callbacks to
+        observe per-request latency without serializing the stream."""
+        return self._submit(a, b, **kw)
+
+    def solve(self, a, b, **kw) -> SolveResult:
+        """One blocking solve (kwargs as :meth:`SolveServer.submit`)."""
+        return self._submit(a, b, **kw).result()
+
+    def solve_many(self, systems: Sequence, **kw) -> list[SolveResult]:
+        """Submit every ``(a, b)`` pair first, then gather — the
+        batching-friendly entry point.  Per-request kwargs: pass
+        ``(a, b, {"method": ..., ...})`` triples; bare pairs use the
+        shared ``**kw``."""
+        futures = []
+        for item in systems:
+            if len(item) == 3:
+                a, b, per = item
+                futures.append(self._submit(a, b, **{**kw, **per}))
+            else:
+                a, b = item
+                futures.append(self._submit(a, b, **kw))
+        return [f.result() for f in futures]
+
+    def stats(self) -> dict:
+        return self._server.stats()
+
+    @property
+    def server(self) -> SolveServer:
+        return self._server
+
+    def close(self) -> None:
+        if self._loop.is_closed():
+            return
+        self._call(self._server.stop())
+        self._loop.call_soon_threadsafe(self._loop.stop)
+        self._thread.join(timeout=10)
+        self._loop.close()
+
+    def __enter__(self) -> "ServeClient":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+__all__ = ["ServeClient"]

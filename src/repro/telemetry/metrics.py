@@ -78,6 +78,16 @@ def get_counter(name: str) -> float:
     return _COUNTERS.get(name, 0.0)
 
 
+def get_gauge(name: str) -> float:
+    return _GAUGES.get(name, 0.0)
+
+
+def get_histogram(name: str) -> Histogram | None:
+    """The live :class:`Histogram` (None if never observed) — the
+    serving layer reads p50/p99 off it for its stats endpoint."""
+    return _HISTOGRAMS.get(name)
+
+
 def reset() -> None:
     _COUNTERS.clear()
     _GAUGES.clear()
@@ -120,5 +130,6 @@ def save_json(path: str) -> None:
 
 
 __all__ = ["Histogram", "counter_inc", "gauge_set", "histogram_observe",
-           "get_counter", "reset", "export_json", "export_prometheus",
-           "save_json", "DEFAULT_BUCKETS"]
+           "get_counter", "get_gauge", "get_histogram", "reset",
+           "export_json", "export_prometheus", "save_json",
+           "DEFAULT_BUCKETS"]

@@ -1,0 +1,300 @@
+"""Serving layer (PR 9): shape bucketing, the warm executable cache,
+micro-batch deadlines, repeated-A factor reuse, and backpressure.
+
+Acceptance bars pinned here:
+
+* bucket padding is *exact* — a server solve of a padded/coalesced f64
+  system matches a direct ``api.solve`` of the unpadded system to 1e-10,
+* cache hit/miss/eviction counters are correct under mixed shapes and
+  dtypes (through ``telemetry.metrics``),
+* a group flushes at ``max_batch`` immediately and at ``max_delay_ms``
+  otherwise,
+* a repeated matrix factorizes once — refactorization count equals the
+  number of *distinct* matrices, asserted via the telemetry counters,
+* a full queue raises :class:`ServerOverloaded` on the load-shedding
+  entry point.
+"""
+import asyncio
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import api, blocking
+from repro.serve import (ExecutableCache, ServeClient, ServerOverloaded,
+                         SolveServer, bucket, make_key)
+from repro.serve.cache import fingerprint
+from repro.telemetry import metrics
+
+
+@pytest.fixture
+def x64():
+    jax.config.update("jax_enable_x64", True)
+    try:
+        yield
+    finally:
+        jax.config.update("jax_enable_x64", False)
+
+
+def _system(n, dtype=np.float32, seed=0, spd=False):
+    rng = np.random.default_rng(seed)
+    a = rng.standard_normal((n, n))
+    a = a @ a.T / n + 4.0 * np.eye(n) if spd else a + n * np.eye(n)
+    return a.astype(dtype), rng.standard_normal(n).astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# bucket ladder + padding contract
+# --------------------------------------------------------------------------
+
+def test_bucket_ladder_shape():
+    ladder = blocking.bucket_ladder()
+    assert list(ladder) == sorted(ladder)
+    # consecutive rung ratio <= 1.5: bounded padding waste
+    for lo, hi in zip(ladder, ladder[1:]):
+        assert hi / lo <= 1.5 + 1e-9
+    for p in (16, 32, 64, 128, 256, 24, 48, 96, 192):
+        assert p in ladder
+
+
+def test_bucket_size_rounds_up():
+    assert blocking.bucket_size(16) == 16
+    assert blocking.bucket_size(17) == 24
+    assert blocking.bucket_size(100) == 128
+    assert blocking.bucket_size(129) == 192
+    # above the ladder top: falls back to the block-multiple pad policy
+    top = blocking.bucket_ladder()[-1]
+    assert blocking.bucket_size(top + 1) == blocking.padded_size(top + 1, 128)
+
+
+def test_pad_request_numpy_matches_blocking(x64):
+    """The server's numpy fast path is bit-identical to the traceable
+    ``core/blocking`` pad policy."""
+    a, b = _system(40, np.float64)
+    ap_np, bp_np = bucket.pad_request(a, b, 48)
+    ap_jx = np.asarray(blocking.pad_square_to(jax.numpy.asarray(a), 48))
+    bp_jx = np.asarray(blocking.pad_rhs(jax.numpy.asarray(b), 48))
+    np.testing.assert_array_equal(ap_np, ap_jx)
+    np.testing.assert_array_equal(bp_np, bp_jx)
+    # identity block + zero coupling, logical corner untouched
+    np.testing.assert_array_equal(ap_np[:40, :40], a)
+    np.testing.assert_array_equal(ap_np[40:, 40:], np.eye(8))
+    assert not ap_np[:40, 40:].any() and not ap_np[40:, :40].any()
+
+
+def test_pad_request_rejects_bad_shapes():
+    a, b = _system(10)
+    with pytest.raises(ValueError):
+        bucket.pad_request(a, b, 8)            # pad below logical size
+    with pytest.raises(ValueError):
+        bucket.pad_request(a, np.zeros((10, 2)), 16)   # multi-rhs
+    with pytest.raises(ValueError):
+        bucket.pad_request(np.zeros((10, 12)), b, 16)  # non-square
+
+
+def test_coalesce_pads_batch_axis():
+    systems = [_system(40, seed=i) for i in range(3)]
+    mats, rhss = bucket.coalesce([(a, b) for a, b in systems], 48, batch=4)
+    assert mats.shape == (4, 48, 48) and rhss.shape == (4, 48)
+    np.testing.assert_array_equal(mats[3], mats[2])    # repeat-last fill
+
+
+def test_batch_rung():
+    assert [bucket.batch_rung(k, 8) for k in (1, 2, 3, 5, 8, 9)] \
+        == [1, 2, 4, 8, 8, 8]
+
+
+# --------------------------------------------------------------------------
+# padding parity: server solve == direct api.solve (f64, 1e-10)
+# --------------------------------------------------------------------------
+
+def test_server_direct_parity_f64(x64):
+    systems = [_system(n, np.float64, seed=n) for n in (33, 40, 44, 60)]
+    with ServeClient(max_batch=4, max_delay_ms=5.0) as client:
+        results = client.solve_many([(a, b) for a, b in systems],
+                                    method="lu", tol=1e-12)
+    for (a, b), r in zip(systems, results):
+        ref = np.asarray(api.solve(a, b, method="lu"))
+        assert np.linalg.norm(np.asarray(r.x) - ref) <= 1e-10
+        assert r.x.shape == b.shape                    # unpadded
+        assert bool(r.converged)
+
+
+def test_server_iterative_parity_f64(x64):
+    systems = [_system(30, np.float64, seed=i, spd=True) for i in range(3)]
+    with ServeClient(max_batch=4, max_delay_ms=5.0) as client:
+        results = client.solve_many([(a, b) for a, b in systems],
+                                    method="cg", tol=1e-12, maxiter=500)
+    for (a, b), r in zip(systems, results):
+        ref = np.asarray(api.solve(a, b, method="cg", tol=1e-12,
+                                   maxiter=500))
+        assert np.linalg.norm(np.asarray(r.x) - ref) <= 1e-10
+
+
+def test_server_nonbatchable_gmres(x64):
+    """GMRES has no batched operator path — still served (per request,
+    bucket-padded) with correct unpadded solutions."""
+    a, b = _system(35, np.float64, seed=3)
+    with ServeClient(max_batch=4, max_delay_ms=1.0) as client:
+        r = client.solve(a, b, method="gmres", tol=1e-10, maxiter=200)
+    assert r.x.shape == (35,)
+    assert np.linalg.norm(b - a @ np.asarray(r.x)) \
+        <= 1e-8 * np.linalg.norm(b)
+
+
+# --------------------------------------------------------------------------
+# executable cache: hits / misses / LRU under mixed shapes + dtypes
+# --------------------------------------------------------------------------
+
+def test_cache_hit_miss_counters():
+    cache = ExecutableCache()
+    m0 = metrics.get_counter("serve_cache_misses")
+    h0 = metrics.get_counter("serve_cache_hits")
+    keys = [make_key("lu", 32, "float32", batch=1),
+            make_key("lu", 48, "float32", batch=1),   # new shape -> miss
+            make_key("lu", 32, "float64", batch=1)]   # new dtype -> miss
+    for k in keys:
+        assert callable(cache.get_or_build(k))
+    assert metrics.get_counter("serve_cache_misses") - m0 == 3
+    for k in keys:                                     # second pass: hits
+        cache.get_or_build(k)
+    assert metrics.get_counter("serve_cache_hits") - h0 == 3
+    assert metrics.get_counter("serve_cache_misses") - m0 == 3
+    s = cache.stats()
+    assert s["size"] == 3 and s["misses"] >= 3
+
+
+def test_cache_lru_eviction():
+    cache = ExecutableCache(maxsize=2)
+    e0 = metrics.get_counter("serve_cache_evictions")
+    k1 = make_key("lu", 16, "float32", batch=1)
+    k2 = make_key("lu", 24, "float32", batch=1)
+    k3 = make_key("lu", 32, "float32", batch=1)
+    cache.get_or_build(k1)
+    cache.get_or_build(k2)
+    cache.get_or_build(k1)          # refresh k1 -> k2 is now LRU
+    cache.get_or_build(k3)          # evicts k2
+    assert metrics.get_counter("serve_cache_evictions") - e0 == 1
+    assert k1 in cache and k3 in cache and k2 not in cache
+
+
+def test_cache_warm_prefill():
+    cache = ExecutableCache()
+    keys = [make_key("lu", 16, "float32", batch=1, mode="factor"),
+            make_key("lu", 16, "float32", batch=1, mode="apply"),
+            make_key("cg", 16, "float32", batch=2)]
+    cache.warm(keys)
+    h0 = metrics.get_counter("serve_cache_hits")
+    for k in keys:
+        cache.get_or_build(k)
+    assert metrics.get_counter("serve_cache_hits") - h0 == len(keys)
+
+
+def test_cache_rejects_callable_precond():
+    with pytest.raises(TypeError):
+        make_key("cg", 16, "float32", precond=lambda r: r)
+
+
+# --------------------------------------------------------------------------
+# micro-batching: deadline flush vs max_batch flush
+# --------------------------------------------------------------------------
+
+def test_deadline_flush_coalesces_group():
+    """Below max_batch, a group waits max_delay_ms then flushes as ONE
+    batch — same-rung requests coalesce."""
+    systems = [_system(40, seed=i) for i in range(3)]
+    with ServeClient(max_batch=16, max_delay_ms=25.0) as client:
+        client.solve_many([(a, b) for a, b in systems], method="lu")
+        batches = list(client.server.batches)
+    assert len(batches) == 1
+    assert batches[0]["size"] == 3
+    assert batches[0]["group"].n == 48          # 40 -> rung 48
+
+
+def test_max_batch_flush_is_immediate():
+    """Hitting max_batch flushes without waiting for the deadline."""
+    systems = [_system(40, seed=i) for i in range(4)]
+    with ServeClient(max_batch=2, max_delay_ms=10_000.0) as client:
+        client.solve_many([(a, b) for a, b in systems], method="lu")
+        batches = list(client.server.batches)
+    assert [b["size"] for b in batches] == [2, 2]
+
+
+def test_mixed_rungs_split_groups():
+    """Different bucket rungs never share a batch."""
+    systems = [_system(40, seed=1), _system(44, seed=2),
+               _system(60, seed=3)]
+    with ServeClient(max_batch=8, max_delay_ms=25.0) as client:
+        client.solve_many([(a, b) for a, b in systems], method="lu")
+        sizes = sorted((b["group"].n, b["size"])
+                       for b in client.server.batches)
+    assert sizes == [(48, 2), (64, 1)]
+
+
+# --------------------------------------------------------------------------
+# repeated-A factor reuse (asserted via telemetry)
+# --------------------------------------------------------------------------
+
+def test_repeated_a_factor_reuse(x64):
+    rng = np.random.default_rng(7)
+    mats = [_system(40, np.float64, seed=i)[0] for i in range(3)]
+    stream = [(a, rng.standard_normal(40)) for a in mats for _ in range(3)]
+    f0 = metrics.get_counter("serve_factorizations")
+    r0 = metrics.get_counter("serve_factor_reuse")
+    with ServeClient(max_batch=4, max_delay_ms=1.0) as client:
+        for a, b in stream:                     # sequential: rhs reuse path
+            r = client.solve(a, b, method="lu", tol=1e-12)
+            assert np.linalg.norm(b - a @ np.asarray(r.x)) \
+                <= 1e-10 * np.linalg.norm(b)
+        stats = client.stats()
+    # refactorization count == number of DISTINCT matrices
+    assert metrics.get_counter("serve_factorizations") - f0 == len(mats)
+    assert metrics.get_counter("serve_factor_reuse") - r0 \
+        == len(stream) - len(mats)
+    assert stats["factorizations"] == len(mats)
+    assert stats["factor_reuses"] == len(stream) - len(mats)
+
+
+def test_fingerprint_distinguishes():
+    a1, _ = _system(16, seed=1)
+    a2, _ = _system(16, seed=2)
+    assert fingerprint(a1) == fingerprint(np.array(a1))
+    assert fingerprint(a1) != fingerprint(a2)
+    assert fingerprint(a1) != fingerprint(a1.astype(np.float64))
+
+
+# --------------------------------------------------------------------------
+# backpressure + validation
+# --------------------------------------------------------------------------
+
+def test_submit_nowait_overload():
+    async def scenario():
+        server = SolveServer(max_pending=1)     # batcher NOT started
+        a, b = _system(16)
+        t1 = asyncio.get_running_loop().create_task(
+            server.submit_nowait(a, b))
+        await asyncio.sleep(0)                  # let t1 enqueue
+        with pytest.raises(ServerOverloaded):
+            await server.submit_nowait(a, b)
+        t1.cancel()
+    asyncio.run(scenario())
+    assert metrics.get_counter("serve_rejected") >= 1
+
+
+def test_request_validation():
+    with ServeClient(max_batch=2, max_delay_ms=1.0) as client:
+        with pytest.raises(ValueError):
+            client.solve(np.zeros((4, 6)), np.zeros(6))        # non-square
+        with pytest.raises(ValueError):
+            client.solve(*_system(16), policy="heroic")        # bad policy
+        with pytest.raises(ValueError):
+            client.solve(*_system(16), method="cholesky_qr3")  # unknown
+
+
+def test_resilient_policy_lane(x64):
+    a, b = _system(32, np.float64, seed=5)
+    with ServeClient(max_batch=2, max_delay_ms=1.0) as client:
+        r = client.solve(a, b, method="lu", policy="resilient")
+    assert "fail_reason" in r.info
+    assert np.linalg.norm(b - a @ np.asarray(r.x)) \
+        <= 1e-8 * np.linalg.norm(b)

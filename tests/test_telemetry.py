@@ -34,7 +34,7 @@ def _sys(n, rng, spd=True):
 def _solve_fn(name, mesh1):
     # a FRESH closure per trace: jax caches jaxpr tracing on function
     # identity, and a cache hit would mask what arming actually traces
-    # (arming is a trace-time decision — see docs/solvers.md)
+    # (arming is a trace-time decision — see docs/observability.md)
     return {
         "cg": lambda A, B: api.solve(A, B, method="cg", tol=1e-6),
         "ca_cg": lambda A, B: api.solve(A, B, method="ca_cg", tol=1e-6,
