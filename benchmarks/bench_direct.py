@@ -132,10 +132,14 @@ def run(sizes=(512, 1024), compile_sizes=(256, 512, 1024), nb=128):
                      round(t * 1e3, 2), "ms", f"rel_res={res:.1e}")
 
         # -- telemetry armed-overhead probe (direct path) ------------------
-        # One instrumented solve for the TELEM solve record, then the
+        # Instrumented eager solves for the TELEM solve records (under
+        # perf=True these route through the observatory's AOT
+        # executables and gain roofline/memory perf records), then the
         # same jitted LU solve timed disarmed vs armed (direct solves
         # add a fixed-shape info dict, no loop-carried state; <= 5%).
         api.solve(aj, bj, method="lu", block_size=bs, return_info=True)
+        api.solve(sj, bj, method="cholesky", block_size=bs,
+                  return_info=True)
         fn_off = jax.jit(lambda A, B: api.solve(A, B, method="lu",
                                                 block_size=bs))
         fn_on = jax.jit(lambda A, B: api.solve(A, B, method="lu",

@@ -14,7 +14,9 @@ Rows emitted (section ``serve``):
 * ``repeated_a_rps`` — a stream of repeated matrices with fresh right-
   hand sides; refactorization count is asserted (via the telemetry
   counters) to equal the number of *distinct* matrices,
-* ``cg_rps`` — batched-iterative lane throughput.
+* ``cg_rps`` — batched-iterative lane throughput (run with the live
+  ``/metrics`` endpoint up; the scrape is validated as Prometheus text
+  exposition 0.0.4 mid-traffic — the ``metrics_endpoint`` row),
 
 Latency is measured client-side (submit to done-callback), so queueing
 and micro-batch deadlines are inside the number — this is what a caller
@@ -156,7 +158,12 @@ def run(sizes=(40, 60, 100, 150), wave=24, warm_waves=4, repeats=4,
          f"distinct={distinct} requests={total} refactor={int(refactors)} "
          f"reuse={int(reuses)}")
 
-    # ---- batched iterative lane ------------------------------------------
+    # ---- batched iterative lane + live /metrics scrape -------------------
+    # The cg wave runs with the metrics endpoint up; mid-traffic we
+    # scrape /metrics and validate Prometheus text exposition 0.0.4
+    # (TYPE lines, cumulative histogram buckets, live serve counters) —
+    # a RuntimeError on anything malformed makes this the serve smoke
+    # test's endpoint acceptance check.
     rng = np.random.default_rng(7)
     n_cg = sizes[0]
     spd = []
@@ -165,12 +172,66 @@ def run(sizes=(40, 60, 100, 150), wave=24, warm_waves=4, repeats=4,
         spd.append((m @ m.T / n_cg + 4 * np.eye(n_cg, dtype=np.float32),
                     rng.standard_normal(n_cg).astype(np.float32)))
     with ServeClient(cache=cache, max_batch=max_batch,
-                     max_delay_ms=max_delay_ms) as client:
+                     max_delay_ms=max_delay_ms, metrics_port=0) as client:
         _stream(client, spd[: max_batch], method="cg", tol=1e-6)  # compile
         lats, wall = _stream(client, spd, method="cg", tol=1e-6)
+        port = client.server.metrics_server.port
+        body, ctype = _scrape(f"http://127.0.0.1:{port}/metrics")
+        _validate_prometheus(body, ctype)
     emit("serve", f"cg_rps_n{n_cg}", round(len(spd) / wall, 1), "req/s",
          f"p50={_pct(lats, 50):.1f}ms p99={_pct(lats, 99):.1f}ms "
          f"batched vmap lane")
+    emit("serve", "metrics_endpoint", len(body.splitlines()), "lines",
+         f"live /metrics scrape on :{port} — Prometheus 0.0.4 validated "
+         f"(serve_requests={metrics.get_counter('serve_requests'):.0f})")
+
+
+def _scrape(url: str) -> tuple[str, str]:
+    import urllib.request
+    with urllib.request.urlopen(url, timeout=10) as resp:
+        return resp.read().decode(), resp.headers.get("Content-Type", "")
+
+
+def _validate_prometheus(body: str, ctype: str) -> None:
+    """Assert Prometheus text exposition 0.0.4 shape — malformed output
+    raises RuntimeError (the bench is the acceptance check)."""
+    if "version=0.0.4" not in ctype:
+        raise RuntimeError(f"/metrics Content-Type must declare text "
+                           f"exposition 0.0.4; got {ctype!r}")
+    if "# TYPE serve_requests counter" not in body:
+        raise RuntimeError("/metrics is missing the serve_requests "
+                           "counter TYPE line — scrape ran mid-traffic, "
+                           "the counter must exist")
+    if metrics.get_counter("serve_requests") <= 0:
+        raise RuntimeError("serve_requests counter is zero during a "
+                           "live wave")
+    for line in body.splitlines():
+        if not line or line.startswith("#"):
+            continue
+        parts = line.rsplit(" ", 1)
+        if len(parts) != 2:
+            raise RuntimeError(f"malformed exposition line {line!r}")
+        try:
+            float(parts[1])
+        except ValueError:
+            raise RuntimeError(f"non-numeric sample in {line!r}") from None
+    # histogram buckets must be cumulative and end at +Inf == _count
+    import re as _re
+    for name in ("serve_latency_ms",):
+        pat = _re.compile(rf'^{name}_bucket{{le="([^"]+)"}} (\d+)$',
+                          _re.MULTILINE)
+        buckets = pat.findall(body)
+        if not buckets:
+            raise RuntimeError(f"no histogram buckets for {name}")
+        counts = [int(c) for _, c in buckets]
+        if counts != sorted(counts):
+            raise RuntimeError(f"{name} buckets are not cumulative: "
+                               f"{counts}")
+        if buckets[-1][0] != "+Inf":
+            raise RuntimeError(f"{name} buckets must end at +Inf")
+        m = _re.search(rf"^{name}_count (\d+)$", body, _re.MULTILINE)
+        if not m or int(m.group(1)) != counts[-1]:
+            raise RuntimeError(f"{name} +Inf bucket must equal _count")
 
 
 def main(argv=None):

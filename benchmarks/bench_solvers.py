@@ -109,6 +109,30 @@ def run(sizes=(512, 1024), dtypes=("float32",)):
                  round(float(np.median(ratios)), 3), "ratio",
                  f"armed {t_on * 1e3:.2f} ms vs disarmed "
                  f"{t_off * 1e3:.2f} ms, 3 rounds (contract: <= 1.05)")
+
+            # -- perf-observatory overhead: session(perf=True) routes
+            # eager solves through an AOT executable and attributes a
+            # roofline per solve — all analysis happens once per
+            # compile, so warm perf-armed solves must cost the same as
+            # span-armed ones.  One nested perf session for the whole
+            # probe (one observatory, one compile), a plain session
+            # nested inside it for the baseline halves.
+            eager_cg = lambda A, B: api.solve(A, B, method="cg", tol=1e-6)
+            pratios = []
+            with telemetry.session("perf-probe", perf=True) as psess:
+                eager_cg(sj, bj)                # compile + analyze once
+                for _ in range(3):
+                    t_perf = timeit(eager_cg, sj, bj, warmup=2, iters=10)
+                    with telemetry.session("plain-probe"):
+                        t_plain = timeit(eager_cg, sj, bj, warmup=2,
+                                         iters=10)
+                    pratios.append(t_perf / t_plain)
+                n_analyses = psess.perf.analyses
+            emit("solvers", f"perf_overhead_cg_n{n}_{dtype}",
+                 round(float(np.median(pratios)), 3), "ratio",
+                 f"perf-armed {t_perf * 1e3:.2f} ms vs span-armed "
+                 f"{t_plain * 1e3:.2f} ms, {n_analyses} HLO analyses for "
+                 f"31 solves, 3 rounds (contract: <= 1.05)")
         if dtype == "float64":
             jax.config.update("jax_enable_x64", False)
 

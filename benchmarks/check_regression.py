@@ -36,6 +36,18 @@ i.e. >20%) over the reference — or stops converging outright — fails.
 Iteration counts don't care how loaded the CI runner is, so this gate
 catches numerical regressions the noisy wall-time gate must ignore.
 
+Two further machine-relative gates read the TELEM perf records written
+by the performance observatory (``telemetry.session(..., perf=True)``):
+``check_roofline_efficiency`` fails when a solve's per-key median
+roofline efficiency (modeled work over measured time against *detected*
+machine peaks) collapses below the reference median divided by
+``--eff-factor`` — a runner-speed-independent way to catch "same
+answer, 10x the work" regressions; and ``check_perf_overhead`` enforces
+the zero-overhead contract absolutely: every ``perf_overhead_*`` /
+``telemetry_overhead_*`` ratio row must stay at or under
+``--overhead-limit`` (default 1.05, plus a 0.10 timing-noise allowance
+before the gate actually fails — real violations land at 10-100x).
+
 Rows present in only one side are reported but never fail the gate (new
 benchmarks shouldn't need a reference bump to land, and re-baselining is
 one ``benchmarks.run --json-dir benchmarks/reference`` away).
@@ -136,6 +148,108 @@ def check_iteration_counts(cur_dir: str, ref_dir: str,
     return violations
 
 
+def _telem_efficiency(path: str) -> dict[str, list[float]]:
+    """key -> [roofline efficiency_pct, ...] from a TELEM file's
+    perf-attributed solve records.  Records whose executables ran under
+    ~1 ms are dropped — sub-quantum timings make efficiency noise."""
+    with open(path) as f:
+        data = json.load(f)
+    by: dict[str, list[float]] = {}
+    for rec in data.get("solves", []):
+        perf = rec.get("perf")
+        if not isinstance(perf, dict):
+            continue
+        eff = (perf.get("roofline") or {}).get("efficiency_pct")
+        if eff is None or perf.get("t_execute_ms", 0.0) < 1.0:
+            continue
+        by.setdefault(rec.get("key", "?"), []).append(float(eff))
+    return by
+
+
+def _median(xs: list[float]) -> float:
+    s = sorted(xs)
+    return s[len(s) // 2]
+
+
+def check_roofline_efficiency(cur_dir: str, ref_dir: str,
+                              factor: float = 3.0) -> list[str]:
+    """Gate roofline efficiency: the per-key *median* efficiency_pct
+    from the TELEM perf records must not fall below the reference
+    median divided by ``factor``.  Efficiency is machine-relative
+    (modeled work over measured time against *detected* peaks), so —
+    like the iteration gate — it survives runner-speed changes that the
+    wall-time gate must absorb with slack: a solve that suddenly does
+    10x the memory traffic for the same answer fails here even when
+    the runner got faster.  Returns violation strings (empty = pass)."""
+    violations = []
+    for path in sorted(glob.glob(os.path.join(ref_dir, "TELEM_*.json"))):
+        name = os.path.basename(path)
+        cpath = os.path.join(cur_dir, name)
+        if not os.path.exists(cpath):
+            print(f"  (no current {name} — efficiency gate skipped)")
+            continue
+        ref_by, cur_by = _telem_efficiency(path), _telem_efficiency(cpath)
+        checked = 0
+        for key, rlist in sorted(ref_by.items()):
+            clist = cur_by.get(key)
+            if not clist:
+                print(f"  (no current perf record {key} — skipped)")
+                continue
+            checked += 1
+            r_med, c_med = _median(rlist), _median(clist)
+            if r_med > 0 and c_med < r_med / factor:
+                violations.append(
+                    f"{name} {key}: roofline efficiency "
+                    f"{r_med:.1f}% -> {c_med:.1f}% "
+                    f"(< ref/{factor:.1f})")
+        if checked:
+            print(f"  {name}: checked {checked} efficiency median(s) "
+                  f"(floor ref/{factor:.1f})")
+    return violations
+
+
+def check_perf_overhead(cur_dir: str, limit: float = 1.05,
+                        noise: float = 0.10) -> list[str]:
+    """Gate the observatory's zero-overhead contract: any bench row
+    named ``perf_overhead_*`` or ``telemetry_overhead_*`` (armed/plain
+    wall-time ratio) must stay at or under ``limit``.  Absolute, not
+    reference-relative — the contract is a constant.
+
+    ``noise`` is the measurement allowance: the ratios come from
+    median-of-3 rounds over sub-5ms timings, which flap by ~10% on a
+    loaded runner.  A *real* contract violation (per-solve HLO analysis
+    or recompilation) lands at 10-100x, so rows inside
+    ``(limit, limit + noise]`` are printed as warnings, not failed —
+    same collapse-class philosophy as the strong-scaling mono gate."""
+    violations = []
+    for path in sorted(glob.glob(os.path.join(cur_dir, "BENCH_*.json"))):
+        with open(path) as f:
+            data = json.load(f)
+        for r in data.get("rows", []):
+            nm = r.get("name", "")
+            if not (nm.startswith("perf_overhead")
+                    or nm.startswith("telemetry_overhead")):
+                continue
+            try:
+                v = float(r["value"])
+            except (TypeError, ValueError):
+                violations.append(f"{data.get('section')}/{nm}: "
+                                  f"non-numeric overhead {r['value']!r}")
+                continue
+            print(f"  {data.get('section')}/{nm}: ratio {v:.3f} "
+                  f"(limit {limit} + noise {noise})")
+            if v > limit + noise:
+                violations.append(
+                    f"{data.get('section')}/{nm}: overhead ratio "
+                    f"{v:.3f} > {limit} + {noise} noise — the "
+                    "observatory is doing per-solve work it promised "
+                    "to do per-compile")
+            elif v > limit:
+                print(f"    WARN over the {limit} contract but within "
+                      f"timing noise")
+    return violations
+
+
 def check_spmd_monotonicity(directory: str, tol: float = MONO_TOL):
     """Gate the direct_spmd strong-scaling curve of ``directory``.
 
@@ -197,6 +311,15 @@ def main(argv=None):
                     help="direct_spmd strong-scaling gate: successive "
                          "device counts must retain this fraction of "
                          "GFLOP/s (no-collapse monotonicity)")
+    ap.add_argument("--eff-factor", type=float, default=3.0,
+                    help="allowed roofline-efficiency collapse: per-key "
+                         "median efficiency_pct must stay above the "
+                         "reference median divided by this (machine-"
+                         "relative performance gate)")
+    ap.add_argument("--overhead-limit", type=float, default=1.05,
+                    help="max armed/plain wall-time ratio for the "
+                         "perf_overhead_* / telemetry_overhead_* rows "
+                         "(the zero-overhead contract)")
     args = ap.parse_args(argv)
 
     cur = load(args.current)
@@ -232,13 +355,17 @@ def main(argv=None):
     mono = check_spmd_monotonicity(args.current, tol=args.mono_tol)
     iters = check_iteration_counts(args.current, args.reference,
                                    factor=args.iters_factor)
-    if regressions or mono or iters:
+    eff = check_roofline_efficiency(args.current, args.reference,
+                                    factor=args.eff_factor)
+    over = check_perf_overhead(args.current, limit=args.overhead_limit)
+    extra = mono + iters + eff + over
+    if regressions or extra:
         for (section, name), rv, cv, unit in regressions:
             print(f"REGRESSION {section}/{name}: {rv} -> {cv} {unit} "
                   f"(> {args.factor}x)", file=sys.stderr)
-        for msg in mono + iters:
+        for msg in extra:
             print(f"REGRESSION {msg}", file=sys.stderr)
-        raise SystemExit(f"{len(regressions) + len(mono) + len(iters)} "
+        raise SystemExit(f"{len(regressions) + len(extra)} "
                          f"benchmark check(s) failed")
     print("benchmark regression gate: PASS")
 

@@ -75,9 +75,10 @@ def main(argv=None):
             if args.json_dir:
                 # armed telemetry session per section: every
                 # BENCH_<section>.json gains a TELEM_<section>.json
-                # sibling (spans, per-site comm bytes, solve records)
+                # sibling (spans, per-site comm bytes, solve records,
+                # and — perf=True — roofline-attributed perf records)
                 from repro import telemetry
-                with telemetry.session(name) as sess:
+                with telemetry.session(name, perf=True) as sess:
                     fn(*a, **kw)
             else:
                 fn(*a, **kw)

@@ -326,14 +326,29 @@ class _Analyzer:
             cost.traffic_bytes += result_bytes + operand_bytes
         return cost
 
-    def _cond_trip(self, cond_name: str) -> int:
+    _CALLED_RE = re.compile(r"(?:calls|to_apply|condition|body)=%?([\w.\-]+)")
+
+    def _cond_trip(self, cond_name: str, _seen: set | None = None) -> int:
+        """Largest integer constant reachable from the loop condition —
+        the trip count for counted loops, ``maxiter`` (the honest upper
+        bound) for data-dependent ``while_loop`` conditions whose
+        comparison also tests a residual.  The comparison constant is
+        not always a direct instruction of the condition computation:
+        XLA fuses conditions (Krylov loops land the bound inside a
+        fusion), so recurse through called computations."""
+        seen = _seen if _seen is not None else set()
+        if cond_name in seen:
+            return 1
+        seen.add(cond_name)
         best = 1
         for ins in self.comps.get(cond_name, []):
-            if ins.opcode != "constant":
+            if ins.opcode == "constant":
+                m = re.match(r"\((-?\d+)\)", ins.args_raw or "")
+                if m:
+                    best = max(best, int(m.group(1)))
                 continue
-            m = re.match(r"\((-?\d+)\)", ins.args_raw or "")
-            if m:
-                best = max(best, int(m.group(1)))
+            for m in self._CALLED_RE.finditer(ins.attrs):
+                best = max(best, self._cond_trip(m.group(1), seen))
         return best
 
 

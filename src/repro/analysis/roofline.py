@@ -1,8 +1,15 @@
-"""Three-term roofline model for TPU v5e (the target hardware).
+"""Three-term roofline model (TPU v5e defaults, overridable peaks).
 
     compute term    = HLO_FLOPs / peak_FLOP/s            (per chip)
     memory term     = HLO_bytes / HBM_bw                 (per chip)
     collective term = Σ_kind wire_bytes(kind) / link_bw  (per chip)
+
+Peaks default to the TPU v5e constants below (the paper-model target);
+pass ``peaks=`` (anything with ``peak_flops`` / ``hbm_bw`` / ``link_bw``
+attributes, e.g. a :class:`repro.telemetry.perf.MachineProfile`) to
+evaluate the same model against the *detected* host — that is how the
+performance observatory turns a measured wall time into a meaningful
+roofline-efficiency % on a CPU CI runner.
 
 Sources: FLOPs / traffic / collective payloads come from the while-aware
 HLO parser (``repro.analysis.hlo``) applied to the compiled dry-run
@@ -52,18 +59,22 @@ class RooflineReport:
     xla_flops: float = 0.0               # cost_analysis cross-check
     xla_bytes: float = 0.0
     collective_breakdown: dict = dataclasses.field(default_factory=dict)
+    # hardware peaks the three terms divide by — v5e unless overridden
+    peak_flops: float = PEAK_FLOPS_BF16
+    hbm_bw: float = HBM_BW
+    link_bw: float = ICI_BW
 
     @property
     def t_compute(self) -> float:
-        return self.hlo_flops / PEAK_FLOPS_BF16
+        return self.hlo_flops / self.peak_flops
 
     @property
     def t_memory(self) -> float:
-        return self.hlo_bytes / HBM_BW
+        return self.hlo_bytes / self.hbm_bw
 
     @property
     def t_collective(self) -> float:
-        return self.wire_bytes / ICI_BW
+        return self.wire_bytes / self.link_bw
 
     @property
     def bottleneck(self) -> str:
@@ -91,7 +102,7 @@ class RooflineReport:
         per second at the roofline, over peak."""
         if self.t_bound == 0:
             return 0.0
-        return (self.model_flops_per_chip / self.t_bound) / PEAK_FLOPS_BF16
+        return (self.model_flops_per_chip / self.t_bound) / self.peak_flops
 
     def row(self) -> dict:
         return {
@@ -119,14 +130,21 @@ def wire_bytes(cost: HloCost) -> tuple[float, dict]:
 
 def roofline(name: str, cost: HloCost, *, chips: int,
              model_flops_global: float, xla_flops: float = 0.0,
-             xla_bytes: float = 0.0) -> RooflineReport:
+             xla_bytes: float = 0.0, peaks=None) -> RooflineReport:
+    """Build a :class:`RooflineReport`.  ``peaks`` overrides the v5e
+    hardware constants (duck-typed: ``peak_flops`` / ``hbm_bw`` /
+    ``link_bw`` attributes)."""
     wb, detail = wire_bytes(cost)
+    hw = {} if peaks is None else {
+        "peak_flops": float(peaks.peak_flops),
+        "hbm_bw": float(peaks.hbm_bw),
+        "link_bw": float(peaks.link_bw)}
     return RooflineReport(
         name=name, chips=chips, hlo_flops=cost.flops,
         hlo_bytes=cost.traffic_bytes, wire_bytes=wb,
         model_flops_global=model_flops_global,
         xla_flops=xla_flops, xla_bytes=xla_bytes,
-        collective_breakdown=detail)
+        collective_breakdown=detail, **hw)
 
 
 def model_flops(cfg, shape) -> float:

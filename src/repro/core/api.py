@@ -40,6 +40,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import time as _time
 from typing import Callable
 
 import jax
@@ -55,6 +56,7 @@ from repro.core.blocking import BACKENDS
 from repro.core.krylov import SolveResult
 from repro.resilience import monitor as _monitor
 from repro.telemetry import convergence as _conv
+from repro.telemetry import perf as _perf
 from repro.telemetry import trace as _trace
 
 ENGINES = ("gspmd", "spmd")
@@ -491,12 +493,48 @@ def solve(a: jax.Array, b: jax.Array, *, method: str = "lu",
              "n": int(a.shape[-1]) if getattr(a, "shape", None) else 0}
     if policy:
         attrs["policy"] = policy
+    obs = sess.perf
     with _trace.span("solve", **attrs):
+        pexec = None
         with _trace.span("dispatch"):
-            out = _solve_impl(a, b, **kw)
+            if obs is not None and obs.eligible(a, b, kw):
+                # the observatory's AOT path: the whole solve becomes
+                # ONE compiled executable there is an artifact to
+                # analyze.  Validation normally runs eagerly inside
+                # _solve_impl but vanishes under jit — run it here so
+                # the routed path rejects the same inputs.
+                if validate:
+                    _validate_inputs(a, b, method,
+                                     getattr(a, "is_sparse", False))
+                # return_info=True inside the executable: the iteration
+                # count is computed by the loop either way, and the
+                # attribution needs it to scale the while-trip model to
+                # the iterations that actually ran
+                jkw = dict(kw, validate=False, return_info=True)
+                pexec = obs.prepare(
+                    a, b, jkw,
+                    lambda: jax.jit(lambda A, B: _solve_impl(A, B, **jkw)),
+                    kind=get_method(method).kind)
+            # time enqueue + wait together: on synchronous backends
+            # (CPU) the work happens inside the call, so the execute
+            # span alone under-measures by the whole device time
+            t0 = _time.perf_counter()
+            out = pexec.fn(a, b) if pexec is not None \
+                else _solve_impl(a, b, **kw)
         with _trace.span("execute"):
+            arrivals = _perf.shard_arrivals(out) if pexec is not None \
+                else None
             out = _trace.block(out)
+            t_run = _time.perf_counter() - t0
         _record_solve(sess, a, method, engine, backend, out)
+        if pexec is not None and sess.solves:
+            try:
+                obs.attribute(sess.solves[-1], pexec, t_run, arrivals)
+            except Exception:       # attribution must never sink a solve
+                pass
+        if pexec is not None and not return_info \
+                and isinstance(out, SolveResult):
+            out = out.x
     return out
 
 

@@ -18,8 +18,9 @@ apply many).  Benchmarked in requests/sec and p50/p99 latency by
 from repro.serve.bucket import GroupKey, bucket_for
 from repro.serve.cache import CacheKey, ExecutableCache, fingerprint, make_key
 from repro.serve.client import ServeClient
+from repro.serve.metrics_http import MetricsServer
 from repro.serve.server import ServerOverloaded, SolveServer
 
 __all__ = ["GroupKey", "bucket_for", "CacheKey", "ExecutableCache",
-           "fingerprint", "make_key", "ServeClient", "ServerOverloaded",
-           "SolveServer"]
+           "fingerprint", "make_key", "MetricsServer", "ServeClient",
+           "ServerOverloaded", "SolveServer"]

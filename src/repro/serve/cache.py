@@ -27,7 +27,9 @@ repeated-A fast path keys cached factorizations on.
 """
 from __future__ import annotations
 
+import functools
 import hashlib
+import time
 from collections import OrderedDict
 from typing import Callable, Iterable, NamedTuple
 
@@ -37,6 +39,7 @@ import numpy as np
 
 from repro.core import api
 from repro.telemetry import metrics
+from repro.telemetry import perf as perf_mod
 
 
 class CacheKey(NamedTuple):
@@ -104,6 +107,50 @@ def _dummy_system(key: CacheKey):
     return jnp.asarray(a), jnp.asarray(b)
 
 
+class _LazyAOT:
+    """Wrap a jit solve fn so the first call compiles ahead of time.
+
+    ``fn.lower(*args).compile()`` on first sight — timed, so the cache
+    can attribute compile-seconds per :class:`CacheKey`, and handed to
+    the observatory's HLO/memory analysis exactly once.  Later calls
+    with the same arg signature dispatch straight to the compiled
+    executable; a signature change (shouldn't happen — the key pins
+    shape and dtype) falls back to the plain jit fn, never fails."""
+
+    __slots__ = ("_fn", "_compiled", "_sig", "_record")
+
+    def __init__(self, fn: Callable, record: Callable):
+        self._fn = fn
+        self._compiled = None
+        self._sig = None
+        self._record = record           # callback(compile_s, compiled)
+
+    @staticmethod
+    def _signature(args):
+        return jax.tree.map(
+            lambda x: (tuple(getattr(x, "shape", ())),
+                       str(getattr(x, "dtype", ""))), args)
+
+    def __call__(self, *args):
+        sig = self._signature(args)
+        if self._compiled is not None:
+            if sig == self._sig:
+                return self._compiled(*args)
+            return self._fn(*args)
+        try:
+            t0 = time.perf_counter()
+            compiled = self._fn.lower(*args).compile()
+            compile_s = time.perf_counter() - t0
+        except Exception:               # un-AOT-able args: plain jit path
+            return self._fn(*args)
+        self._compiled, self._sig = compiled, sig
+        try:
+            self._record(compile_s, compiled)
+        except Exception:               # bookkeeping never sinks a solve
+            pass
+        return compiled(*args)
+
+
 class ExecutableCache:
     """Process-wide LRU of compiled solve executables.
 
@@ -111,7 +158,13 @@ class ExecutableCache:
     device buffers for its constants); eviction is least-recently-used.
     ``persistent_dir`` additionally enables JAX's on-disk compilation
     cache so XLA compiles survive restarts (best-effort — older jaxlibs
-    without the config flag just skip it)."""
+    without the config flag just skip it).
+
+    Entries are :class:`_LazyAOT` wrappers: the first call through a key
+    compiles ahead of time, records per-key compile-seconds (visible in
+    :meth:`stats` under ``"keys"``), and runs the while-aware HLO +
+    memory analysis once — so a serving process knows the modeled FLOPs
+    and peak bytes of everything it keeps warm."""
 
     def __init__(self, maxsize: int = 128,
                  persistent_dir: str | None = None):
@@ -122,6 +175,7 @@ class ExecutableCache:
         self.hits = 0
         self.misses = 0
         self.evictions = 0
+        self.key_info: dict[CacheKey, dict] = {}
         if persistent_dir is not None:
             try:
                 jax.config.update("jax_compilation_cache_dir",
@@ -181,16 +235,47 @@ class ExecutableCache:
     def stats(self) -> dict:
         return {"size": len(self._entries), "maxsize": self.maxsize,
                 "hits": self.hits, "misses": self.misses,
-                "evictions": self.evictions}
+                "evictions": self.evictions,
+                "compile_s_total": round(sum(
+                    i.get("compile_s", 0.0)
+                    for i in self.key_info.values()), 4),
+                "keys": {self._label(k): dict(i)
+                         for k, i in self.key_info.items()}}
 
     # -- construction ------------------------------------------------------
+    @staticmethod
+    def _label(key: CacheKey) -> str:
+        lbl = f"{key.method}/{key.mode}/n{key.shape[-1]}/{key.dtype}"
+        if len(key.shape) == 3:
+            lbl += f"/b{key.shape[0]}"
+        return lbl
+
+    def _on_compile(self, key: CacheKey, compile_s: float,
+                    compiled) -> None:
+        """First execution of a key: record compile-seconds and the
+        one-time HLO/memory analysis (never again for this key)."""
+        info = {"compile_s": round(compile_s, 4)}
+        try:
+            a = perf_mod.analyze_compiled(compiled)
+            info["flops"] = a["cost"].flops
+            info["traffic_bytes"] = a["cost"].traffic_bytes
+            if a["memory"]:
+                info["peak_bytes"] = a["memory"].get("peak_bytes", 0)
+                info["temp_bytes"] = a["memory"].get("temp_bytes", 0)
+        except Exception:               # analysis is best-effort
+            pass
+        self.key_info[key] = info
+        metrics.counter_inc("serve_compiles")
+        metrics.counter_inc("serve_compile_seconds", compile_s)
+
     def _build(self, key: CacheKey) -> Callable:
         batch = key.shape[0] if len(key.shape) == 3 else None
         opts = dict(key.opts)
-        return api.make_executable(
+        fn = api.make_executable(
             method=key.method, mode=key.mode, batch=batch,
             engine=key.engine, backend=key.backend, precond=key.precond,
             **opts)
+        return _LazyAOT(fn, functools.partial(self._on_compile, key))
 
 
 __all__ = ["CacheKey", "ExecutableCache", "make_key", "fingerprint"]

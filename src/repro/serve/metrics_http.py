@@ -1,0 +1,125 @@
+"""Live ``/metrics`` endpoint for the solve server (stdlib-only HTTP).
+
+A scrape target over the process-wide :mod:`repro.telemetry.metrics`
+registry — counters the batcher and the performance observatory already
+maintain (``serve_requests``, ``serve_latency_ms``, ``perf_compiles``,
+``perf_roofline_efficiency_pct``, …) become visible to Prometheus
+without any new bookkeeping on the hot path: the handler renders
+:func:`repro.telemetry.metrics.export_prometheus` on demand.
+
+Routes:
+
+* ``GET /metrics``  — Prometheus text exposition format 0.0.4
+  (``Content-Type: text/plain; version=0.0.4``);
+* ``GET /stats``    — the server's live :meth:`SolveServer.stats` as
+  JSON (queue depth, cache hit rates, per-key compile seconds);
+* ``GET /healthz``  — liveness probe (``ok``).
+
+``ThreadingHTTPServer`` on a daemon thread: scrapes never block the
+asyncio batcher (the registry takes one lock per export), and the
+process exits without waiting on the listener.  ``port=0`` binds an
+ephemeral port — read :attr:`MetricsServer.port` after ``start()``
+(what the tests and the bench smoke-scrape do).
+"""
+from __future__ import annotations
+
+import json
+import threading
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from typing import Callable
+
+from repro.telemetry import metrics
+
+PROMETHEUS_CONTENT_TYPE = "text/plain; version=0.0.4; charset=utf-8"
+
+
+class MetricsServer:
+    """Daemon HTTP listener serving the metrics registry.
+
+    Parameters
+    ----------
+    port:     TCP port to bind (``0`` = ephemeral; read ``.port``).
+    host:     bind address (default loopback — put a real proxy in
+              front before exposing this beyond the host).
+    stats_fn: optional zero-arg callable rendered as JSON under
+              ``/stats`` (the server passes its ``stats`` method).
+    """
+
+    def __init__(self, port: int = 0, host: str = "127.0.0.1",
+                 stats_fn: Callable[[], dict] | None = None):
+        self._host = host
+        self._want_port = int(port)
+        self._stats_fn = stats_fn
+        self._httpd: ThreadingHTTPServer | None = None
+        self._thread: threading.Thread | None = None
+
+    @property
+    def port(self) -> int | None:
+        """The bound port (resolves ``port=0``), ``None`` before start."""
+        return self._httpd.server_address[1] if self._httpd else None
+
+    @property
+    def url(self) -> str | None:
+        return None if self._httpd is None \
+            else f"http://{self._host}:{self.port}"
+
+    def start(self) -> "MetricsServer":
+        if self._httpd is not None:
+            return self
+        stats_fn = self._stats_fn
+
+        class _Handler(BaseHTTPRequestHandler):
+            def log_message(self, *args) -> None:        # quiet by design
+                pass
+
+            def do_GET(self) -> None:                    # noqa: N802
+                path = self.path.split("?", 1)[0]
+                if path == "/metrics":
+                    body = metrics.export_prometheus().encode()
+                    ctype = PROMETHEUS_CONTENT_TYPE
+                elif path == "/stats":
+                    try:
+                        payload = stats_fn() if stats_fn is not None else {}
+                    except Exception as e:       # stats must not 500 a scrape
+                        payload = {"error": str(e)}
+                    body = json.dumps(payload, default=str).encode()
+                    ctype = "application/json"
+                elif path == "/healthz":
+                    body, ctype = b"ok\n", "text/plain"
+                else:
+                    self.send_response(404)
+                    self.end_headers()
+                    return
+                self.send_response(200)
+                self.send_header("Content-Type", ctype)
+                self.send_header("Content-Length", str(len(body)))
+                self.end_headers()
+                self.wfile.write(body)
+
+        self._httpd = ThreadingHTTPServer((self._host, self._want_port),
+                                          _Handler)
+        self._httpd.daemon_threads = True
+        self._thread = threading.Thread(target=self._httpd.serve_forever,
+                                        name="repro-metrics-http",
+                                        daemon=True)
+        self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        if self._httpd is None:
+            return
+        self._httpd.shutdown()
+        self._httpd.server_close()
+        if self._thread is not None:
+            self._thread.join(timeout=2.0)
+        self._httpd = None
+        self._thread = None
+
+    def __enter__(self) -> "MetricsServer":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+
+__all__ = ["MetricsServer", "PROMETHEUS_CONTENT_TYPE"]

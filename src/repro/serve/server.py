@@ -36,6 +36,7 @@ from __future__ import annotations
 
 import asyncio
 import dataclasses
+import json
 import time
 from collections import OrderedDict
 from typing import Any
@@ -84,13 +85,23 @@ class SolveServer:
     factor_cache_size: LRU capacity of the repeated-A factor store.
     ladder:        shape-bucket rungs (default
                    ``core/blocking.bucket_ladder()``).
+    metrics_port:  when set, serve the live metrics registry over HTTP
+                   for the server's lifetime — ``/metrics`` (Prometheus
+                   text 0.0.4), ``/stats`` (this server's
+                   :meth:`stats` as JSON), ``/healthz``.  ``0`` binds
+                   an ephemeral port; read :attr:`metrics_server`.port.
+    request_log:   per-request structured logging — a callable invoked
+                   with one JSON-serializable dict per finished request
+                   (ts, method, n, latency_ms, converged, …), or a
+                   writable file-like that gets one JSON line each.
     """
 
     def __init__(self, *, max_batch: int = 8, max_delay_ms: float = 2.0,
                  max_pending: int = 1024,
                  cache: cache_mod.ExecutableCache | None = None,
                  factor_cache_size: int = 32, block_size: int = 128,
-                 ladder=None):
+                 ladder=None, metrics_port: int | None = None,
+                 request_log=None):
         if max_batch < 1:
             raise ValueError(f"max_batch={max_batch} must be >= 1")
         if max_delay_ms < 0:
@@ -105,6 +116,9 @@ class SolveServer:
         self._factors: OrderedDict[tuple, Any] = OrderedDict()
         self._factor_cap = factor_cache_size
         self._task: asyncio.Task | None = None
+        self._metrics_port = metrics_port
+        self.metrics_server = None        # live MetricsServer when bound
+        self._request_log = request_log
         # instance tallies (the metrics registry keeps process-wide ones)
         self.requests_served = 0
         self.factorizations = 0
@@ -115,10 +129,17 @@ class SolveServer:
     async def start(self) -> "SolveServer":
         if self._task is None:
             self._task = asyncio.get_running_loop().create_task(self._run())
+        if self._metrics_port is not None and self.metrics_server is None:
+            from repro.serve import metrics_http
+            self.metrics_server = metrics_http.MetricsServer(
+                port=self._metrics_port, stats_fn=self.stats).start()
         return self
 
     async def stop(self) -> None:
         """Drain the queue, flush every pending group, stop the batcher."""
+        if self.metrics_server is not None:
+            self.metrics_server.stop()
+            self.metrics_server = None
         if self._task is None:
             return
         await self._queue.put(_STOP)
@@ -376,11 +397,36 @@ class SolveServer:
 
     def _finish(self, r: _Request, result: SolveResult) -> None:
         self.requests_served += 1
+        latency_ms = (time.perf_counter() - r.t_submit) * 1e3
         metrics.counter_inc("serve_requests")
-        metrics.histogram_observe(
-            "serve_latency_ms", (time.perf_counter() - r.t_submit) * 1e3)
+        metrics.histogram_observe("serve_latency_ms", latency_ms)
+        if self._request_log is not None:
+            self._log_request(r, result, latency_ms)
         if not r.future.done():
             r.future.set_result(result)
+
+    def _log_request(self, r: _Request, result: SolveResult,
+                     latency_ms: float) -> None:
+        """One structured JSON record per finished request — to a
+        callable (gets the dict) or a writable (gets a JSON line).
+        Logging failures never fail the request."""
+        try:
+            rec = {"ts": round(time.time(), 6), "method": r.group.method,
+                   "backend": r.group.backend, "n": r.n,
+                   "bucket_n": r.group.n, "dtype": str(r.group.dtype),
+                   "latency_ms": round(latency_ms, 3)}
+            try:
+                rec["iterations"] = int(np.max(result.iterations))
+                rec["residual"] = float(np.max(result.residual))
+                rec["converged"] = bool(np.all(result.converged))
+            except Exception:
+                pass
+            if callable(self._request_log):
+                self._request_log(rec)
+            else:
+                self._request_log.write(json.dumps(rec) + "\n")
+        except Exception:
+            pass
 
 
 __all__ = ["SolveServer", "ServerOverloaded"]

@@ -1,7 +1,9 @@
 """Unified observability: spans (:mod:`.trace`), in-graph convergence
 histories (:mod:`.convergence`), per-site communication bytes
-(:mod:`.comm`), and a metrics registry with JSON/Prometheus export
-(:mod:`.metrics`).  One entry point::
+(:mod:`.comm`), a metrics registry with JSON/Prometheus export
+(:mod:`.metrics`), and the performance observatory (:mod:`.perf` —
+roofline-attributed solves, arm with ``session(..., perf=True)``).
+One entry point::
 
     from repro import telemetry
     with telemetry.session("profile") as sess:
@@ -13,9 +15,9 @@ Everything follows the zero-overhead-when-disarmed contract of
 ``resilience/inject.py``: with no session armed, no jaxpr changes by a
 single op and the host-side cost is one module-global check per tap.
 """
-from repro.telemetry import comm, convergence, metrics, trace
+from repro.telemetry import comm, convergence, metrics, perf, trace
 from repro.telemetry.trace import (Session, active, annotate, block,
                                    disabled, session, span)
 
-__all__ = ["comm", "convergence", "metrics", "trace", "Session", "session",
-           "span", "annotate", "active", "disabled", "block"]
+__all__ = ["comm", "convergence", "metrics", "perf", "trace", "Session",
+           "session", "span", "annotate", "active", "disabled", "block"]

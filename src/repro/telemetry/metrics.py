@@ -4,18 +4,27 @@ ROADMAP's solver-as-a-service item is gated on (p50/p99, requests/sec).
 
 Plain host-side Python: nothing here ever touches a jaxpr, so the
 registry is always-on and free until observed.  Benchmarks snapshot it
-into ``TELEM_*.json``; a service front-end would scrape
-:func:`export_prometheus`.
+into ``TELEM_*.json``; the serve ``/metrics`` endpoint
+(:mod:`repro.serve.metrics_http`) scrapes :func:`export_prometheus`.
+
+Thread-safe: the server mutates counters from its asyncio batcher
+thread while :class:`repro.serve.client.ServeClient` callers read
+``stats()``/exports from theirs, and the ``/metrics`` HTTP handler runs
+on its own thread pool — every mutation and export holds one module
+lock.  (:func:`get_histogram` hands back the live object for cheap
+quantile reads; treat it as read-only.)
 """
 from __future__ import annotations
 
 import bisect
 import json
 import math
+import threading
 
 _COUNTERS: dict[str, float] = {}
 _GAUGES: dict[str, float] = {}
 _HISTOGRAMS: dict[str, "Histogram"] = {}
+_LOCK = threading.RLock()
 
 # decade ladder 0.1ms .. 100s — wide enough for both a fused-kernel
 # dispatch and a cold n=4096 distributed factorization compile
@@ -59,44 +68,53 @@ class Histogram:
 
 
 def counter_inc(name: str, amount: float = 1.0) -> None:
-    _COUNTERS[name] = _COUNTERS.get(name, 0.0) + amount
+    with _LOCK:
+        _COUNTERS[name] = _COUNTERS.get(name, 0.0) + amount
 
 
 def gauge_set(name: str, value: float) -> None:
-    _GAUGES[name] = float(value)
+    with _LOCK:
+        _GAUGES[name] = float(value)
 
 
 def histogram_observe(name: str, value: float,
                       buckets=DEFAULT_BUCKETS) -> None:
-    h = _HISTOGRAMS.get(name)
-    if h is None:
-        h = _HISTOGRAMS[name] = Histogram(buckets)
-    h.observe(value)
+    with _LOCK:
+        h = _HISTOGRAMS.get(name)
+        if h is None:
+            h = _HISTOGRAMS[name] = Histogram(buckets)
+        h.observe(value)
 
 
 def get_counter(name: str) -> float:
-    return _COUNTERS.get(name, 0.0)
+    with _LOCK:
+        return _COUNTERS.get(name, 0.0)
 
 
 def get_gauge(name: str) -> float:
-    return _GAUGES.get(name, 0.0)
+    with _LOCK:
+        return _GAUGES.get(name, 0.0)
 
 
 def get_histogram(name: str) -> Histogram | None:
     """The live :class:`Histogram` (None if never observed) — the
     serving layer reads p50/p99 off it for its stats endpoint."""
-    return _HISTOGRAMS.get(name)
+    with _LOCK:
+        return _HISTOGRAMS.get(name)
 
 
 def reset() -> None:
-    _COUNTERS.clear()
-    _GAUGES.clear()
-    _HISTOGRAMS.clear()
+    with _LOCK:
+        _COUNTERS.clear()
+        _GAUGES.clear()
+        _HISTOGRAMS.clear()
 
 
 def export_json() -> dict:
-    return {"counters": dict(_COUNTERS), "gauges": dict(_GAUGES),
-            "histograms": {k: h.to_dict() for k, h in _HISTOGRAMS.items()}}
+    with _LOCK:
+        return {"counters": dict(_COUNTERS), "gauges": dict(_GAUGES),
+                "histograms": {k: h.to_dict()
+                               for k, h in _HISTOGRAMS.items()}}
 
 
 def export_prometheus() -> str:
@@ -106,21 +124,22 @@ def export_prometheus() -> str:
     def sanitize(name: str) -> str:
         return "".join(c if c.isalnum() or c == "_" else "_" for c in name)
 
-    for name, v in sorted(_COUNTERS.items()):
-        n = sanitize(name)
-        lines += [f"# TYPE {n} counter", f"{n} {v}"]
-    for name, v in sorted(_GAUGES.items()):
-        n = sanitize(name)
-        lines += [f"# TYPE {n} gauge", f"{n} {v}"]
-    for name, h in sorted(_HISTOGRAMS.items()):
-        n = sanitize(name)
-        lines.append(f"# TYPE {n} histogram")
-        cum = 0
-        for b, c in zip(h.buckets + (math.inf,), h.counts):
-            cum += c
-            le = "+Inf" if math.isinf(b) else repr(b)
-            lines.append(f'{n}_bucket{{le="{le}"}} {cum}')
-        lines += [f"{n}_sum {h.sum}", f"{n}_count {h.n}"]
+    with _LOCK:
+        for name, v in sorted(_COUNTERS.items()):
+            n = sanitize(name)
+            lines += [f"# TYPE {n} counter", f"{n} {v}"]
+        for name, v in sorted(_GAUGES.items()):
+            n = sanitize(name)
+            lines += [f"# TYPE {n} gauge", f"{n} {v}"]
+        for name, h in sorted(_HISTOGRAMS.items()):
+            n = sanitize(name)
+            lines.append(f"# TYPE {n} histogram")
+            cum = 0
+            for b, c in zip(h.buckets + (math.inf,), h.counts):
+                cum += c
+                le = "+Inf" if math.isinf(b) else repr(b)
+                lines.append(f'{n}_bucket{{le="{le}"}} {cum}')
+            lines += [f"{n}_sum {h.sum}", f"{n}_count {h.n}"]
     return "\n".join(lines) + "\n"
 
 

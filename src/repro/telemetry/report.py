@@ -4,11 +4,16 @@
 
 Prints, per session: the span table (count / total / compile ms), the
 per-site communication-volume table (per rank, trace-time bytes — the
-distributed-LU panel broadcast is the top row at scale), and the
+distributed-LU panel broadcast is the top row at scale), the
 convergence summary of every recorded solve (iterations, iters_to_tol,
-final residual).  Reads the JSON written by
-:meth:`repro.telemetry.trace.Session.save` (what ``benchmarks/run.py
---json-dir`` emits next to each ``BENCH_*.json``).
+final residual), and — for sessions recorded with ``perf=True`` — the
+machine profile, the roofline-attribution table (achieved GFLOP/s and
+GB/s, efficiency % against detected peaks, bottleneck term,
+compile-seconds), the memory table, the per-rank imbalance table, and
+the modeled-vs-measured comm-bytes cross-check.  Reads the JSON
+written by :meth:`repro.telemetry.trace.Session.save` (what
+``benchmarks/run.py --json-dir`` emits next to each ``BENCH_*.json``)
+— any schema generation: sections a file lacks are simply skipped.
 """
 from __future__ import annotations
 
@@ -25,6 +30,85 @@ def _fmt(v, width: int = 10) -> str:
     return f"{str(v):>{width}}"
 
 
+def _render_perf(solves: list, data: dict, out: list) -> None:
+    """The perf=True sections — machine profile, roofline attribution,
+    memory, imbalance, comm cross-check.  Tolerates partial records
+    (solves without a ``perf`` sub-record are simply not rows)."""
+    machine = data.get("machine")
+    if machine:
+        out.append("")
+        out.append(f"-- machine: {machine.get('name', '?')} "
+                   f"({machine.get('platform', '?')}, "
+                   f"{machine.get('source', '?')}) --")
+        out.append(f"peak {machine.get('peak_flops', 0) / 1e9:.1f} GFLOP/s"
+                   f"   hbm {machine.get('hbm_bw', 0) / 1e9:.1f} GB/s"
+                   f"   link {machine.get('link_bw', 0) / 1e9:.1f} GB/s")
+    perf_rows = [(r, r["perf"]) for r in solves
+                 if isinstance(r.get("perf"), dict)]
+    if not perf_rows:
+        return
+    out.append("")
+    out.append("-- roofline attribution (modeled work / measured time) --")
+    w = max([len(r.get("key", "?")) for r, _ in perf_rows] + [4])
+    out.append(f"{'key':<{w}}  {'t_ms':>8}  {'GFLOP/s':>8}  {'GB/s':>7}  "
+               f"{'eff%':>7}  {'bneck':>10}  {'compile_s':>9}")
+    for r, p in perf_rows:
+        roof = p.get("roofline") or {}
+        out.append(
+            f"{r.get('key', '?'):<{w}}  "
+            f"{_fmt(float(p.get('t_execute_ms', 0.0)), 8)}  "
+            f"{_fmt(float(p.get('achieved_gflops', 0.0)), 8)}  "
+            f"{_fmt(float(p.get('achieved_hbm_gbs', 0.0)), 7)}  "
+            f"{_fmt(float(roof.get('efficiency_pct', float('nan'))), 7)}  "
+            f"{str(roof.get('bottleneck', '?')):>10}  "
+            f"{_fmt(float(p.get('compile_s', 0.0)), 9)}")
+    mem_rows = [(r, p["memory"]) for r, p in perf_rows
+                if isinstance(p.get("memory"), dict)]
+    if mem_rows:
+        out.append("")
+        out.append("-- executable memory (per compile) --")
+        seen = set()
+        out.append(f"{'key':<{w}}  {'args':>10}  {'output':>10}  "
+                   f"{'temp':>10}  {'peak':>10}")
+        for r, m in mem_rows:
+            key = r.get("key", "?")
+            if key in seen:             # one row per executable, not solve
+                continue
+            seen.add(key)
+            out.append(f"{key:<{w}}  "
+                       f"{format_bytes(m.get('argument_bytes', 0)):>10}  "
+                       f"{format_bytes(m.get('output_bytes', 0)):>10}  "
+                       f"{format_bytes(m.get('temp_bytes', 0)):>10}  "
+                       f"{format_bytes(m.get('peak_bytes', 0)):>10}")
+    rank_rows = [(r, p["ranks"]) for r, p in perf_rows
+                 if isinstance(p.get("ranks"), dict)]
+    if rank_rows:
+        out.append("")
+        out.append("-- per-rank load imbalance --")
+        out.append(f"{'key':<{w}}  {'ranks':>5}  {'straggler':>9}  "
+                   f"{'imbal%':>7}  {'wait_ms':>8}")
+        for r, k in rank_rows:
+            wait = k.get("rank_wait_ms")
+            out.append(f"{r.get('key', '?'):<{w}}  "
+                       f"{k.get('n_ranks', '?'):>5}  "
+                       f"{_fmt(float(k.get('straggler_ratio', 1.0)), 9)}  "
+                       f"{_fmt(float(k.get('imbalance_pct', 0.0)), 7)}  "
+                       f"{_fmt(float(wait), 8) if wait is not None else '       -'}")
+    comm_rows = [(r, p["comm"]) for r, p in perf_rows
+                 if isinstance(p.get("comm"), dict)]
+    if comm_rows:
+        out.append("")
+        out.append("-- comm bytes: model vs measured (trace-time) --")
+        out.append(f"{'key':<{w}}  {'modeled':>10}  {'measured':>10}  "
+                   f"{'model/meas':>10}")
+        for r, c in comm_rows:
+            ratio = c.get("model_over_measured")
+            out.append(f"{r.get('key', '?'):<{w}}  "
+                       f"{format_bytes(c.get('modeled_bytes', 0)):>10}  "
+                       f"{format_bytes(c.get('measured_bytes', 0)):>10}  "
+                       f"{_fmt(float(ratio), 10) if ratio else '         -'}")
+
+
 def render(data: dict) -> str:
     """Session dict (``Session.to_dict()`` / a loaded TELEM json) → text."""
     out: list[str] = []
@@ -36,27 +120,27 @@ def render(data: dict) -> str:
     if spans:
         out.append("")
         out.append("-- spans --")
-        w = max([len(r["span"]) for r in spans] + [4])
+        w = max([len(r.get("span", "?")) for r in spans] + [4])
         out.append(f"{'span':<{w}}  {'count':>5}  {'total_ms':>10}  "
                    f"{'compile_ms':>10}")
         for r in spans:
-            out.append(f"{r['span']:<{w}}  {r['count']:>5}  "
-                       f"{_fmt(float(r['total_ms']))}  "
+            out.append(f"{r.get('span', '?'):<{w}}  {r.get('count', 0):>5}  "
+                       f"{_fmt(float(r.get('total_ms', 0.0)))}  "
                        f"{_fmt(float(r.get('compile_ms', 0.0)))}")
 
     comm = data.get("comm") or []
     if comm:
         out.append("")
         out.append("-- communication volume (per rank, trace-time) --")
-        w = max([len(r["site"]) for r in comm] + [4])
+        w = max([len(r.get("site", "?")) for r in comm] + [4])
         out.append(f"{'site':<{w}}  {'kind':>10}  {'calls':>5}  "
                    f"{'payload':>10}  {'x iters':>7}  {'total':>10}")
         for r in comm:
-            out.append(f"{r['site']:<{w}}  {r['kind']:>10}  "
-                       f"{r['calls']:>5}  "
-                       f"{format_bytes(r['payload_bytes']):>10}  "
+            out.append(f"{r.get('site', '?'):<{w}}  {r.get('kind', '?'):>10}  "
+                       f"{r.get('calls', 0):>5}  "
+                       f"{format_bytes(r.get('payload_bytes', 0)):>10}  "
                        f"{r.get('iters', 1):>7}  "
-                       f"{format_bytes(r['total_bytes']):>10}")
+                       f"{format_bytes(r.get('total_bytes', 0)):>10}")
 
     solves = data.get("solves") or []
     if solves:
@@ -75,13 +159,24 @@ def render(data: dict) -> str:
                 f"{r.get('iters_to_tol', '?'):>12} {res_s} "
                 f"{str(r.get('converged', '?')):>5}")
 
+    _render_perf(solves, data, out)
+
+    perf_summary = data.get("perf")
+    if isinstance(perf_summary, dict):
+        out.append("")
+        out.append(f"-- observatory: {perf_summary.get('executables', 0)} "
+                   f"executables, {perf_summary.get('hlo_analyses', 0)} HLO "
+                   f"analyses, {perf_summary.get('compile_s_total', 0.0)} s "
+                   "compiling --")
+
     hists = data.get("metrics", {}).get("histograms", {})
     if hists:
         out.append("")
         out.append("-- latency histograms (ms) --")
         for k in sorted(hists):
             h = hists[k]
-            out.append(f"{k}: n={h['count']} sum={h['sum']:.1f} "
+            out.append(f"{k}: n={h.get('count', 0)} "
+                       f"sum={h.get('sum', 0.0):.1f} "
                        f"p50={h.get('p50', float('nan')):.2f} "
                        f"p99={h.get('p99', float('nan')):.2f}")
     return "\n".join(out)

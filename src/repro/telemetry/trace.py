@@ -79,6 +79,7 @@ class Session:
         self._stack: list[Span] = [self.root]
         self.solves: list[dict] = []
         self.comm: comm_mod.CommProfile | None = None
+        self.perf = None     # PerfObservatory when session(perf=True)
 
     # -- span plumbing -----------------------------------------------------
     def _open(self, name: str, attrs: dict) -> Span:
@@ -126,14 +127,18 @@ class Session:
         return sorted(rows.values(), key=lambda r: -r["total_ms"])
 
     def to_dict(self) -> dict:
-        return {"section": self.name,
-                "t_total_ms": self.root.dur * 1e3,
-                "spans": self.span_table(),
-                "span_tree": [c.to_dict(self.root.t0)
-                              for c in self.root.children],
-                "comm": self.comm.table() if self.comm is not None else [],
-                "solves": list(self.solves),
-                "metrics": metrics_mod.export_json()}
+        d = {"section": self.name,
+             "t_total_ms": self.root.dur * 1e3,
+             "spans": self.span_table(),
+             "span_tree": [c.to_dict(self.root.t0)
+                           for c in self.root.children],
+             "comm": self.comm.table() if self.comm is not None else [],
+             "solves": list(self.solves),
+             "metrics": metrics_mod.export_json()}
+        if self.perf is not None:
+            d["machine"] = self.perf.machine.to_dict()
+            d["perf"] = self.perf.summary()
+        return d
 
     def save(self, path: str) -> None:
         with open(path, "w") as f:
@@ -190,16 +195,22 @@ def _ensure_listener() -> None:
 @contextlib.contextmanager
 def session(name: str = "telemetry", *, histlen: int = 64,
             convergence: bool = True, comm: bool = True,
-            profiler_dir: str | None = None):
+            perf: bool = False, profiler_dir: str | None = None):
     """Arm the full telemetry stack for the block: span recording,
     in-graph convergence histories (``histlen`` ring slots), per-site
-    communication bytes, and optionally a ``jax.profiler.trace`` device
-    timeline under ``profiler_dir``.  Yields the :class:`Session`;
-    sessions nest (the inner one records until it closes)."""
+    communication bytes, optionally the performance observatory
+    (``perf=True`` — roofline-attributed solve records, see
+    :mod:`repro.telemetry.perf`), and optionally a
+    ``jax.profiler.trace`` device timeline under ``profiler_dir``.
+    Yields the :class:`Session`; sessions nest (the inner one records
+    until it closes)."""
     global _SESSION
     _ensure_listener()
     prev = _SESSION
     s = Session(name)
+    if perf:
+        from repro.telemetry import perf as perf_mod
+        s.perf = perf_mod.PerfObservatory()
     with contextlib.ExitStack() as stack:
         if convergence:
             stack.enter_context(conv_mod.capture(histlen))

@@ -103,3 +103,101 @@ def test_dus_not_overcounted():
     per_iter = 2 * n * n * 4
     assert cost.traffic_bytes < 4 * t * per_iter, \
         (cost.traffic_bytes, t * per_iter)
+
+
+# --------------------------------------------------------------------------
+# the library's own solver executables — the artifacts the performance
+# observatory analyzes, gated against the analytic FLOP formulas
+# --------------------------------------------------------------------------
+
+_N = 128
+
+
+def _solver_system(spd: bool):
+    rng = np.random.default_rng(0)
+    a = rng.standard_normal((_N, _N)).astype(np.float32)
+    if spd:
+        a = (a @ a.T / _N + 4 * np.eye(_N)).astype(np.float32)
+    else:
+        a = (a + _N * np.eye(_N)).astype(np.float32)
+    b = rng.standard_normal(_N).astype(np.float32)
+    return jnp.asarray(a), jnp.asarray(b)
+
+
+def test_cg_executable_flops_match_matvec_model():
+    """CG's dominant work is one matvec (2n² FLOPs) per iteration; the
+    while-trip model charges ``maxiter`` iterations, so the parsed FLOPs
+    of the compiled solve must land on maxiter·2n² within the
+    elementwise slop (dot products, axpys ~ O(n) per iteration)."""
+    from repro.core import api
+    a, b = _solver_system(spd=True)
+    maxiter = 50
+    cost = _cost_of(lambda A, B: api.solve(
+        A, B, method="cg", tol=0.0, maxiter=maxiter, validate=False), a, b)
+    expect = maxiter * 2 * _N * _N
+    assert 0.9 * expect < cost.flops < 1.5 * expect, (cost.flops, expect)
+
+
+def test_cg_data_dependent_while_falls_back_to_maxiter():
+    """A real-tolerance CG traces a data-dependent ``while_loop`` whose
+    comparison constant XLA fuses *inside* the condition computation —
+    the parser must recurse through the fusion to find ``maxiter``
+    instead of defaulting to trip 1.  Doubling maxiter must ~double the
+    modeled FLOPs."""
+    from repro.core import api
+
+    def solve(mi):
+        a, b = _solver_system(spd=True)
+        return _cost_of(lambda A, B, m=mi: api.solve(
+            A, B, method="cg", tol=1e-6, maxiter=m, validate=False), a, b)
+
+    c25, c100 = solve(25), solve(100)
+    expect25 = 25 * 2 * _N * _N
+    assert 0.9 * expect25 < c25.flops < 1.5 * expect25, c25.flops
+    ratio = c100.flops / c25.flops
+    assert 3.2 < ratio < 4.8, ratio          # 4x maxiter ≈ 4x modeled work
+
+
+def test_ca_cg_executable_flops_bounded():
+    """s-step CG does s matvecs per outer iteration plus the Gram-matrix
+    work; with the while-trip fallback charging maxiter outer trips the
+    model over-counts by ≤ ~s·(1 + Gram overhead) — bounded, not
+    unbounded."""
+    from repro.core import api
+    a, b = _solver_system(spd=True)
+    maxiter, s = 50, 2
+    cost = _cost_of(lambda A, B: api.solve(
+        A, B, method="ca_cg", tol=0.0, maxiter=maxiter, s=s,
+        validate=False), a, b)
+    base = maxiter * 2 * _N * _N
+    assert base < cost.flops < 3 * s * base, (cost.flops, base)
+
+
+def test_blocked_lu_executable_flops_bounded():
+    """Blocked LU's analytic count is 2/3·n³.  The fori_loop body is
+    shape-invariant (full-width masked updates), so the while-trip model
+    charges every block step the full trailing-update cost — a known,
+    bounded over-count (≈3x from the update + panel terms), never an
+    under-count."""
+    from repro.core import api
+    a, b = _solver_system(spd=False)
+    cost = _cost_of(lambda A, B: api.solve(
+        A, B, method="lu", block_size=32, validate=False), a, b)
+    analytic = 2 / 3 * _N ** 3
+    assert analytic <= cost.flops < 12 * analytic, (cost.flops, analytic)
+
+
+def test_blocked_lu_spmd_executable_flops_and_collectives(mesh1):
+    """The distributed blocked LU through engine='spmd' (1-device mesh:
+    same program structure, pivot all-reduces included) must stay in the
+    same masked-loop FLOP band and must surface its collectives to the
+    model — the roofline's t_collective term reads these payloads."""
+    from repro.core import api
+    a, b = _solver_system(spd=False)
+    cost = _cost_of(lambda A, B: api.solve(
+        A, B, method="lu", engine="spmd", mesh=mesh1, block_size=32,
+        validate=False), a, b)
+    analytic = 2 / 3 * _N ** 3
+    assert analytic <= cost.flops < 15 * analytic, (cost.flops, analytic)
+    assert cost.collective_bytes.get("all-reduce", 0) > 0, \
+        dict(cost.collective_bytes)
